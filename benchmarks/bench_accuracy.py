@@ -1,0 +1,126 @@
+"""Paper Table 3 — accuracy under OmniAttn KV compression.
+
+CPU-scale reproduction: train a small LM on synthetic data with BOTH local
+(bigram) and long-range (copy at distance 64 > sink+recent window) structure,
+then measure retrieval accuracy with (a) full KV, (b) everything compressed,
+(c) the GA-searched layer pattern. The GA must discover that keeping SOME
+layers uncompressed preserves retrieval (the paper's layer-wise thesis) while
+still cutting KV bytes — plus eq. 5 attention-fidelity metrics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.omniattn import GAConfig, PatternSearch, attention_fidelity
+from repro.models import LM
+from repro.training.data import DataConfig, make_batch, synth_tokens
+from repro.training.optim import adamw_init
+from repro.training.trainer import make_train_step
+
+
+def train_small_lm(steps: int = 150, seed: int = 0):
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        n_layers=4, omniattn=reduced_config("qwen2-1.5b").omniattn)
+    from dataclasses import replace
+    cfg = replace(cfg, omniattn=replace(cfg.omniattn, sink_tokens=4,
+                                        recent_tokens=24))
+    mesh = __import__("repro.distributed.ctx", fromlist=["local_mesh_ctx"]) \
+        .local_mesh_ctx()
+    lm = LM.build(cfg, mesh, pattern=[0] * cfg.n_layers)
+    base_plan = lm.plan
+    params = lm.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params, cfg.optimizer_dtype)
+    step = jax.jit(make_train_step(lm, lr=2e-3))
+    dcfg = DataConfig(cfg.vocab_size, 96, 8, seed=seed, copy_dist=64,
+                      copy_prob=0.35)
+    for i in range(steps):
+        params, opt, m = step(params, opt, make_batch(cfg, dcfg, i), None)
+    return cfg, mesh, params, dcfg, float(m["loss"]), base_plan
+
+
+def eval_accuracy(cfg, mesh, params, dcfg, pattern, n_eval: int = 4,
+                  base_plan=None) -> float:
+    """Decode-path next-token accuracy at positions past the window: prefill
+    S tokens through the (possibly compressed) cache, predict token S."""
+    from repro.models.stack import regroup_params
+    lm = LM.build(cfg, mesh, pattern=list(pattern))
+    if base_plan is not None and base_plan != lm.plan:
+        params = dict(params, stack=regroup_params(params["stack"], base_plan,
+                                                   lm.plan))
+    d = 64
+    correct = total = 0
+    for i in range(n_eval):
+        toks = np.asarray(synth_tokens(
+            DataConfig(cfg.vocab_size, 96, 4, seed=1000 + i, copy_dist=d,
+                       copy_prob=0.35), 0))
+        # force the final prediction to be a long-range copy: marker token,
+        # then the DECODE step must retrieve t[i-d] through the (possibly
+        # compressed) cache — the path OmniAttn actually changes.
+        S = toks.shape[1] - 1            # prefill length
+        # marker decodes at position S → the prediction is position S+1,
+        # whose copy source is position S+1-d
+        target = toks[np.arange(toks.shape[0]), S + 1 - d].copy()
+        ctx = jnp.asarray(toks[:, :S])
+        cache, _, _ = lm.prefill(params, {"tokens": ctx}, max_len=S + 4)
+        marker = jnp.zeros((toks.shape[0], 1), jnp.int32)
+        _, logits, _ = lm.decode(params, cache, marker, jnp.int32(S))
+        pred = jnp.argmax(logits, -1)
+        correct += int((pred == jnp.asarray(target)).sum())
+        total += int(target.shape[0])
+    return correct / max(total, 1)
+
+
+def run(steps: int = 400):
+    cfg, mesh, params, dcfg, loss, base_plan = train_small_lm(steps)
+    base = eval_accuracy(cfg, mesh, params, dcfg, [0] * cfg.n_layers,
+                         base_plan=base_plan)
+    default_pat = cfg.default_compression_pattern()
+    comp = eval_accuracy(cfg, mesh, params, dcfg, default_pat,
+                         base_plan=base_plan)
+    all_comp = eval_accuracy(cfg, mesh, params, dcfg, [1] * cfg.n_layers,
+                             base_plan=base_plan)
+
+    search = PatternSearch(
+        cfg, lambda p: eval_accuracy(cfg, mesh, params, dcfg, p,
+                                     base_plan=base_plan),
+        GAConfig(population=8, generations=6, accuracy_tau=0.97, seed=0),
+        seq_len=96)
+    ga = search.run()
+
+    # eq.5 attention fidelity on the trained model's scale-free proxy
+    rng = jax.random.PRNGKey(0)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    M, d = 256, 32
+    k = jax.random.normal(r2, (M, d)) * 0.05   # sink-concentrated attention
+    k = k.at[:4].add(2.0)
+    k = k.at[-24:].add(1.0)
+    v = jax.random.normal(r3, (M, d))
+    q = jax.random.normal(r1, (8, d)) + k[:4].mean(0) * 0.5
+    fid = attention_fidelity(q, k, v, cfg.omniattn.sink_tokens,
+                             cfg.omniattn.recent_tokens)
+
+    return {
+        "train_loss": round(loss, 3),
+        "acc_full_kv": round(base, 4),
+        "acc_default_pattern": round(comp, 4),
+        "acc_all_compressed": round(all_comp, 4),
+        "acc_ga_pattern": round(ga["accuracy"], 4),
+        "ga_kv_gain": round(ga["kv_gain"], 3),
+        "ga_feasible": ga["feasible"],
+        "fidelity_rel_err": round(fid["rel_err"], 4),
+        "fidelity_attn_mass": round(fid["attn_mass"], 4),
+    }
+
+
+def main():
+    r = run()
+    print("metric,value")
+    for k, v in r.items():
+        print(f"{k},{v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — correctness-grade
+timing only) vs the jnp reference path, plus the chunked-attention XLA path.
+On TPU the same harness times the compiled kernels."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(f, *args, n=3):
+    f(*args)                                   # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    r = jax.random.split(rng, 8)
+
+    B, S, H, K, h = 1, 1024, 8, 2, 64
+    q = jax.random.normal(r[0], (B, S, H, h), jnp.float32)
+    k = jax.random.normal(r[1], (B, S, K, h), jnp.float32)
+    v = jax.random.normal(r[2], (B, S, K, h), jnp.float32)
+    qf = jnp.repeat(q, 1, 2).transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    kf = jnp.repeat(k, H // K, 2).transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    vf = jnp.repeat(v, H // K, 2).transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    rows.append(("flash_prefill_ref_jnp_1k",
+                 _time(jax.jit(lambda a, b, c: ref.flash_prefill_ref(a, b, c)),
+                       qf, kf, vf), "dense softmax"))
+    rows.append(("flash_prefill_pallas_interp_1k",
+                 _time(lambda a, b, c: ops.attention_prefill_op(a, b, c),
+                       q, k, v, n=1), "interpret-mode (correctness timing)"))
+
+    W, G = 4224, 4
+    qd = jax.random.normal(r[3], (4, K, G, h), jnp.float32)
+    kc = jax.random.normal(r[4], (4, K, W, h), jnp.float32)
+    vc = jax.random.normal(r[5], (4, K, W, h), jnp.float32)
+    t = jnp.full((4,), W, jnp.int32)
+    rows.append(("sink_decode_ref_jnp_w4224",
+                 _time(jax.jit(ref.sink_decode_ref), qd, kc, vc, t),
+                 "compressed-cache decode"))
+
+    s_, C, D, F = 8, 512, 256, 512
+    x = jax.random.normal(r[6], (s_, C, D), jnp.float32)
+    w = jax.random.normal(r[7], (s_, D, F), jnp.float32)
+    nv = jnp.full((s_,), C, jnp.int32)
+    rows.append(("moe_gmm_ref_jnp",
+                 _time(jax.jit(ref.moe_gmm_ref), x, w, nv), "slot bmm"))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

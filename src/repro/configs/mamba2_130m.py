@@ -1,0 +1,16 @@
+"""mamba2-130m — attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,               # mamba block subsumes the FFN (no separate MLP)
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, conv_width=4, chunk=256),
+    tie_embeddings=True,
+)

@@ -1,0 +1,6 @@
+"""OmniInfer core: the paper's three contributions.
+
+  placement/ — OmniPlacement: load-aware MoE expert placement (Alg. 1 & 2)
+  omniattn/  — OmniAttn: sink+recent KV compression + GA pattern search
+  proxy/     — OmniProxy: disaggregation-aware global scheduling (OAS)
+"""

@@ -1,0 +1,36 @@
+"""Attention-output fidelity under sink+recent compression (paper eq. 5-6).
+
+Measures || softmax(QK_M^T/√d) V_M  −  softmax(QK^T/√d) V || for the token
+subset M = sinks ∪ recents — the quantity OmniAttn's approximation bounds.
+Used by bench_accuracy.py (Table 3 proxy) and hypothesis tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sink_recent_indices(M: int, n_sink: int, n_recent: int) -> np.ndarray:
+    """Token index subset per eq. 6: first n_sink + last n_recent of M."""
+    n_sink = min(n_sink, M)
+    n_recent = min(n_recent, M - n_sink)
+    return np.concatenate([np.arange(n_sink), np.arange(M - n_recent, M)])
+
+
+def attention_fidelity(q, k, v, n_sink: int, n_recent: int):
+    """q [Nq, d]; k, v [M, d]. Returns dict with relative L2 error and the
+    total attention mass captured by the selected subset."""
+    M, d = k.shape
+    idx = sink_recent_indices(M, n_sink, n_recent)
+    scale = d ** -0.5
+    s_full = (q @ k.T) * scale
+    p_full = jax.nn.softmax(s_full, axis=-1)
+    out_full = p_full @ v
+    s_sub = (q @ k[idx].T) * scale
+    p_sub = jax.nn.softmax(s_sub, axis=-1)
+    out_sub = p_sub @ v[idx]
+    rel = jnp.linalg.norm(out_sub - out_full) / jnp.maximum(
+        jnp.linalg.norm(out_full), 1e-9)
+    mass = p_full[:, idx].sum(-1).mean()
+    return {"rel_err": float(rel), "attn_mass": float(mass)}

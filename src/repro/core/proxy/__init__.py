@@ -1,0 +1,7 @@
+from repro.core.proxy.radix import RadixTree
+from repro.core.proxy.lifecycle import Phase, Request
+from repro.core.proxy.oas import InstanceStats, OASConfig, OmniProxy
+from repro.core.proxy.metrics import MetricsAggregator
+
+__all__ = ["RadixTree", "Phase", "Request", "InstanceStats", "OASConfig",
+           "OmniProxy", "MetricsAggregator"]

@@ -1,0 +1,41 @@
+"""Serving metrics aggregation — the columns of paper Table 2:
+TTFT / p99 TTFT / TPOT / p99 TPOT / QPM / E2E / p99 E2E / OTT / TTT."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.proxy.lifecycle import Request
+
+
+@dataclass
+class MetricsAggregator:
+    done: list = field(default_factory=list)
+
+    def add(self, req: Request):
+        if req.finish_time is not None:
+            self.done.append(req)
+
+    def summary(self, wall_time: float) -> dict:
+        if not self.done:
+            return {"qpm": 0.0}
+        ttft = np.array([r.ttft() for r in self.done if r.ttft() is not None])
+        tpot = np.array([r.tpot() for r in self.done if r.tpot() is not None])
+        e2e = np.array([r.e2e() for r in self.done])
+        out_toks = sum(len(r.output_tokens) for r in self.done)
+        tot_toks = out_toks + sum(r.prompt_len for r in self.done)
+        wall = max(wall_time, 1e-9)
+        pct = lambda a, p: float(np.percentile(a, p)) if len(a) else float("nan")
+        return {
+            "n_done": len(self.done),
+            "qpm": 60.0 * len(self.done) / wall,
+            "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
+            "ttft_p99": pct(ttft, 99),
+            "tpot_mean_ms": 1e3 * float(tpot.mean()) if len(tpot) else float("nan"),
+            "tpot_p99_ms": 1e3 * pct(tpot, 99),
+            "e2e_mean": float(e2e.mean()),
+            "e2e_p99": pct(e2e, 99),
+            "ott_tok_s": out_toks / wall,
+            "ttt_tok_s": tot_toks / wall,
+        }

@@ -1,0 +1,3 @@
+from repro.distributed.ctx import MeshCtx, local_mesh_ctx
+
+__all__ = ["MeshCtx", "local_mesh_ctx"]

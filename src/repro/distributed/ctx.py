@@ -1,0 +1,110 @@
+"""Mesh context: axis naming, PartitionSpec helpers, sharding constraints.
+
+Axis convention (see DESIGN.md):
+  pod   — inter-pod data parallelism (multi-pod mesh only)
+  data  — intra-pod data parallelism; ALSO the expert-parallel (EP) axis
+  model — tensor parallelism (heads / d_ff / vocab / expert-FFN width)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshCtx:
+    mesh: Mesh
+
+    # ------------------------------------------------------------------
+    @cached_property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @cached_property
+    def has_pod(self) -> bool:
+        return "pod" in self.axis_names
+
+    @cached_property
+    def batch_axes(self) -> tuple[str, ...]:
+        return ("pod", "data") if self.has_pod else ("data",)
+
+    def size(self, name: str) -> int:
+        return self.mesh.shape[name] if name in self.axis_names else 1
+
+    @cached_property
+    def dp(self) -> int:
+        return int(np.prod([self.size(a) for a in self.batch_axes]))
+
+    @cached_property
+    def ep(self) -> int:          # expert-parallel ranks (data axis)
+        return self.size("data")
+
+    @cached_property
+    def tp(self) -> int:
+        return self.size("model")
+
+    @cached_property
+    def n_devices(self) -> int:
+        return int(np.prod(list(self.mesh.shape.values())))
+
+    # ------------------------------------------------------------------
+    def spec(self, *parts: Any) -> P:
+        return P(*parts)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def batch_part(self, dim_size: int):
+        """Mesh axes to shard a batch-like dim over; None if not divisible."""
+        axes = []
+        rem = dim_size
+        for a in self.batch_axes:
+            if rem % self.size(a) == 0:
+                axes.append(a)
+                rem //= self.size(a)
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def model_part(self, dim_size: int, allow_pad: bool = True):
+        """'model' if the dim can shard over TP (padding allowed)."""
+        if self.tp == 1:
+            return None
+        if dim_size % self.tp == 0 or (allow_pad and dim_size > 1):
+            return "model"
+        return None
+
+    def part_if(self, name, dim_size: int):
+        """Axis name(s) if dim_size divides evenly, else None (pjit inputs
+        require exact divisibility, unlike internal sharding constraints)."""
+        if name is None:
+            return None
+        names = (name,) if isinstance(name, str) else tuple(name)
+        total = 1
+        for n in names:
+            total *= self.size(n)
+        return name if total > 0 and dim_size % total == 0 else None
+
+    def sanitize_spec(self, spec: P, shape: tuple) -> P:
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        return P(*(self.part_if(p, d) for p, d in zip(parts, shape)))
+
+    def constrain(self, x, spec: P):
+        if self.n_devices == 1:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.sharding(spec))
+
+    def tree_shardings(self, spec_tree):
+        return jax.tree.map(self.sharding, spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+
+def local_mesh_ctx(axes: Sequence[str] = ("data", "model")) -> MeshCtx:
+    """1-device mesh for smoke tests / single-host runs."""
+    shape = tuple(1 for _ in axes)
+    return MeshCtx(jax.make_mesh(shape, tuple(axes)))

@@ -1,0 +1,103 @@
+"""Flash-attention prefill kernel (TPU Pallas) with sink+window sparse masks.
+
+TPU adaptation of the OmniAttn prefill path: blockwise online-softmax
+attention tiled for VMEM (q blocks × kv blocks in the grid, fp32 accumulators
+in VMEM scratch), with the sink+sliding-window mask fused into the score
+block — the compute-side realization of eq. 6's token subset M.
+
+Layouts: q/k/v/o are [BH, S, h] (batch×head flattened; GQA callers repeat KV
+heads — see ops.py). Grid: (BH, n_q_blocks, n_kv_blocks); the kv dimension is
+'arbitrary' (sequential) so scratch accumulates across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, sink: int,
+            block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        in_win = (q_pos - k_pos) < window
+        if sink > 0:
+            in_win |= k_pos < sink
+        mask &= in_win
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    v = v_ref[...].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+
+    @pl.when(ki == n_kv - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "sink",
+                                             "block_q", "block_k", "interpret"))
+def flash_prefill(q, k, v, *, causal: bool = True, window: int = 0,
+                  sink: int = 0, block_q: int = 512, block_k: int = 512,
+                  interpret: bool = False):
+    """q/k/v: [BH, S, h] → o [BH, S, h]."""
+    BH, S, h = q.shape
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    while S % block_q:
+        block_q //= 2
+    while S % block_k:
+        block_k //= 2
+    n_q, n_kv = S // block_q, S // block_k
+    scale = h ** -0.5
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, sink=sink, block_q=block_q,
+                               block_k=block_k, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, h), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, h), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, h), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, h), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, h), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,78 @@
+"""Slot-batched grouped matmul (TPU Pallas) — the MoE expert-FFN hot op.
+
+After OmniPlacement dispatch, each device holds its slot buffer
+x [s, C, D] and slot weights w [s, D, F] (see models/moe.py); the expert
+compute is a batched matmul with per-slot row validity n_valid [s] (tokens
+beyond a slot's fill count are capacity padding and must not pollute the MXU
+accumulation — they're masked at load).
+
+Grid: (s, C/block_c, F/block_f, D/block_d) with the D dimension sequential
+(accumulated in VMEM scratch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(nv_ref, x_ref, w_ref, o_ref, acc_ref, *, block_c: int,
+            block_d: int, n_d: int):
+    s = pl.program_id(0)
+    ci = pl.program_id(1)
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)              # [block_c, block_d]
+    row = ci * block_c + jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    x = jnp.where(row < nv_ref[s], x, 0.0)
+    w = w_ref[...].astype(jnp.float32)              # [block_d, block_f]
+    acc_ref[...] += jax.lax.dot(x, w)
+
+    @pl.when(di == n_d - 1)
+    def _final():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x, w, n_valid, *, block_c: int = 256, block_f: int = 256,
+            block_d: int = 256, interpret: bool = False):
+    """x [s, C, D] @ w [s, D, F] with per-slot valid-row masks → [s, C, F]."""
+    S, C, D = x.shape
+    F = w.shape[2]
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    while C % block_c:
+        block_c //= 2
+    while F % block_f:
+        block_f //= 2
+    while D % block_d:
+        block_d //= 2
+    n_d = D // block_d
+    kernel = functools.partial(_kernel, block_c=block_c, block_d=block_d,
+                               n_d=n_d)
+    return pl.pallas_call(
+        kernel,
+        grid=(S, C // block_c, F // block_f, n_d),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # n_valid
+            pl.BlockSpec((None, block_c, block_d), lambda s, c, f, d: (s, c, d)),
+            pl.BlockSpec((None, block_d, block_f), lambda s, c, f, d: (s, d, f)),
+        ],
+        out_specs=pl.BlockSpec((None, block_c, block_f),
+                               lambda s, c, f, d: (s, c, f)),
+        out_shape=jax.ShapeDtypeStruct((S, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(n_valid.astype(jnp.int32), x, w)

@@ -1,0 +1,50 @@
+"""jit'd public wrappers: backend dispatch (interpret=True on CPU — the
+kernels TARGET TPU; interpret mode executes the kernel body for validation)
++ layout adapters matching the model stack's tensor shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.sink_decode import sink_decode
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention_prefill_op(q, k, v, *, causal=True, window=0, sink=0,
+                         block_q=512, block_k=512):
+    """Model-stack layout adapter: q [B,S,H,h], k/v [B,S,K,h] → [B,S,H,h].
+    KV heads are repeated to full heads (TPU flash layout)."""
+    B, S, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, h)
+    o = flash_prefill(qf, kf, vf, causal=causal, window=window, sink=sink,
+                      block_q=block_q, block_k=block_k, interpret=_interpret())
+    return o.reshape(B, H, S, h).transpose(0, 2, 1, 3)
+
+
+def attention_decode_op(q, k_cache, v_cache, t, *, block_w=512):
+    """q [B,H,h]; caches [B,W,K,h]; t scalar or [B] → [B,H,h]."""
+    B, H, h = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, h)
+    kc = k_cache.transpose(0, 2, 1, 3)        # [B,K,W,h]
+    vc = v_cache.transpose(0, 2, 1, 3)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+    o = sink_decode(qg, kc, vc, t, block_w=block_w, interpret=_interpret())
+    return o.reshape(B, H, h)
+
+
+def moe_gmm_op(x, w, n_valid, **kw):
+    return moe_gmm(x, w, n_valid, interpret=_interpret(), **kw)

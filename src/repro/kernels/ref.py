@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, *, causal=True, window=0, sink=0):
+    """q/k/v [BH, S, h] → [BH, S, h]; dense softmax attention."""
+    BH, S, h = q.shape
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (h ** -0.5)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        in_win = (q_pos - k_pos) < window
+        if sink > 0:
+            in_win |= k_pos < sink
+        mask &= in_win
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def sink_decode_ref(q, k_cache, v_cache, t):
+    """q [B,K,G,h]; caches [B,K,W,h]; t [B] → [B,K,G,h]."""
+    B, K, G, h = q.shape
+    W = k_cache.shape[2]
+    s = jnp.einsum("bkgh,bkwh->bkgw", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (h ** -0.5)
+    occ = jnp.arange(W)[None, None, None, :] < t[:, None, None, None]
+    s = jnp.where(occ, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgw,bkwh->bkgh", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gmm_ref(x, w, n_valid):
+    """x [s,C,D] @ w [s,D,F] with valid-row masking → [s,C,F]."""
+    C = x.shape[1]
+    mask = jnp.arange(C)[None, :, None] < n_valid[:, None, None]
+    xm = jnp.where(mask, x.astype(jnp.float32), 0.0)
+    return jnp.einsum("scd,sdf->scf", xm,
+                      w.astype(jnp.float32)).astype(x.dtype)

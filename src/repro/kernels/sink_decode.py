@@ -1,0 +1,89 @@
+"""Decode-step attention over a (sink‖ring) compressed KV cache (TPU Pallas).
+
+The OmniAttn decode hot path: one query token per sequence attends over the
+W = sink+recent compressed cache with an occupancy mask (slots < min(t, W)).
+GQA is handled natively: the q block carries all G=H/K heads of one kv group,
+so the cache block is read ONCE per group (the bandwidth win that motivates
+grouped layouts on TPU).
+
+Layouts: q [B, K, G, h]; k/v caches [B, K, W, h] (kv-head-major so the W×h
+cache block for one (batch, kv-head) is contiguous); t [B] occupancy.
+Grid: (B, K, n_w_blocks) with W sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_w: int, n_w: int):
+    wi = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(wi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...].astype(jnp.float32)              # [G, h]
+    k = k_ref[...].astype(jnp.float32)              # [block_w, h]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [G, bw]
+    slot = wi * block_w + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    occupied = slot < t_ref[b]
+    s = jnp.where(occupied, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    m_ref[...] = m_new
+    v = v_ref[...].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+
+    @pl.when(wi == n_w - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def sink_decode(q, k_cache, v_cache, t, *, block_w: int = 512,
+                interpret: bool = False):
+    """q [B, K, G, h]; caches [B, K, W, h]; t [B] → o [B, K, G, h]."""
+    B, K, G, h = q.shape
+    W = k_cache.shape[2]
+    block_w = min(block_w, W)
+    while W % block_w:
+        block_w //= 2
+    n_w = W // block_w
+    scale = h ** -0.5
+    kernel = functools.partial(_kernel, scale=scale, block_w=block_w, n_w=n_w)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, n_w),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # t: scalar occupancy
+            pl.BlockSpec((None, None, G, h), lambda b, kh, w: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, block_w, h), lambda b, kh, w: (b, kh, w, 0)),
+            pl.BlockSpec((None, None, block_w, h), lambda b, kh, w: (b, kh, w, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, h), lambda b, kh, w: (b, kh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, h), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, h), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(t.astype(jnp.int32), q, k_cache, v_cache)

@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-importing module)
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.distributed.ctx import MeshCtx
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, supports_shape
+from repro.models.common import param_shapes, param_specs
+from repro.models.lm import LM
+from repro.models.moe import default_slot_count, round_robin_placement, tables_from_placement
+from repro.training.optim import adamw_init, opt_specs
+from repro.training.trainer import make_train_step
+
+# TPU v5e hardware model (per chip) — see EXPERIMENTS.md §Roofline
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (per-device) HLO."""
+    out = {k: 0 for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")}
+    counts = {k: 0 for k in out}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(1)
+        # operand shapes appear after the op name; result shape before '='
+        after = line[m.end():]
+        shapes = _SHAPE_RE.findall(after)
+        if not shapes:            # fall back to the result shape
+            shapes = _SHAPE_RE.findall(line[:m.start()])[:1]
+        out[op] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        counts[op] += 1
+    out["total"] = sum(out.values())
+    out["counts"] = counts
+    return out
+
+
+# ----------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh_ctx: MeshCtx,
+               overrides: dict | None = None):
+    """Returns (fn, arg_sds tuple, in_shardings tuple, meta)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_updates(**overrides)
+    shape = SHAPES[shape_name]
+    lm = LM.build(cfg, mesh_ctx)
+    p_sds = lm.shapes()
+    p_specs = lm.specs()
+
+    tables_sds = tables_specs = None
+    if cfg.moe.n_experts:
+        s = default_slot_count(cfg, mesh_ctx.ep)
+        t = tables_from_placement(
+            round_robin_placement(cfg.moe.n_experts, mesh_ctx.ep, s), s)
+        tables_sds = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+        tables_specs = lm.table_specs()
+
+    sh = mesh_ctx.tree_shardings
+
+    if shape.kind == "train":
+        b_sds, b_specs = batch_specs(cfg, shape, mesh_ctx)
+        opt_sds = jax.eval_shape(lambda: adamw_init(p_sds, cfg.optimizer_dtype))
+        o_specs = opt_specs(p_specs)
+        step = make_train_step(lm)
+
+        def fn(params, opt, batch, tables):
+            return step(params, opt, batch, tables)
+
+        args = (p_sds, opt_sds, b_sds, tables_sds)
+        shards = (sh(p_specs), sh(o_specs), sh(b_specs),
+                  sh(tables_specs) if tables_specs else None)
+    elif shape.kind == "prefill":
+        b_sds, b_specs = batch_specs(cfg, shape, mesh_ctx)
+
+        def fn(params, batch, tables):
+            cache, logits, _aux = lm.prefill(params, batch,
+                                             max_len=shape.seq_len, tables=tables)
+            return cache, logits
+
+        args = (p_sds, b_sds, tables_sds)
+        shards = (sh(p_specs), sh(b_specs),
+                  sh(tables_specs) if tables_specs else None)
+    else:  # decode
+        (tok, pos, cache_sds), (tok_sp, pos_sp, cache_sp) = \
+            decode_specs(cfg, shape, mesh_ctx, lm)
+
+        def fn(params, cache, token, positions, tables):
+            new_cache, logits, _aux = lm.decode(params, cache, token, positions,
+                                                tables=tables)
+            return new_cache, logits
+
+        args = (p_sds, cache_sds, tok, pos, tables_sds)
+        shards = (sh(p_specs), sh(cache_sp), sh(tok_sp), sh(pos_sp),
+                  sh(tables_specs) if tables_specs else None)
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    return fn, args, shards, meta
+
+
+def model_flops(meta: dict) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference)."""
+    factor = 6.0 if meta["kind"] == "train" else 2.0
+    tokens = meta["global_batch"] * (meta["seq_len"] if meta["kind"] != "decode" else 1)
+    return factor * meta["n_active_params"] * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, overrides: dict | None = None,
+             tag: str = "", mesh_shape: tuple | None = None) -> dict:
+    if mesh_shape is not None:
+        mesh_name = "pod_" + "x".join(str(d) for d in mesh_shape)
+    else:
+        mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / mesh_name / f"{arch}__{shape_name}{suffix}.json"
+    if out_path.exists() and not force:
+        prev = json.loads(out_path.read_text())
+        if prev.get("status") != "error":      # always retry failed cells
+            return prev
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    cfg = get_config(arch)
+    ok, why = supports_shape(cfg, SHAPES[shape_name])
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "tag": tag, "overrides": overrides or {}}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    try:
+        if mesh_shape is not None:   # elastic single-pod layouts (§Perf)
+            devices = jax.devices()[:mesh_shape[0] * mesh_shape[1]]
+            mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                                 devices=devices)
+        else:
+            mesh = make_production_mesh(multi_pod=multi_pod)
+        ctx = MeshCtx(mesh)
+        chips = ctx.n_devices
+        fn, args, shards, meta = build_cell(arch, shape_name, ctx, overrides)
+
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=shards).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll_xla = collective_bytes(hlo)
+
+        # trip-count-aware walk (XLA cost_analysis counts while bodies ONCE —
+        # see hlo_cost.py); XLA numbers kept as *_xla reference fields.
+        from repro.launch.hlo_cost import analyze
+        walked = analyze(hlo)
+        coll = dict(walked.collective_bytes,
+                    total=walked.total_collective_bytes,
+                    counts=walked.collective_counts)
+        flops_dev = float(walked.flops)
+        bytes_dev = float(walked.bytes)
+        mf = model_flops(meta)
+
+        compute_t = flops_dev / PEAK_FLOPS
+        memory_t = bytes_dev / HBM_BW
+        coll_t = coll["total"] / LINK_BW
+        terms = {"compute_s": compute_t, "memory_s": memory_t,
+                 "collective_s": coll_t}
+        dominant = max(terms, key=terms.get)
+
+        rec.update(
+            status="ok", chips=chips, **meta,
+            t_lower_s=round(t_lower, 2), t_compile_s=round(t_compile, 2),
+            flops_per_device=flops_dev, bytes_per_device=bytes_dev,
+            collective_bytes_per_device=coll,
+            xla_cost_reference={
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "collective_bytes_once": coll_xla,
+            },
+            memory_analysis={
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            roofline={"terms": terms, "dominant": dominant},
+            model_flops_total=mf,
+            hlo_flops_total=flops_dev * chips,
+            useful_flops_ratio=(mf / (flops_dev * chips)) if flops_dev else None,
+        )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=ARCH_IDS)
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for variant records")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="custom single-pod data x model, e.g. 64x4")
+    ap.add_argument("--set", nargs="*", default=[], dest="overrides",
+                    help="config overrides key=value (perf hillclimb)")
+    args = ap.parse_args()
+
+    def _parse(v: str):
+        if v in ("True", "true"):
+            return True
+        if v in ("False", "false"):
+            return False
+        try:
+            return int(v)
+        except ValueError:
+            try:
+                return float(v)
+            except ValueError:
+                return v
+    overrides = {k: _parse(v) for k, v in
+                 (item.split("=", 1) for item in args.overrides)}
+    out = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in args.arch:
+        for shape in args.shape:
+            for mp in meshes:
+                t0 = time.time()
+                ms = None
+                if args.mesh_shape:
+                    ms = tuple(int(x) for x in args.mesh_shape.split("x"))
+                rec = run_cell(arch, shape, mp, out, force=args.force,
+                               overrides=overrides, tag=args.tag,
+                               mesh_shape=ms)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" compute={r['terms']['compute_s']:.4f}s"
+                             f" mem={r['terms']['memory_s']:.4f}s"
+                             f" coll={r['terms']['collective_s']:.4f}s")
+                elif status == "error":
+                    extra = " " + rec.get("error", "")[:160]
+                print(f"[{time.strftime('%H:%M:%S')}] {arch} × {shape} × "
+                      f"{'multi' if mp else 'single'}: {status}{extra}"
+                      f" ({time.time()-t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,219 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE
+(verified experimentally — see EXPERIMENTS.md §Dry-run), which undercounts
+scanned layer stacks and grad-accumulation loops by orders of magnitude.
+This walker re-derives:
+
+  flops            — 2·M·N·K for every dot (recursing into fusions),
+                     multiplied by enclosing while trip counts
+                     (``backend_config known_trip_count``);
+  bytes            — operand+result bytes at FUSION BOUNDARIES (inner fused
+                     ops are free — closer to real HBM traffic than per-op);
+  collective bytes — per collective op kind, operand bytes × trip counts.
+
+Shapes of operands are resolved through a per-computation symbol table
+(optimized HLO prints shapes only at definition sites).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+# opcode = first word directly followed by '(' after the type (type tokens
+# are followed by '[' or ')' or ',', never '('; nested tuple parens are
+# preceded by '(' or ', ', never by a word character)
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\"={:]+n[\\"]*:?[\\"]+(\d+)')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CDIM_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# bytes are skipped for bookkeeping ops
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "copy", "copy-start", "copy-done", "after-all", "iota",
+             "broadcast", "reshape"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+def _parse(hlo: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.strip() or line.startswith(("HloModule", "FileNames",
+                                                "FunctionNames",
+                                                "FileLocations",
+                                                "StackFrames")):
+            continue
+        if not line.startswith((" ", "\t")):
+            m = _COMP_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        tail = line[m.end():]
+        mo = _OPCODE_RE.search(tail)
+        if not mo:
+            continue
+        comps[cur].append(_Instr(m.group(1), tail[:mo.start()].strip(),
+                                 mo.group(1), tail[mo.end():]))
+    return comps
+
+
+@dataclass
+class CostResult:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: {
+        k: 0.0 for k in COLLECTIVES})
+    collective_counts: dict = field(default_factory=lambda: {
+        k: 0 for k in COLLECTIVES})
+
+    def scaled(self, k: float) -> "CostResult":
+        return CostResult(self.flops * k, self.bytes * k,
+                          {o: v * k for o, v in self.collective_bytes.items()},
+                          {o: int(v * k) for o, v in
+                           self.collective_counts.items()})
+
+    def add(self, other: "CostResult"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for o in COLLECTIVES:
+            self.collective_bytes[o] += other.collective_bytes[o]
+            self.collective_counts[o] += other.collective_counts[o]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo: str) -> CostResult:
+    comps = _parse(hlo)
+    memo: dict[tuple, CostResult] = {}
+
+    def comp_cost(name: str, count_bytes: bool) -> CostResult:
+        key = (name, count_bytes)
+        if key in memo:
+            return memo[key]
+        memo[key] = CostResult()          # break recursion defensively
+        out = CostResult()
+        instrs = comps.get(name, [])
+        symtab = {i.name: i.type_str for i in instrs}
+        for ins in instrs:
+            op = ins.opcode
+            # ---- flops
+            if op == "dot":
+                result = _shape_dims(ins.type_str)
+                cd = _CDIM_RE.search(ins.rest)
+                ops = _OPERAND_RE.findall(ins.rest)
+                lhs_dims = _shape_dims(symtab.get(ops[0], "")) if ops else []
+                k = 1
+                if cd and lhs_dims:
+                    for d in cd.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            k *= lhs_dims[int(d)]
+                n = 1
+                for d in result:
+                    n *= d
+                out.flops += 2.0 * n * k
+            # ---- control flow
+            if op == "while":
+                trips = 1
+                mt = _TRIP_RE.search(ins.rest)
+                if mt:
+                    trips = int(mt.group(1))
+                body = _BODY_RE.search(ins.rest)
+                cond = _COND_RE.search(ins.rest)
+                sub = CostResult()
+                if body:
+                    sub.add(comp_cost(body.group(1), count_bytes))
+                if cond:
+                    sub.add(comp_cost(cond.group(1), count_bytes))
+                out.add(sub.scaled(trips))
+                continue
+            if op in ("fusion", "call", "map", "reduce", "reduce-window",
+                      "scatter", "select-and-scatter", "sort", "conditional"):
+                for called in _CALL_RE.findall(ins.rest):
+                    # fusions: recurse for flops only — bytes are counted at
+                    # the fusion boundary below
+                    out.add(comp_cost(called, False))
+            # ---- collectives
+            for c in COLLECTIVES:
+                if op == c or op == c + "-start":
+                    opnds = _OPERAND_RE.findall(ins.rest.split(",")[0]
+                                                if "(" not in ins.rest
+                                                else ins.rest)
+                    b = sum(_shape_bytes(symtab.get(o, "")) for o in
+                            _OPERAND_RE.findall(ins.rest)
+                            if o in symtab)
+                    if b == 0:
+                        b = _shape_bytes(ins.type_str)
+                    out.collective_bytes[c] += b
+                    out.collective_counts[c] += 1
+                    break
+            # ---- bytes at fusion boundary
+            if count_bytes and op not in _FREE_OPS and \
+                    not op.endswith("-done"):
+                b = _shape_bytes(ins.type_str)
+                for o in _OPERAND_RE.findall(ins.rest):
+                    if o in symtab:
+                        b += _shape_bytes(symtab[o])
+                out.bytes += b
+        memo[key] = out
+        return out
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_RE.match(line[len("ENTRY"):].strip())
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        entry = next(iter(comps))
+    return comp_cost(entry, True)

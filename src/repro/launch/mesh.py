@@ -1,0 +1,21 @@
+"""Production mesh builders (functions — importing this module never touches
+jax device state)."""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.ctx import MeshCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]   # single-pod mesh uses the first 256 of 512
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_production_ctx(*, multi_pod: bool = False) -> MeshCtx:
+    return MeshCtx(make_production_mesh(multi_pod=multi_pod))

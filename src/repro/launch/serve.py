@@ -1,0 +1,59 @@
+"""Serving launcher: --arch <id> through the full OmniInfer stack.
+
+CPU-runnable with --reduced (real model, real engines); the same Server
+object drives TPU-scale deployments with a production mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-moe-a2.7b \
+        --reduced --requests 8 --max-tokens 6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core.proxy import OASConfig
+from repro.serving import Server, ServerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-tokens", type=int, default=6)
+    ap.add_argument("--prefill", type=int, default=1)
+    ap.add_argument("--decode", type=int, default=1)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--no-proxy", action="store_true",
+                    help="round-robin baseline (ablation)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    oas = OASConfig(defer_window=0.0, cache_aware=not args.no_proxy,
+                    lpt=not args.no_proxy, deferred=False)
+    srv = Server(cfg, ServerConfig(n_prefill=args.prefill,
+                                   n_decode=args.decode,
+                                   decode_slots=args.slots,
+                                   max_len=args.max_len, oas=oas))
+    rng = np.random.default_rng(args.seed)
+    shared = tuple(rng.integers(0, min(cfg.vocab_size, 500), 16).tolist())
+    reqs = []
+    for i in range(args.requests):
+        if i % 3 == 0:
+            p = shared + tuple(rng.integers(0, 500, 4 + i).tolist())
+        else:
+            p = tuple(rng.integers(0, 500, int(rng.integers(8, 32))).tolist())
+        reqs.append((p, args.max_tokens))
+    s = srv.run(reqs, max_wall_s=600)
+    print(json.dumps({k: v for k, v in s.items()
+                      if not isinstance(v, list)}, indent=1, default=float))
+    return s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape) cell — the
+shannon/kernels pattern: weak-type-correct, shardable, no device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.ctx import MeshCtx
+from repro.models.lm import LM
+from repro.models.stack import cache_struct
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only arch has no decode step"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshCtx):
+    """(batch ShapeDtypeStructs, batch PartitionSpecs) for a train/prefill cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bp = mesh.batch_part(B)
+    batch, specs = {}, {}
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, S, cfg.frontend_dim), "bfloat16")
+        specs["frames"] = P(bp, None, None)
+    elif cfg.family == "vlm":
+        Pn = cfg.num_patches
+        batch["tokens"] = sds((B, S - Pn), "int32")
+        specs["tokens"] = P(bp, None)
+        batch["patches"] = sds((B, Pn, cfg.frontend_dim), "bfloat16")
+        specs["patches"] = P(bp, None, None)
+    else:
+        batch["tokens"] = sds((B, S), "int32")
+        specs["tokens"] = P(bp, None)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), "int32")
+        specs["labels"] = P(bp, None)
+    return batch, specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshCtx, lm: LM):
+    """(token, positions, cache) ShapeDtypeStructs + PartitionSpecs.
+
+    Cache holds shape.seq_len-1 tokens; the lowered step writes token
+    seq_len-1 and attends over the full window."""
+    B, S = shape.global_batch, shape.seq_len
+    bp = mesh.batch_part(B)
+    cache_sds, cache_specs = cache_struct(cfg, mesh, lm.plan, B, S)
+    token = sds((B, 1), "int32")
+    positions = sds((), "int32")
+    return (token, positions, cache_sds), (P(bp, None), P(), cache_specs)

@@ -1,0 +1,77 @@
+"""Training launcher: --arch <id> + data pipeline + AdamW + checkpoint/resume.
+
+Fault tolerance drill: `--preempt-at N` kills the process after step N
+(simulated preemption); relaunching with the same --ckpt-dir resumes from the
+latest committed checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, reduced_config
+from repro.distributed.ctx import MeshCtx, local_mesh_ctx
+from repro.models.lm import LM
+from repro.training.data import DataConfig, make_batch
+from repro.training.optim import adamw_init, opt_specs
+from repro.training.trainer import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--preempt-at", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = local_mesh_ctx()
+    lm = LM.build(cfg, mesh)
+    tables = lm.default_tables()
+    step_fn = jax.jit(make_train_step(lm, lr=args.lr))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        tmpl = {"params": lm.shapes(),
+                "opt": jax.eval_shape(lambda: adamw_init(lm.shapes(),
+                                                         cfg.optimizer_dtype))}
+        state, start, _ = mgr.restore(template=tmpl)
+        params, opt = state["params"], state["opt"]
+        print(f"resumed from step {start}", flush=True)
+    else:
+        params = lm.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params, cfg.optimizer_dtype)
+
+    dcfg = DataConfig(cfg.vocab_size, args.seq, args.batch)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = make_batch(cfg, dcfg, step)
+        params, opt, metrics = step_fn(params, opt, batch, tables)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+        if mgr is not None and (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt})
+        if args.preempt_at and step + 1 >= args.preempt_at:
+            print(f"simulated preemption at step {step + 1}", flush=True)
+            sys.exit(42)
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

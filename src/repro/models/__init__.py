@@ -1,0 +1,4 @@
+from repro.models.lm import LM
+from repro.models.stack import StackPlan, alloc_cache, cache_struct
+
+__all__ = ["LM", "StackPlan", "alloc_cache", "cache_struct"]

@@ -1,0 +1,259 @@
+"""Attention: chunked (flash-style) prefill + cached decode.
+
+Layouts:
+  q        [B, S, H, h]       (H = n_heads)
+  k, v     [B, S, K, h]       (K = n_kv_heads, G = H//K)
+  cache    [B, W, K, h]       per layer; W = allocated window
+
+Sharding strategies (chosen per arch by the caller — see DESIGN.md):
+  prefill: 'heads' → shard H over `model` (repeat-kv full-head layout)
+           'qseq'  → shard q-chunk seq over `model` (few-head archs)
+  decode:  'kv'    → shard K over `model` (K ≥ TP)
+           'wseq'  → shard cache W over `model` (flash-decoding style; XLA
+                     inserts the LSE-combining all-reduce in the softmax)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import MeshCtx
+from repro.models.common import apply_rope  # re-export for layer code
+
+NEG_INF = -1e30
+
+
+def prefill_strategy(n_heads: int, n_kv: int, tp: int) -> str:
+    return "heads" if n_heads % tp == 0 else "qseq"
+
+
+def decode_strategy(n_kv: int, tp: int) -> str:
+    return "kv" if n_kv % tp == 0 else "wseq"
+
+
+# ----------------------------------------------------------------------
+def chunked_attention(
+    q, k, v, *,
+    causal: bool,
+    window: int = 0,
+    sink: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 2048,
+    kv_chunk: int = 1024,
+    mesh: Optional[MeshCtx] = None,
+    strategy: str = "heads",
+    batch_part=None,
+    skip_masked_chunks: bool = False,
+    fp32_scores: bool = True,
+    qseq_out_constraint: bool = False,
+):
+    """Blockwise attention with online softmax; O(q_chunk·kv_chunk) live scores.
+
+    window > 0 → sliding-window (local) attention of that width.
+    skip_masked_chunks → unroll q chunks in Python and statically slice the KV
+    range each q chunk can see (halves causal FLOPs; §Perf lever).
+    """
+    B, S, H, h = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    scale = h ** -0.5
+
+    qc = min(q_chunk, S)
+    while S % qc:
+        qc //= 2
+    kc = min(kv_chunk, Skv)
+    while Skv % kc:
+        kc //= 2
+    n_q, n_kv = S // qc, Skv // kc
+
+    if strategy == "heads" and mesh is not None and mesh.tp > 1:
+        # full-head layout: repeat KV → shard H over model
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        K_eff, G_eff = H, 1
+        head_spec = "model"
+    else:
+        K_eff, G_eff = K, G
+        head_spec = None
+
+    kq = k.reshape(B, n_kv, kc, K_eff, h)
+    vq = v.reshape(B, n_kv, kc, K_eff, h)
+    qr = q.reshape(B, n_q, qc, K_eff, G_eff, h)
+
+    def one_q_chunk(args):
+        qi, q_blk = args                      # q_blk [B, qc, K_eff, G_eff, h]
+        if mesh is not None:
+            if strategy == "qseq":
+                q_blk = mesh.constrain(q_blk, P(batch_part, "model", None, None, None))
+            elif head_spec:
+                q_blk = mesh.constrain(q_blk, P(batch_part, None, head_spec, None, None))
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        sd = jnp.float32 if fp32_scores else q.dtype
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp            # [B, kc, K_eff, h]
+            k_pos = kj * kc + jnp.arange(kc)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", q_blk.astype(sd),
+                           k_blk.astype(sd)) * scale
+            mask = jnp.ones((qc, kc), dtype=bool)
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                in_win = (q_pos[:, None] - k_pos[None, :]) < window
+                if sink > 0:          # sink+window sparse prefill (OmniAttn)
+                    in_win |= k_pos[None, :] < sink
+                mask &= in_win
+            s = jnp.where(mask[None, None, None], s,
+                          jnp.asarray(NEG_INF, s.dtype))
+            m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+            p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(sd) \
+                if fp32_scores else jnp.exp(s - m_new[..., None].astype(sd))
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1).astype(jnp.float32)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K_eff, G_eff, qc), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, K_eff, G_eff, qc), dtype=jnp.float32)
+        a0 = jnp.zeros((B, K_eff, G_eff, qc, h), dtype=v.dtype)
+
+        if skip_masked_chunks and causal:
+            # statically bound the visible kv blocks for this q chunk:
+            # causal upper bound, sliding-window lower bound, sink blocks
+            # (OmniAttn sparse prefill: compute ∝ window, not S)
+            q_lo = q_offset + int(qi) * qc
+            q_hi = q_offset + (int(qi) + 1) * qc - 1
+            hi = min(n_kv, (q_hi + kc) // kc)
+            if window > 0:
+                lo = max(0, (q_lo - window + 1) // kc)
+                vis = set(range(lo, hi))
+                if sink > 0:
+                    vis |= set(range(0, min((sink + kc - 1) // kc, n_kv)))
+            else:
+                vis = set(range(hi))
+            carry = (m0, l0, a0)
+            for j in sorted(vis):
+                carry, _ = kv_step(carry, (jnp.asarray(j), kq[:, j], vq[:, j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.arange(n_kv), jnp.moveaxis(kq, 1, 0), jnp.moveaxis(vq, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        out = jnp.moveaxis(out, 3, 1)          # [B, qc, K_eff, G_eff, h]
+        return out.reshape(B, qc, K_eff * G_eff, h)
+
+    if skip_masked_chunks and causal:
+        outs = [one_q_chunk((i, qr[:, i])) for i in range(n_q)]
+        out = jnp.stack(outs, axis=1)
+    else:
+        out = jax.lax.map(one_q_chunk, (jnp.arange(n_q), jnp.moveaxis(qr, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1)         # [B, n_q, qc, H, h]
+    out = out.reshape(B, S, H, h)
+    if mesh is not None and strategy == "qseq" and qseq_out_constraint:
+        # pin the q-sequence sharding on the merged output so SPMD reshards
+        # once at the wo matmul instead of inventing 6-D transposes
+        # (cuts collectives ~12% but costs compute — §Perf C1: net refuted,
+        # kept as an opt-in knob)
+        out = mesh.constrain(out, P(batch_part, "model", None, None))
+    return out
+
+
+# ----------------------------------------------------------------------
+def decode_attention(
+    q, k_cache, v_cache, t, *,
+    mesh: Optional[MeshCtx] = None,
+    strategy: str = "kv",
+    batch_part=None,
+):
+    """Single-token attention over a cache. q [B, H, h]; caches [B, W, K, h];
+    t = number of tokens written (all cache slots with idx < min(t, W) valid —
+    ring layout guarantees slots [0, min(t,W)) are occupied)."""
+    B, H, h = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = h ** -0.5
+
+    if mesh is not None:
+        w_part = "model" if strategy == "wseq" else None
+        kv_part = "model" if strategy == "kv" else None
+        cache_spec = P(batch_part, w_part, kv_part, None)
+        k_cache = mesh.constrain(k_cache, cache_spec)
+        v_cache = mesh.constrain(v_cache, cache_spec)
+
+    qg = q.reshape(B, K, G, h).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_cache.astype(jnp.float32)) * scale
+    t = jnp.asarray(t)
+    lim = jnp.minimum(t, W)
+    if lim.ndim:                      # per-request positions [B]
+        lim = lim[:, None, None, None]
+    valid = jnp.arange(W)[None, None, None, :] < lim
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bwkh->bkgh", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, H, h)
+
+
+# ----------------------------------------------------------------------
+def ring_slot(t, sink: int, recent: int):
+    """Cache slot for the token written at absolute position t (sink+ring)."""
+    W = sink + recent
+    return jnp.where(t < W, t, sink + (t - sink) % recent)
+
+
+def cache_write(k_cache, v_cache, k_new, v_new, t, *, sink: int = 0, recent: int = 0):
+    """Write one token's K/V at position t (scalar, or [B] per-request).
+    Full cache when sink==recent==0 (slot=t), else sink+recent ring layout."""
+    t = jnp.asarray(t)
+    if sink or recent:
+        idx = ring_slot(t, sink, recent)
+    else:
+        idx = t
+    if t.ndim:                        # per-request write positions
+        b = jnp.arange(k_cache.shape[0])
+        k_cache = k_cache.at[b, idx].set(k_new)
+        v_cache = v_cache.at[b, idx].set(v_new)
+        return k_cache, v_cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new[:, None], idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new[:, None], idx, axis=1)
+    return k_cache, v_cache
+
+
+def compress_prefill_kv(k, v, *, sink: int, recent: int, true_len=None):
+    """Build a sink+recent ring cache from full prefill K/V [B, S, K, h].
+
+    Ring layout: token i (i ≥ sink) lives at slot sink + (i - sink) % recent,
+    so after a prefill of `true_len` tokens the ring holds the latest token of
+    each residue class. true_len (traced scalar) supports right-padded
+    prefill; defaults to S.
+    """
+    B, S, K, h = k.shape
+    W = sink + recent
+    if true_len is None and S <= W:
+        pad = W - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return kc, vc
+    tl = jnp.asarray(S if true_len is None else true_len, jnp.int32)
+    j = jnp.arange(recent)
+    base = sink + j
+    n_wraps = jnp.maximum((tl - 1 - base) // recent, 0)
+    p = jnp.clip(base + n_wraps * recent, 0, S - 1)       # token at ring slot j
+    valid = (base < tl).astype(k.dtype)[None, :, None, None]
+    ring_k = jnp.take(k, p, axis=1) * valid
+    ring_v = jnp.take(v, p, axis=1) * valid
+    sink_n = min(sink, S)
+    sink_k = k[:, :sink_n]
+    sink_v = v[:, :sink_n]
+    if sink_n < sink:
+        sink_k = jnp.pad(sink_k, ((0, 0), (0, sink - sink_n), (0, 0), (0, 0)))
+        sink_v = jnp.pad(sink_v, ((0, 0), (0, sink - sink_n), (0, 0), (0, 0)))
+    return (jnp.concatenate([sink_k, ring_k], axis=1),
+            jnp.concatenate([sink_v, ring_v], axis=1))

@@ -1,0 +1,103 @@
+"""Shared model primitives: norms, rope, init schema, losses."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ----------------------------------------------------------------------
+# Parameter schema: shape + sharding spec + init scale, so init_params and
+# param_specs are generated from one source of truth.
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    spec: P
+    scale: float = 0.02           # normal std; 0.0 → zeros; 1.0 & ndim==1 → ones
+    dtype: str = "bfloat16"
+    ones: bool = False
+
+
+def init_params(defs, rng):
+    flat, treedef = jax.tree.flatten(defs, is_leaf=lambda d: isinstance(d, ParamDef))
+    keys = jax.random.split(rng, len(flat))
+    vals = []
+    for d, k in zip(flat, keys):
+        if d.ones:
+            v = jnp.ones(d.shape, dtype=d.dtype)
+        elif d.scale == 0.0:
+            v = jnp.zeros(d.shape, dtype=d.dtype)
+        else:
+            v = (jax.random.normal(k, d.shape, dtype=jnp.float32) * d.scale).astype(d.dtype)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(defs):
+    return jax.tree.map(lambda d: d.spec, defs,
+                        is_leaf=lambda d: isinstance(d, ParamDef))
+
+
+def param_shapes(defs):
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+                        defs, is_leaf=lambda d: isinstance(d, ParamDef))
+
+
+def stack_defs(defs, n: int):
+    """Add a leading scan-repeat axis of size n to every ParamDef."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, P(*((None,) + tuple(d.spec))), d.scale,
+                           d.dtype, d.ones),
+        defs, is_leaf=lambda d: isinstance(d, ParamDef))
+
+
+# ----------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, ..., head_dim]. positions: scalar, [S], or [B, S] absolute."""
+    h = x.shape[-1]
+    freqs = rope_freqs(h, theta)                     # [h/2]
+    pos = jnp.asarray(positions)
+    if pos.ndim == 0:
+        pos = pos[None]                              # [1] — one seq position
+    ang = pos.astype(jnp.float32)[..., None] * freqs  # [S, h/2] or [B, S, h/2]
+    if ang.ndim == 2:
+        ang = ang[None]                              # [1, S, h/2]
+    for _ in range(x.ndim - 3):                      # insert head dims
+        ang = jnp.expand_dims(ang, axis=2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy; logits may be vocab-sharded (XLA reduces)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,162 @@
+"""Top-level model: embeddings, modality frontends (stubs), head, losses,
+and the three lowered entry points (train_loss / prefill / decode)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import MeshCtx
+from repro.models import moe as moe_mod
+from repro.models import stack as stack_mod
+from repro.models.common import ParamDef, cross_entropy, init_params, param_shapes, param_specs, rms_norm
+
+
+@dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+    mesh: MeshCtx
+    plan: stack_mod.StackPlan
+
+    @staticmethod
+    def build(cfg: ModelConfig, mesh: MeshCtx, pattern: Optional[list[int]] = None) -> "LM":
+        return LM(cfg, mesh, stack_mod.StackPlan.from_config(cfg, pattern))
+
+    # ------------------------------------------------------------------
+    @cached_property
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        fs = "data" if cfg.fsdp else None
+        dt = cfg.param_dtype
+        d = {"stack": stack_mod.stack_param_defs(cfg, self.mesh, self.plan),
+             "final_norm": ParamDef((cfg.d_model,), P(None), dtype=dt, ones=True),
+             "embed": ParamDef((cfg.vocab_size, cfg.d_model), P("model", fs),
+                               scale=cfg.d_model ** -0.5, dtype=dt)}
+        if not cfg.tie_embeddings:
+            d["head"] = ParamDef((cfg.d_model, cfg.vocab_size), P(fs, "model"), dtype=dt)
+        if cfg.frontend_dim:
+            d["frontend"] = ParamDef((cfg.frontend_dim, cfg.d_model), P(None, None), dtype=dt)
+        # pjit input shardings must divide exactly: drop non-divisible axes
+        # (e.g. vocab 50280 or 504 on a 16-way model axis → replicate).
+        d = jax.tree.map(
+            lambda pd: ParamDef(pd.shape, self.mesh.sanitize_spec(pd.spec, pd.shape),
+                                pd.scale, pd.dtype, pd.ones),
+            d, is_leaf=lambda v: isinstance(v, ParamDef))
+        return d
+
+    def init(self, rng) -> dict:
+        return init_params(self.param_defs, rng)
+
+    def specs(self) -> dict:
+        return param_specs(self.param_defs)
+
+    def shapes(self) -> dict:
+        return param_shapes(self.param_defs)
+
+    def shardings(self):
+        return self.mesh.tree_shardings(self.specs())
+
+    # ------------------------------------------------------------------
+    def default_tables(self) -> Optional[dict]:
+        cfg = self.cfg
+        if cfg.moe.n_experts == 0:
+            return None
+        s = moe_mod.default_slot_count(cfg, self.mesh.ep)
+        placement = moe_mod.round_robin_placement(cfg.moe.n_experts, self.mesh.ep, s)
+        return moe_mod.tables_from_placement(placement, s)
+
+    def table_specs(self) -> Optional[dict]:
+        if self.cfg.moe.n_experts == 0:
+            return None
+        return moe_mod.table_specs()
+
+    # ------------------------------------------------------------------
+    def _embed_inputs(self, params, batch, batch_part):
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "audio":
+            x = batch["frames"].astype(cd) @ params["frontend"]
+        elif cfg.family == "vlm":
+            tok = jnp.take(params["embed"], batch["tokens"], axis=0)
+            patch = batch["patches"].astype(cd) @ params["frontend"]
+            x = jnp.concatenate([patch, tok], axis=1)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = x.astype(cd)
+        return self.mesh.constrain(x, P(batch_part, None, None))
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum("...d,vd->...v", x.astype(cd), params["embed"])
+        else:
+            logits = x.astype(cd) @ params["head"]
+        return logits
+
+    # ------------------------------------------------------------------
+    def train_loss(self, params, batch, tables=None):
+        """batch: tokens/frames/patches + labels [B,S] (+ optional mask).
+        Returns (loss, aux)."""
+        cfg = self.cfg
+        B = batch["labels"].shape[0]
+        bp = self.mesh.batch_part(B)
+        x = self._embed_inputs(params, batch, bp)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        x, _, aux = stack_mod.stack_apply(
+            cfg, self.mesh, self.plan, params["stack"], x, mode="train",
+            positions=positions, batch_part=bp, tables=tables)
+        logits = self._logits(params, x)
+        loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+        return loss, aux
+
+    def prefill(self, params, batch, *, max_len: int, tables=None,
+                true_len=None):
+        """Returns (cache, last_logits [B, V]). true_len (traced scalar)
+        supports right-padded prompts: the cache and last-token logits are
+        computed as if the sequence were true_len long."""
+        cfg = self.cfg
+        key = "frames" if cfg.family == "audio" else "tokens"
+        B = batch[key].shape[0]
+        bp = self.mesh.batch_part(B)
+        x = self._embed_inputs(params, batch, bp)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        mode = "train" if cfg.encoder_only else "prefill"
+        x, cache, aux = stack_mod.stack_apply(
+            cfg, self.mesh, self.plan, params["stack"], x, mode=mode,
+            positions=positions, max_len=max_len, batch_part=bp, tables=tables,
+            true_len=true_len)
+        if cfg.encoder_only:
+            return None, self._logits(params, x), aux
+        if true_len is None:
+            last = x[:, -1]
+        else:
+            last = jax.lax.dynamic_index_in_dim(x, true_len - 1, axis=1,
+                                                keepdims=False)
+        logits = self._logits(params, last)
+        if true_len is not None and cache is not None:
+            cache["pos"] = jnp.asarray(true_len, jnp.int32)
+        return cache, logits, aux
+
+    def decode(self, params, cache, token, positions, tables=None):
+        """token [B,1] int32; positions scalar or [B,1]. → (cache, logits [B,V])."""
+        cfg = self.cfg
+        B = token.shape[0]
+        bp = self.mesh.batch_part(B)
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = jnp.take(params["embed"], token, axis=0).astype(cd)
+        x = self.mesh.constrain(x, P(bp, None, None))
+        x, new_cache, aux = stack_mod.stack_apply(
+            cfg, self.mesh, self.plan, params["stack"], x, mode="decode",
+            positions=jnp.asarray(positions), caches=cache, batch_part=bp,
+            tables=tables)
+        logits = self._logits(params, x[:, 0])
+        return new_cache, logits, aux

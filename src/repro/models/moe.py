@@ -1,0 +1,233 @@
+"""Expert-parallel MoE with OmniPlacement slot redundancy.
+
+Layout (see DESIGN.md):
+  · experts live in per-rank *slots* on the `data` mesh axis (EP), with each
+    expert's FFN width TP-sharded over `model`;
+  · slot weights  w1/w3 [R, s, D, Fe]  w2 [R, s, Fe, D]  sharded
+    P('data', None, None, 'model') / P('data', None, 'model', None);
+  · a *placement* maps experts → (rank, slot) replicas. Redundant slots host
+    replicas of hot experts (OmniPlacement); replica choice is a deterministic
+    round-robin over (token, choice), which balances replicas in expectation
+    without any extra communication;
+  · dispatch: bucket tokens per (rank, slot), all_to_all over `data`, grouped
+    batched matmul over local slots (exact grouped FLOPs — no one-hot blowup),
+    all_to_all back, weighted scatter-add combine, psum over `model`.
+
+Token dispatch is chunked (cfg.moe_token_chunk) to bound the a2a buffers at
+long sequence lengths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.ctx import MeshCtx
+
+
+# ----------------------------------------------------------------------
+# Placement tables (pytree of arrays — swapped atomically at migration time).
+def tables_from_placement(placement: np.ndarray, n_slots: int) -> dict:
+    """placement: binary [R, E] (this layer) — build replica lookup tables.
+
+    Slot assignment: each rank hosts its experts in ascending expert order.
+    Returns dict of int32 arrays:
+      rep_rank [E, max_rep], rep_slot [E, max_rep], n_rep [E],
+      slot_expert [R, s] (-1 = empty slot).
+    """
+    R, E = placement.shape
+    slot_expert = -np.ones((R, n_slots), dtype=np.int32)
+    reps: list[list[tuple[int, int]]] = [[] for _ in range(E)]
+    for r in range(R):
+        hosted = np.nonzero(placement[r])[0]
+        if len(hosted) > n_slots:
+            raise ValueError(f"rank {r} hosts {len(hosted)} experts > {n_slots} slots")
+        for i, e in enumerate(hosted):
+            slot_expert[r, i] = e
+            reps[int(e)].append((r, i))
+    max_rep = max(1, max(len(x) for x in reps))
+    rep_rank = np.zeros((E, max_rep), dtype=np.int32)
+    rep_slot = np.zeros((E, max_rep), dtype=np.int32)
+    n_rep = np.zeros((E,), dtype=np.int32)
+    for e, lst in enumerate(reps):
+        if not lst:
+            raise ValueError(f"expert {e} unplaced")
+        n_rep[e] = len(lst)
+        for i in range(max_rep):
+            r, sl = lst[i % len(lst)]
+            rep_rank[e, i] = r
+            rep_slot[e, i] = sl
+    return dict(rep_rank=jnp.asarray(rep_rank), rep_slot=jnp.asarray(rep_slot),
+                n_rep=jnp.asarray(n_rep), slot_expert=jnp.asarray(slot_expert))
+
+
+def round_robin_placement(n_experts: int, ep: int, n_slots: int) -> np.ndarray:
+    """Trivial (training / baseline) placement: expert e → rank e // s."""
+    placement = np.zeros((ep, n_experts), dtype=np.int8)
+    for e in range(n_experts):
+        placement[(e // n_slots) % ep, e] = 1
+    return placement
+
+
+def default_slot_count(cfg: ModelConfig, ep: int) -> int:
+    base = math.ceil(cfg.moe.n_experts / ep)
+    return base + cfg.moe.redundant_slots
+
+
+def table_specs() -> dict:
+    return dict(rep_rank=P(None, None), rep_slot=P(None, None),
+                n_rep=P(None), slot_expert=P(None, None))
+
+
+# ----------------------------------------------------------------------
+def router(cfg: ModelConfig, x, router_w):
+    """x [T, D] → (gates [T,k] f32, experts [T,k] i32, probs [T,E] f32)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    if cfg.moe.norm_topk_prob:
+        vals = vals / jnp.maximum(vals.sum(-1, keepdims=True), 1e-9)
+    return vals, idx, probs
+
+
+def _bucket_capacity(tc: int, k: int, ep: int, s: int, cf: float) -> int:
+    c = math.ceil(tc * k * cf / (ep * s))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+# ----------------------------------------------------------------------
+def moe_ffn(mesh: MeshCtx, cfg: ModelConfig, x, router_w, w1, w3, w2,
+            tables: dict, shared: Optional[tuple] = None, batch_part="data"):
+    """x [T, D] (T sharded over batch axes, replicated over model).
+
+    Returns (y [T, D], expert_counts [E] f32) — counts feed OmniPlacement's
+    activation window.
+    """
+    ep, s = w1.shape[0], w1.shape[1]
+    k = cfg.moe.top_k
+    E = cfg.moe.n_experts
+    T, D = x.shape
+
+    in_specs = (
+        P(batch_part, None),                      # x
+        P(None, None),                            # router_w
+        P("data", None, None, "model"),           # w1
+        P("data", None, None, "model"),           # w3
+        P("data", None, "model", None),           # w2
+        {k2: v for k2, v in table_specs().items()},
+    )
+    shared_specs = ()
+    if shared is not None:
+        shared_specs = ((P(None, "model"), P(None, "model"), P("model", None)),)
+        in_specs = in_specs + shared_specs
+    out_specs = (P(batch_part, None), P(None))
+
+    T_loc = T // mesh.dp if batch_part is not None else T
+    tc = min(cfg.moe_token_chunk, T_loc)
+    while T_loc % tc:
+        tc //= 2
+    n_chunks = T_loc // tc
+    Cb = _bucket_capacity(tc, k, ep, s, cfg.moe.capacity_factor)
+    a = tc * k
+
+    def body(x_loc, rw, w1_l, w3_l, w2_l, tbl, *shared_l):
+        w1_l, w3_l, w2_l = w1_l[0], w3_l[0], w2_l[0]   # [s, D, Fe_loc] ...
+        gates, eidx, _ = router(cfg, x_loc, rw)        # [T_loc,k]
+        counts = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+
+        # replica choice: deterministic round-robin over (token, choice)
+        tok_pos = jnp.arange(T_loc)[:, None] * k + jnp.arange(k)[None, :]
+        rr = tok_pos % jnp.maximum(tbl["n_rep"][eidx], 1)
+        drank = tbl["rep_rank"][eidx, rr]              # [T_loc,k]
+        dslot = tbl["rep_slot"][eidx, rr]
+
+        def a2a(x):
+            if mesh.ep == 1:
+                return x
+            if not cfg.moe_dispatch_int8:
+                return jax.lax.all_to_all(x, "data", 0, 0, tiled=True)
+            # int8-quantized transport (per-row max-abs scales) — halves the
+            # EP all-to-all bytes; dequantized on arrival. §Perf A6.
+            scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-9)
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            q = jax.lax.all_to_all(q, "data", 0, 0, tiled=True)
+            scale = jax.lax.all_to_all(scale.astype(jnp.float32), "data", 0,
+                                       0, tiled=True)
+            return (q.astype(x.dtype) * scale.astype(x.dtype))
+
+        def chunk_step(_, inp):
+            xk, gk, drk, dsk = inp                     # [tc,D],[tc,k],[tc,k],[tc,k]
+            key = (drk * s + dsk).reshape(a)           # [a]
+            gate_f = gk.reshape(a)
+            src = jnp.repeat(jnp.arange(tc), k)
+            onehot = (key[:, None] == jnp.arange(ep * s)[None, :]).astype(jnp.int32)
+            pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1   # [a]
+            valid = pos < Cb
+            dr, ds = key // s, key % s
+            send = jnp.zeros((ep, s, Cb, D), xk.dtype)
+            send = send.at[dr, ds, pos].set(xk[src], mode="drop")
+            recv = a2a(send)
+            xe = recv.transpose(1, 0, 2, 3).reshape(s, ep * Cb, D)
+            h = jax.nn.silu(jnp.einsum("sed,sdf->sef", xe, w1_l))
+            h = h * jnp.einsum("sed,sdf->sef", xe, w3_l)
+            oe = jnp.einsum("sef,sfd->sed", h, w2_l)
+            back = oe.reshape(s, ep, Cb, D).transpose(1, 0, 2, 3)
+            ret = a2a(back)
+            res = ret.at[dr, ds, pos].get(mode="fill", fill_value=0.0)  # [a,D]
+            wgt = (gate_f * valid).astype(res.dtype)[:, None]
+            yk = jnp.zeros((tc, D), res.dtype).at[src].add(res * wgt)
+            return 0, yk
+
+        xs = (x_loc.reshape(n_chunks, tc, D), gates.reshape(n_chunks, tc, k),
+              drank.reshape(n_chunks, tc, k), dslot.reshape(n_chunks, tc, k))
+        _, y = jax.lax.scan(chunk_step, 0, xs)
+        y = y.reshape(T_loc, D)
+
+        if shared_l:
+            sw1, sw3, sw2 = shared_l[0]
+            y = y + (jax.nn.silu(x_loc @ sw1) * (x_loc @ sw3)) @ sw2
+
+        if mesh.tp > 1:
+            y = jax.lax.psum(y, "model")
+        # sum counts over the axes tokens are actually sharded on
+        bp = batch_part if batch_part is not None else ()
+        bp = (bp,) if isinstance(bp, str) else tuple(bp)
+        axes = tuple(ax for ax in bp if mesh.size(ax) > 1)
+        if axes:
+            counts = jax.lax.psum(counts, axes)
+        return y, counts
+
+    args = (x, router_w, w1, w3, w2, tables) + ((shared,) if shared is not None else ())
+    return jax.shard_map(body, mesh=mesh.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(*args)
+
+
+# ----------------------------------------------------------------------
+# Dense oracle (tests / reference): canonical expert weights [E, D, Fe].
+def moe_ffn_dense(cfg: ModelConfig, x, router_w, ew1, ew3, ew2, shared=None):
+    gates, eidx, _ = router(cfg, x, router_w)
+    E = cfg.moe.n_experts
+    gmat = jnp.zeros((x.shape[0], E), jnp.float32)
+    gmat = gmat.at[jnp.arange(x.shape[0])[:, None], eidx].add(gates)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for e in range(E):
+        h = jax.nn.silu(x @ ew1[e]) * (x @ ew3[e])
+        y = y + gmat[:, e:e + 1] * (h @ ew2[e]).astype(jnp.float32)
+    if shared is not None:
+        sw1, sw3, sw2 = shared
+        y = y + ((jax.nn.silu(x @ sw1) * (x @ sw3)) @ sw2).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def slots_from_canonical(canonical, slot_expert):
+    """canonical [E, ...] + slot_expert [R, s] → slot weights [R, s, ...]."""
+    se = jnp.asarray(slot_expert)
+    w = canonical[jnp.clip(se, 0, canonical.shape[0] - 1)]
+    mask = (se >= 0).astype(w.dtype)
+    return w * mask.reshape(se.shape + (1,) * (w.ndim - 2))

@@ -1,0 +1,103 @@
+"""Mamba-2 SSD (state-space duality) block — chunked prefill + O(1) decode.
+
+Follows the SSD chunked algorithm of Dao & Gu (arXiv:2405.21060): intra-chunk
+quadratic ("attention-like") term + inter-chunk linear recurrence carried by a
+scan over chunks. Pure jnp einsums (TPU MXU-friendly); the Pallas variant of
+the intra-chunk matmul lives in kernels/ (optional).
+
+Shapes: x [B, S, Hm, Pm], dt [B, S, Hm], B/C mats [B, S, N] (single group).
+State [B, Hm, Pm, N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(a):
+    """log-decay lower-triangular matrix: out[..., i, j] = sum_{k=j+1..i} a[...,k]
+    for i >= j, -inf otherwise. a: [..., Q]."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Returns (y [B,S,Hm,Pm], final_state [B,Hm,Pm,N])."""
+    Bsz, S, Hm, Pm = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    C = S // Q
+
+    f32 = jnp.float32
+    xq = x.reshape(Bsz, C, Q, Hm, Pm).astype(f32)
+    dtq = dt.reshape(Bsz, C, Q, Hm).astype(f32)
+    Bq = Bm.reshape(Bsz, C, Q, N).astype(f32)
+    Cq = Cm.reshape(Bsz, C, Q, N).astype(f32)
+
+    dA = dtq * A.astype(f32)[None, None, None, :]          # [B,C,Q,Hm]
+    dA_cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+
+    # ---- intra-chunk (quadratic) term
+    L = jnp.exp(segsum(jnp.moveaxis(dA, 2, 3)))             # [B,C,Hm,Q,Q]
+    # scores[b,c,h,l,s] = C_l·B_s * L * dt_s
+    G = jnp.einsum("bcln,bcsn->bcls", Cq, Bq)               # [B,C,Q,Q]
+    M = G[:, :, None] * L * jnp.moveaxis(dtq, 2, 3)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", M, xq)
+
+    # ---- chunk states: S_c = sum_s exp(dA_end - dA_cs_s) * dt_s * B_s ⊗ x_s
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)     # [B,C,Q,Hm]
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bq, decay_states * dtq, xq)
+
+    # ---- inter-chunk recurrence over C chunks
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # [B,C,Hm]
+    if initial_state is None:
+        s0 = jnp.zeros((Bsz, Hm, Pm, N), dtype=f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def step(s_prev, inp):
+        st, dec = inp                                        # [B,Hm,Pm,N], [B,Hm]
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    final, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # [B,C,Hm,Pm,N]
+
+    # ---- inter-chunk output: y_off = C_l · (exp(dA_cs_l) * S_prev)
+    state_decay = jnp.exp(dA_cs)                             # [B,C,Q,Hm]
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cq, s_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, S, Hm, Pm)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """One-token state update. x [B,Hm,Pm], dt [B,Hm], Bm/Cm [B,N].
+    Returns (y [B,Hm,Pm], new_state [B,Hm,Pm,N])."""
+    f32 = jnp.float32
+    x32, dt32 = x.astype(f32), dt.astype(f32)
+    dA = jnp.exp(dt32 * A.astype(f32)[None, :])              # [B,Hm]
+    upd = jnp.einsum("bn,bh,bhp->bhpn", Bm.astype(f32), dt32, x32)
+    new_state = state.astype(f32) * dA[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(f32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv(x, w, cache=None):
+    """Causal depthwise conv, width cw. x [B,S,Cd], w [cw,Cd].
+    cache [B, cw-1, Cd] of previous inputs (decode) or None (prefill).
+    Returns (y [B,S,Cd], new_cache [B, cw-1, Cd])."""
+    cw = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(cw))
+    new_cache = xp[:, xp.shape[1] - (cw - 1):]
+    return y, new_cache

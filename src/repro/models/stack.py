@@ -1,0 +1,497 @@
+"""Layer-stack engine: periodized scan over heterogeneous layers.
+
+The per-layer spec sequence (attention/mamba × windowed × MoE × compressed) is
+decomposed into (period, n_repeats, remainder) — see ModelConfig.periodize —
+so compile time is O(period + remainder) while the stack scans over repeats.
+
+Params pytree:
+  {'period': (pos0_params, pos1_params, ...),   # leaves stacked [n_rep, ...]
+   'rem':    (params, ...)}                      # unstacked
+Caches mirror the same structure plus a scalar position.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.ctx import MeshCtx
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssd as ssd_mod
+from repro.models.common import ParamDef, rms_norm, stack_defs
+
+
+# ======================================================================
+@dataclass(frozen=True)
+class StackPlan:
+    period: tuple[LayerSpec, ...]
+    n_rep: int
+    rem: tuple[LayerSpec, ...]
+
+    @staticmethod
+    def from_config(cfg: ModelConfig, pattern: Optional[list[int]] = None) -> "StackPlan":
+        if pattern is None:
+            pattern = cfg.default_compression_pattern()
+        specs = cfg.layer_specs(pattern)
+        period, n_rep, rem = cfg.periodize(specs)
+        return StackPlan(tuple(period), n_rep, tuple(rem))
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.period) * self.n_rep + len(self.rem)
+
+    def all_specs(self) -> list[LayerSpec]:
+        return list(self.period) * self.n_rep + list(self.rem)
+
+
+def cache_window(cfg: ModelConfig, spec: LayerSpec) -> tuple[int, int]:
+    """(sink, recent) for this layer's KV cache; (0,0) → full cache."""
+    if spec.kind != "attn":
+        return (0, 0)
+    if spec.compressed:
+        return (cfg.omniattn.sink_tokens, cfg.omniattn.recent_tokens)
+    if spec.window > 0:
+        return (0, spec.window)
+    return (0, 0)
+
+
+# ======================================================================
+# Parameter schemas
+def _fs(cfg):      # FSDP axis for the "replicated big" param dim
+    return "data" if cfg.fsdp else None
+
+
+def attn_defs(cfg: ModelConfig) -> dict:
+    D, H, K, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    fs, dt = _fs(cfg), cfg.param_dtype
+    d = {
+        "ln_attn": ParamDef((D,), P(None), dtype=dt, ones=True),
+        "wq": ParamDef((D, H * h), P(fs, "model"), dtype=dt),
+        "wk": ParamDef((D, K * h), P(fs, "model"), dtype=dt),
+        "wv": ParamDef((D, K * h), P(fs, "model"), dtype=dt),
+        "wo": ParamDef((H * h, D), P("model", fs), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ParamDef((H * h,), P("model"), 0.0, dtype=dt)
+        d["bk"] = ParamDef((K * h,), P("model"), 0.0, dtype=dt)
+        d["bv"] = ParamDef((K * h,), P("model"), 0.0, dtype=dt)
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((h,), P(None), dtype=dt, ones=True)
+        d["k_norm"] = ParamDef((h,), P(None), dtype=dt, ones=True)
+    return d
+
+
+def mamba_defs(cfg: ModelConfig) -> dict:
+    D, ssm = cfg.d_model, cfg.ssm
+    d_in = ssm.expand * D
+    nh = d_in // ssm.head_dim
+    N, cw = ssm.d_state, ssm.conv_width
+    fs, dt = _fs(cfg), cfg.param_dtype
+    return {
+        "ln_attn": ParamDef((D,), P(None), dtype=dt, ones=True),
+        "w_z": ParamDef((D, d_in), P(fs, "model"), dtype=dt),
+        "w_x": ParamDef((D, d_in), P(fs, "model"), dtype=dt),
+        "w_bc": ParamDef((D, 2 * N), P(fs, None), dtype=dt),
+        "w_dt": ParamDef((D, nh), P(fs, "model"), dtype=dt),
+        "dt_bias": ParamDef((nh,), P("model"), 0.0, dtype=dt),
+        "conv_x": ParamDef((cw, d_in), P(None, "model"), dtype=dt),
+        "conv_bc": ParamDef((cw, 2 * N), P(None, None), dtype=dt),
+        "A_log": ParamDef((nh,), P("model"), dtype=dt, ones=True),
+        "D_skip": ParamDef((nh,), P("model"), dtype=dt, ones=True),
+        "ssm_norm": ParamDef((d_in,), P("model"), dtype=dt, ones=True),
+        "out_proj": ParamDef((d_in, D), P("model", fs), dtype=dt),
+    }
+
+
+def ffn_defs(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    fs, dt = _fs(cfg), cfg.param_dtype
+    return {
+        "ln_mlp": ParamDef((D,), P(None), dtype=dt, ones=True),
+        "w1": ParamDef((D, F), P(fs, "model"), dtype=dt),
+        "w3": ParamDef((D, F), P(fs, "model"), dtype=dt),
+        "w2": ParamDef((F, D), P("model", fs), dtype=dt),
+    }
+
+
+def moe_defs(cfg: ModelConfig, mesh: MeshCtx) -> dict:
+    D, m = cfg.d_model, cfg.moe
+    ep = mesh.ep
+    s = moe_mod.default_slot_count(cfg, ep)
+    dt = cfg.param_dtype
+    d = {
+        "ln_mlp": ParamDef((D,), P(None), dtype=dt, ones=True),
+        "router": ParamDef((D, m.n_experts), P(None, None), dtype="float32"),
+        "moe_w1": ParamDef((ep, s, D, m.d_ff_expert), P("data", None, None, "model"), dtype=dt),
+        "moe_w3": ParamDef((ep, s, D, m.d_ff_expert), P("data", None, None, "model"), dtype=dt),
+        "moe_w2": ParamDef((ep, s, m.d_ff_expert, D), P("data", None, "model", None), dtype=dt),
+    }
+    if m.n_shared_experts:
+        Fsh = m.n_shared_experts * m.d_ff_expert
+        d["shared_w1"] = ParamDef((D, Fsh), P(_fs(cfg), "model"), dtype=dt)
+        d["shared_w3"] = ParamDef((D, Fsh), P(_fs(cfg), "model"), dtype=dt)
+        d["shared_w2"] = ParamDef((Fsh, D), P("model", _fs(cfg)), dtype=dt)
+    return d
+
+
+def layer_defs(cfg: ModelConfig, mesh: MeshCtx, spec: LayerSpec) -> dict:
+    d = attn_defs(cfg) if spec.kind == "attn" else mamba_defs(cfg)
+    if spec.use_moe:
+        d.update(moe_defs(cfg, mesh))
+    elif cfg.d_ff > 0:
+        d.update(ffn_defs(cfg))
+    return d
+
+
+def stack_param_defs(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan) -> dict:
+    period = tuple(stack_defs(layer_defs(cfg, mesh, s), plan.n_rep) for s in plan.period)
+    rem = tuple(layer_defs(cfg, mesh, s) for s in plan.rem)
+    return {"period": period, "rem": rem}
+
+
+# ======================================================================
+# Cache schemas (ShapeDtypeStruct + PartitionSpec builders for the dry-run
+# and for real allocation in the serving engine).
+def layer_cache_shape(cfg: ModelConfig, mesh: MeshCtx, spec: LayerSpec, B: int,
+                      max_len: int) -> dict:
+    """Returns {name: (shape, spec)} for one layer's decode cache."""
+    bp = mesh.batch_part(B)
+    if spec.kind == "attn":
+        sink, recent = cache_window(cfg, spec)
+        W = (sink + recent) if (sink or recent) else max_len
+        K, h = cfg.n_kv_heads, cfg.head_dim
+        strat = attn_mod.decode_strategy(K, mesh.tp)
+        w_part = mesh.part_if("model", W) if strat == "wseq" else None
+        kv_part = "model" if strat == "kv" else None
+        sp = P(bp, w_part, kv_part, None)
+        return {"k": ((B, W, K, h), sp), "v": ((B, W, K, h), sp)}
+    ssm = cfg.ssm
+    d_in = ssm.expand * cfg.d_model
+    nh = d_in // ssm.head_dim
+    return {
+        "state": ((B, nh, ssm.head_dim, ssm.d_state),
+                  P(bp, mesh.part_if("model", nh), None, None)),
+        "conv_x": ((B, ssm.conv_width - 1, d_in),
+                   P(bp, None, mesh.part_if("model", d_in))),
+        "conv_bc": ((B, ssm.conv_width - 1, 2 * ssm.d_state), P(bp, None, None)),
+    }
+
+
+def cache_struct(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, B: int,
+                 max_len: int, dtype=None):
+    """(ShapeDtypeStruct pytree, PartitionSpec pytree) for the full cache."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    def one(spec: LayerSpec, stacked: bool):
+        shapes = layer_cache_shape(cfg, mesh, spec, B, max_len)
+        sds, sps = {}, {}
+        for name, (shp, sp) in shapes.items():
+            dt = jnp.float32 if name == "state" else dtype
+            if stacked:
+                shp = (plan.n_rep,) + shp
+                sp = P(*((None,) + tuple(sp)))
+            sds[name] = jax.ShapeDtypeStruct(shp, dt)
+            sps[name] = sp
+        return sds, sps
+    period = [one(s, True) for s in plan.period]
+    rem = [one(s, False) for s in plan.rem]
+    sds = {"period": tuple(p[0] for p in period), "rem": tuple(r[0] for r in rem),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    sps = {"period": tuple(p[1] for p in period), "rem": tuple(r[1] for r in rem),
+           "pos": P()}
+    return sds, sps
+
+
+def alloc_cache(cfg, mesh, plan, B, max_len, dtype=None):
+    sds, _ = cache_struct(cfg, mesh, plan, B, max_len, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+
+# ======================================================================
+def unstack_params(plan: StackPlan, params: dict) -> list[dict]:
+    """Stack params → flat per-layer list (layer order)."""
+    layers = []
+    for r in range(plan.n_rep):
+        for i in range(len(plan.period)):
+            layers.append(jax.tree.map(lambda x: x[r], params["period"][i]))
+    layers.extend(params["rem"])
+    return layers
+
+
+def restack_params(plan: StackPlan, layers: list[dict]) -> dict:
+    """Flat per-layer list → stack params for `plan`."""
+    p = len(plan.period)
+    period = []
+    for i in range(p):
+        entries = [layers[r * p + i] for r in range(plan.n_rep)]
+        period.append(jax.tree.map(lambda *xs: jnp.stack(xs), *entries))
+    rem = tuple(layers[plan.n_rep * p:])
+    return {"period": tuple(period), "rem": rem}
+
+
+def regroup_params(params: dict, plan_from: StackPlan, plan_to: StackPlan) -> dict:
+    """Convert stack params between periodizations (e.g. to serve a model
+    under a different OmniAttn pattern than it was built with). Weights are
+    pattern-independent; only the scan grouping changes."""
+    if plan_from == plan_to:
+        return params
+    if plan_from.n_layers != plan_to.n_layers:
+        raise ValueError("layer count mismatch")
+    return restack_params(plan_to, unstack_params(plan_from, params))
+
+
+# ======================================================================
+# Layer application
+def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
+                  mode: str, positions, cache, max_len: int, batch_part,
+                  true_len=None):
+    B = x.shape[0]
+    H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    hid = rms_norm(x, p["ln_attn"], cfg.rms_eps).astype(cd)
+    q = hid @ p["wq"]
+    k = hid @ p["wk"]
+    v = hid @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    S = x.shape[1]
+    q = q.reshape(B, S, H, h)
+    k = k.reshape(B, S, K, h)
+    v = v.reshape(B, S, K, h)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q = attn_mod.apply_rope(q, positions, cfg.rope_theta)
+    k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+    sink, recent = cache_window(cfg, spec)
+
+    use_pallas = cfg.use_pallas and mesh.tp == 1
+    new_cache = None
+    if mode == "decode":
+        pos = jnp.asarray(positions)
+        t = pos[:, 0] if pos.ndim == 2 else (pos[0] if pos.ndim == 1 else pos)
+        kc, vc = attn_mod.cache_write(cache["k"], cache["v"], k[:, 0], v[:, 0], t,
+                                      sink=sink, recent=recent)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.attention_decode_op(q[:, 0], kc, vc, t + 1)
+        else:
+            strat = attn_mod.decode_strategy(K, mesh.tp)
+            out = attn_mod.decode_attention(q[:, 0], kc, vc, t + 1, mesh=mesh,
+                                            strategy=strat, batch_part=batch_part)
+        y = out.reshape(B, 1, H * h)
+        new_cache = {"k": kc, "v": vc}
+    elif use_pallas:
+        from repro.kernels import ops as kops
+        window = spec.window
+        use_sink = 0
+        if spec.compressed and cfg.prefill_sparse:
+            window, use_sink = recent, sink
+        out = kops.attention_prefill_op(q, k, v, causal=cfg.causal,
+                                        window=window, sink=use_sink)
+        y = out.reshape(B, S, H * h)
+        if mode == "prefill":
+            if sink or recent:
+                kc, vc = attn_mod.compress_prefill_kv(k, v, sink=sink,
+                                                      recent=recent,
+                                                      true_len=true_len)
+            else:
+                pad = max_len - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {"k": kc, "v": vc}
+    else:
+        window = spec.window
+        use_sink = 0
+        if spec.compressed and cfg.prefill_sparse:
+            window, use_sink = recent, sink
+        out = attn_mod.chunked_attention(
+            q, k, v, causal=cfg.causal, window=window, sink=use_sink,
+            q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk, mesh=mesh,
+            strategy=attn_mod.prefill_strategy(H, K, mesh.tp),
+            batch_part=batch_part,
+            skip_masked_chunks=cfg.attn_skip_masked_chunks,
+            fp32_scores=cfg.attn_fp32_scores,
+            qseq_out_constraint=cfg.attn_qseq_out_constraint)
+        y = out.reshape(B, S, H * h)
+        if mode == "prefill":
+            if sink or recent:
+                kc, vc = attn_mod.compress_prefill_kv(k, v, sink=sink,
+                                                      recent=recent,
+                                                      true_len=true_len)
+            else:
+                pad = max_len - S
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {"k": kc, "v": vc}
+    y = (y @ p["wo"]).astype(x.dtype)
+    return x + y, new_cache
+
+
+def mamba_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, mode: str,
+                   cache, batch_part, true_len=None):
+    B, S, D = x.shape
+    ssm = cfg.ssm
+    d_in = ssm.expand * D
+    nh = d_in // ssm.head_dim
+    N = ssm.d_state
+    cd = jnp.dtype(cfg.compute_dtype)
+    hid = rms_norm(x, p["ln_attn"], cfg.rms_eps).astype(cd)
+    z = hid @ p["w_z"]
+    xin = hid @ p["w_x"]
+    bc = hid @ p["w_bc"]
+    dt_raw = hid @ p["w_dt"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    cx_cache = cache["conv_x"] if cache is not None else None
+    cbc_cache = cache["conv_bc"] if cache is not None else None
+    xin_pre, bc_pre = xin, bc               # pre-conv (cache rows live here)
+    xin, new_cx = ssd_mod.causal_conv(xin, p["conv_x"], cx_cache)
+    bc, new_cbc = ssd_mod.causal_conv(bc, p["conv_bc"], cbc_cache)
+    xin = jax.nn.silu(xin)
+    bc = jax.nn.silu(bc)
+    if true_len is not None and mode != "decode":
+        # right-padded prefill: dt=0 beyond true_len freezes the SSD state
+        # (decay exp(0)=1, update 0); x masked for the D_skip term.
+        live = (jnp.arange(S) < true_len)
+        dt = dt * live[None, :, None]
+        xin = xin * live[None, :, None].astype(xin.dtype)
+        # conv caches hold the last conv_width-1 REAL pre-conv inputs
+        cw = ssm.conv_width
+        pad_x = jnp.pad(xin_pre, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_cx = jax.lax.dynamic_slice_in_dim(pad_x, true_len, cw - 1, axis=1)
+        pad_bc = jnp.pad(bc_pre, ((0, 0), (cw - 1, 0), (0, 0)))
+        new_cbc = jax.lax.dynamic_slice_in_dim(pad_bc, true_len, cw - 1, axis=1)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+
+    xh = xin.reshape(B, S, nh, ssm.head_dim)
+    xh = mesh.constrain(xh, P(batch_part, None, "model", None))
+    if mode == "decode":
+        y1, new_state = ssd_mod.ssd_decode_step(cache["state"], xh[:, 0], dt[:, 0],
+                                                A, Bm[:, 0], Cm[:, 0])
+        y = y1[:, None]
+    else:
+        init = cache["state"] if cache is not None else None
+        y, new_state = ssd_mod.ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk, init)
+    y = y + xh.astype(y.dtype) * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(y.dtype)), p["ssm_norm"], cfg.rms_eps)
+    out = (y.astype(cd) @ p["out_proj"]).astype(x.dtype)
+    if mesh.tp > 1:
+        out = mesh.constrain(out, P(batch_part, None, None))
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"state": new_state.astype(jnp.float32), "conv_x": new_cx,
+                     "conv_bc": new_cbc}
+    return x + out, new_cache
+
+
+def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
+                 batch_part):
+    """Returns (x, moe_counts or None)."""
+    B, S, D = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    if not spec.use_moe and cfg.d_ff == 0:
+        return x, None
+    hid = rms_norm(x, p["ln_mlp"], cfg.rms_eps).astype(cd)
+    if spec.use_moe:
+        flat = hid.reshape(B * S, D)
+        shared = None
+        if cfg.moe.n_shared_experts:
+            shared = (p["shared_w1"], p["shared_w3"], p["shared_w2"])
+        tables = p["_tables"]
+        y, counts = moe_mod.moe_ffn(mesh, cfg, flat, p["router"], p["moe_w1"],
+                                    p["moe_w3"], p["moe_w2"], tables, shared,
+                                    batch_part=batch_part)
+        y = y.reshape(B, S, D)
+        return x + y.astype(x.dtype), counts
+    h1 = jax.nn.silu(hid @ p["w1"]) * (hid @ p["w3"])
+    y = (h1 @ p["w2"]).astype(x.dtype)
+    y = mesh.constrain(y, P(batch_part, None, None))
+    return x + y, None
+
+
+def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
+                cache, max_len, batch_part, true_len=None):
+    if spec.kind == "attn":
+        x, nc = attn_sublayer(cfg, mesh, p, x, spec=spec, mode=mode,
+                              positions=positions, cache=cache, max_len=max_len,
+                              batch_part=batch_part, true_len=true_len)
+    else:
+        x, nc = mamba_sublayer(cfg, mesh, p, x, mode=mode, cache=cache,
+                               batch_part=batch_part, true_len=true_len)
+    x, counts = ffn_sublayer(cfg, mesh, p, x, spec=spec, batch_part=batch_part)
+    x = mesh.constrain(x, P(batch_part, None, None))
+    return x, nc, counts
+
+
+# ======================================================================
+def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
+                x, *, mode: str, positions, caches=None, max_len: int = 0,
+                batch_part=None, tables=None, true_len=None):
+    """Run the full layer stack.
+
+    tables: MoE placement tables dict (injected into layer params as '_tables').
+    Returns (x, new_caches | None, aux dict with per-layer MoE counts).
+    """
+    def with_tables(p):
+        if tables is not None and any(k.startswith("moe_") for k in p):
+            p = dict(p)
+            p["_tables"] = tables
+        return p
+
+    has_cache = caches is not None
+    period_caches = caches["period"] if has_cache else tuple(None for _ in plan.period)
+
+    def body(carry, xs):
+        h = carry
+        p_slices = xs[0]
+        c_slices = xs[1] if has_cache else tuple(None for _ in plan.period)
+        new_cs, counts = [], []
+        for i, spec in enumerate(plan.period):
+            h, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(p_slices[i]), h,
+                                     mode=mode, positions=positions,
+                                     cache=c_slices[i], max_len=max_len,
+                                     batch_part=batch_part, true_len=true_len)
+            if nc is not None:
+                new_cs.append(nc)
+            if cnt is not None:
+                counts.append(cnt)
+        return h, (tuple(new_cs), tuple(counts))
+
+    if cfg.remat and mode == "train":
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    xs = (params["period"], period_caches) if has_cache else (params["period"],)
+    if plan.n_rep > 0 and plan.period:
+        x, (new_period_caches, period_counts) = jax.lax.scan(body, x, xs)
+    else:
+        new_period_caches, period_counts = (), ()
+
+    new_rem_caches, rem_counts = [], []
+    rem_caches = caches["rem"] if has_cache else tuple(None for _ in plan.rem)
+    for i, spec in enumerate(plan.rem):
+        x, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(params["rem"][i]), x,
+                                 mode=mode, positions=positions,
+                                 cache=rem_caches[i], max_len=max_len,
+                                 batch_part=batch_part, true_len=true_len)
+        if nc is not None:
+            new_rem_caches.append(nc)
+        if cnt is not None:
+            rem_counts.append(cnt)
+
+    new_caches = None
+    if mode in ("prefill", "decode"):
+        new_pos = jnp.max(jnp.asarray(positions)) + 1
+        new_caches = {"period": new_period_caches, "rem": tuple(new_rem_caches),
+                      "pos": jnp.asarray(new_pos, jnp.int32)}
+    aux = {"period_counts": period_counts, "rem_counts": tuple(rem_counts)}
+    return x, new_caches, aux

@@ -1,0 +1,4 @@
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.server import Server, ServerConfig
+
+__all__ = ["DecodeEngine", "PrefillEngine", "Server", "ServerConfig"]

@@ -1,0 +1,172 @@
+"""In-process serving engines (CPU-real, small models): batched decode with
+slot-dense caches + per-request positions, single-request prefill with KV
+handoff — the execution layer under OmniProxy.
+
+PD disaggregation: PrefillEngine produces a B=1 cache pytree; DecodeEngine
+admits it into a free slot of its slot-dense cache (the "KV transfer" — an
+array copy in-process; bytes are metered for the transfer-cost model).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LM
+from repro.models.stack import alloc_cache
+from repro.serving.kvpool import KVPool
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def kv_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+@dataclass
+class PrefillEngine:
+    lm: LM
+    params: dict
+    tables: Optional[dict]
+    max_len: int
+    cache_exact: dict = field(default_factory=dict)   # full-prompt APC reuse
+    cache_cap: int = 32
+    stats: dict = field(default_factory=lambda: {"prefills": 0, "cache_hits": 0,
+                                                 "tokens": 0, "busy_s": 0.0})
+
+    def __post_init__(self):
+        self._fn = jax.jit(self._prefill, static_argnames=())
+
+    def _prefill(self, params, tokens, true_len, tables):
+        batch = {"tokens": tokens}
+        cache, logits, _ = self.lm.prefill(params, batch, max_len=self.max_len,
+                                           tables=tables, true_len=true_len)
+        return cache, logits
+
+    def process(self, prompt: tuple) -> tuple:
+        """→ (cache B=1, first_token:int, elapsed_s). Exact-prefix APC reuse.
+        Prompts are right-padded to pow2 buckets (one compile per bucket);
+        true_len keeps the cache/logits exact."""
+        t0 = time.monotonic()
+        key = tuple(prompt)
+        if key in self.cache_exact:
+            self.stats["cache_hits"] += 1
+            cache, logits = self.cache_exact[key]
+        else:
+            S = len(prompt)
+            pad = min(_bucket(S), self.max_len) - S
+            toks = jnp.asarray([list(prompt) + [0] * pad], jnp.int32)
+            cache, logits = self._fn(self.params, toks, jnp.int32(S),
+                                     self.tables)
+            if len(self.cache_exact) < self.cache_cap:
+                self.cache_exact[key] = (cache, logits)
+            self.stats["prefills"] += 1
+            self.stats["tokens"] += S
+        first = int(jnp.argmax(logits[0]))
+        dt = time.monotonic() - t0
+        self.stats["busy_s"] += dt
+        return cache, first, dt
+
+
+@dataclass
+class DecodeEngine:
+    lm: LM
+    params: dict
+    tables: Optional[dict]
+    n_slots: int
+    max_len: int
+    hbm_budget_bytes: int = 1 << 34
+    stats: dict = field(default_factory=lambda: {
+        "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
+        "moe_counts": None})
+
+    def __post_init__(self):
+        cfg = self.lm.cfg
+        self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan, self.n_slots,
+                                 self.max_len)
+        per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
+        self.pool = KVPool(n_blocks=max(self.hbm_budget_bytes // max(per_slot, 1),
+                                        self.n_slots) * 4, block_size=16)
+        self.free = list(range(self.n_slots))
+        self.slot_rid: dict[int, int] = {}
+        self.pos = np.zeros(self.n_slots, np.int32)
+        self.cur_tok = np.zeros(self.n_slots, np.int32)
+        self.active = np.zeros(self.n_slots, bool)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _insert_impl(self, cache_all, cache_one, slot):
+        def ins2(a, o):
+            # period/rem cache leaves: [n_rep, B, ...] ← [n_rep, 1, ...]
+            return a.at[:, slot].set(o[:, 0])
+        new = {"period": jax.tree.map(ins2, cache_all["period"], cache_one["period"]),
+               "rem": jax.tree.map(ins2, cache_all["rem"], cache_one["rem"]),
+               "pos": cache_all["pos"]}
+        return new
+
+    def _step_impl(self, params, cache, tokens, positions, tables):
+        new_cache, logits, _ = self.lm.decode(params, cache, tokens, positions,
+                                              tables=tables)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return new_cache, next_tok
+
+    # ------------------------------------------------------------------
+    def has_capacity(self) -> bool:
+        return len(self.free) > 0
+
+    def admit(self, rid: int, cache_one, first_token: int, prompt_len: int) -> bool:
+        if not self.free:
+            return False
+        if not self.pool.allocate(rid, prompt_len + 1):
+            return False
+        slot = self.free.pop()
+        self.cache = self._insert(self.cache, cache_one, slot)
+        self.stats["kv_transfer_bytes"] += kv_bytes(cache_one)
+        self.slot_rid[slot] = rid
+        self.pos[slot] = prompt_len
+        self.cur_tok[slot] = first_token
+        self.active[slot] = True
+        return True
+
+    def step(self) -> dict[int, int]:
+        """One batched decode step → {rid: next_token} for active slots."""
+        if not self.slot_rid:
+            return {}
+        t0 = time.monotonic()
+        toks = jnp.asarray(self.cur_tok[:, None])
+        pos = jnp.asarray(self.pos[:, None])
+        self.cache, next_tok = self._step(self.params, self.cache, toks, pos,
+                                          self.tables)
+        next_np = np.asarray(next_tok)
+        out = {}
+        for slot, rid in list(self.slot_rid.items()):
+            out[rid] = int(next_np[slot])
+            self.pool.extend(rid, int(self.pos[slot]) + 1, int(self.pos[slot]) + 2)
+            self.pos[slot] += 1
+            self.cur_tok[slot] = next_np[slot]
+        dt = time.monotonic() - t0
+        self.stats["steps"] += 1
+        self.stats["tokens"] += len(out)
+        self.stats["busy_s"] += dt
+        return out
+
+    def release(self, rid: int):
+        for slot, r in list(self.slot_rid.items()):
+            if r == rid:
+                del self.slot_rid[slot]
+                self.active[slot] = False
+                self.free.append(slot)
+                self.pool.release(rid)
+                return

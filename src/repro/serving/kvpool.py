@@ -1,0 +1,54 @@
+"""Block-quantized KV accounting (vLLM-style paged allocator, host side).
+
+The jit'd decode step operates on slot-dense caches; this allocator performs
+admission control and prefix-reuse accounting in block units so the engine
+refuses work that would exceed HBM — the part of PagedAttention that matters
+for scheduling fidelity. Prefix-cache hits (via the proxy radix tree) are
+credited as already-resident blocks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class KVPool:
+    n_blocks: int
+    block_size: int = 16
+    free_blocks: int = field(init=False)
+    per_request: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.free_blocks = self.n_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_admit(self, n_tokens: int, cached_tokens: int = 0) -> bool:
+        need = self.blocks_for(n_tokens) - self.blocks_for(cached_tokens)
+        return need <= self.free_blocks
+
+    def allocate(self, rid: int, n_tokens: int, cached_tokens: int = 0) -> bool:
+        need = max(self.blocks_for(n_tokens) - self.blocks_for(cached_tokens), 0)
+        if need > self.free_blocks:
+            return False
+        self.free_blocks -= need
+        self.per_request[rid] = self.per_request.get(rid, 0) + need
+        return True
+
+    def extend(self, rid: int, old_tokens: int, new_tokens: int) -> bool:
+        need = self.blocks_for(new_tokens) - self.blocks_for(old_tokens)
+        if need <= 0:
+            return True
+        if need > self.free_blocks:
+            return False
+        self.free_blocks -= need
+        self.per_request[rid] = self.per_request.get(rid, 0) + need
+        return True
+
+    def release(self, rid: int):
+        self.free_blocks += self.per_request.pop(rid, 0)
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.free_blocks / max(self.n_blocks, 1)

@@ -1,0 +1,6 @@
+from repro.sim.cluster import ClusterSim, SimConfig
+from repro.sim.hardware import AscendNodeModel, DeepSeekR1Model
+from repro.sim.workload import WorkloadConfig, closed_loop_requests
+
+__all__ = ["ClusterSim", "SimConfig", "AscendNodeModel", "DeepSeekR1Model",
+           "WorkloadConfig", "closed_loop_requests"]

@@ -1,0 +1,4 @@
+from repro.training.optim import adamw_init, adamw_update, opt_specs
+from repro.training.trainer import TrainState, make_train_step
+
+__all__ = ["adamw_init", "adamw_update", "opt_specs", "TrainState", "make_train_step"]

@@ -1,0 +1,57 @@
+"""AdamW in pure JAX (no optax): m/v moments follow the parameter sharding,
+with configurable moment dtype (bf16 for ≥300B archs — see configs)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, dtype="float32"):
+    dt = jnp.dtype(dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_specs(param_spec_tree):
+    """Optimizer-state PartitionSpecs mirror the parameter specs."""
+    from jax.sharding import PartitionSpec as P
+    return {"m": param_spec_tree, "v": param_spec_tree, "step": P()}
+
+
+def adamw_update(grads, opt, params, *, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=1.0):
+    step = opt["step"] + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+    else:
+        gnorm = jnp.zeros(())
+        scale = 1.0
+
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p32)
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    res = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = jax.tree.unflatten(treedef, [r[0] for r in res])
+    new_m = jax.tree.unflatten(treedef, [r[1] for r in res])
+    new_v = jax.tree.unflatten(treedef, [r[2] for r in res])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, gnorm

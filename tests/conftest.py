@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override lives ONLY in launch/dryrun.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    from repro.distributed.ctx import local_mesh_ctx
+    return local_mesh_ctx()

@@ -1,0 +1,145 @@
+"""Chunked attention vs dense reference; cache semantics; hypothesis sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.ctx import local_mesh_ctx
+from repro.models import attention as A
+
+MESH = local_mesh_ctx()
+
+
+def dense_ref(q, k, v, causal, window=0, sink=0):
+    B, S, H, h = q.shape
+    K = k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2)
+    vr = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(h)
+    qp, kp = jnp.arange(S)[:, None], jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        w = (qp - kp) < window
+        if sink:
+            w |= kp < sink
+        mask &= w
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    S=st.sampled_from([16, 32, 64]),
+    H=st.sampled_from([2, 4, 6]),
+    K=st.sampled_from([1, 2]),
+    causal=st.booleans(),
+    window=st.sampled_from([0, 8, 24]),
+    qc=st.sampled_from([8, 16, 64]),
+    kc=st.sampled_from([8, 32]),
+)
+def test_chunked_matches_dense(S, H, K, causal, window, qc, kc):
+    if H % K:
+        H = K * (H // K + 1)
+    rng = jax.random.PRNGKey(S * 1000 + H * 100 + K)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    q = jax.random.normal(r1, (2, S, H, 32), jnp.float32)
+    k = jax.random.normal(r2, (2, S, K, 32), jnp.float32)
+    v = jax.random.normal(r3, (2, S, K, 32), jnp.float32)
+    out = A.chunked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=qc, kv_chunk=kc, mesh=MESH)
+    ref = dense_ref(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sink_window_mask():
+    rng = jax.random.PRNGKey(0)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    q = jax.random.normal(r1, (1, 64, 4, 32))
+    k = jax.random.normal(r2, (1, 64, 4, 32))
+    v = jax.random.normal(r3, (1, 64, 4, 32))
+    out = A.chunked_attention(q, k, v, causal=True, window=16, sink=8,
+                              q_chunk=16, kv_chunk=16, mesh=MESH)
+    ref = dense_ref(q, k, v, True, 16, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,sink", [(0, 0), (24, 0), (24, 8), (40, 16)])
+def test_skip_masked_chunks_equivalent(window, sink):
+    """Static block skipping (causal / window / sink) ≡ full masked scan."""
+    rng = jax.random.PRNGKey(1)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    q = jax.random.normal(r1, (1, 128, 4, 32))
+    k = jax.random.normal(r2, (1, 128, 2, 32))
+    v = jax.random.normal(r3, (1, 128, 2, 32))
+    a = A.chunked_attention(q, k, v, causal=True, window=window, sink=sink,
+                            q_chunk=32, kv_chunk=32, mesh=MESH,
+                            skip_masked_chunks=False)
+    b = A.chunked_attention(q, k, v, causal=True, window=window, sink=sink,
+                            q_chunk=32, kv_chunk=32, mesh=MESH,
+                            skip_masked_chunks=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+def test_ring_slot_layout():
+    sink, recent = 4, 8
+    # before wrap: identity
+    for t in range(sink + recent):
+        assert int(A.ring_slot(jnp.int32(t), sink, recent)) == t
+    # after wrap: ring over [sink, sink+recent)
+    assert int(A.ring_slot(jnp.int32(12), sink, recent)) == 4
+    assert int(A.ring_slot(jnp.int32(19), sink, recent)) == 11
+    assert int(A.ring_slot(jnp.int32(20), sink, recent)) == 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(8, 48), sink=st.sampled_from([0, 2, 4]),
+       recent=st.sampled_from([4, 8, 16]))
+def test_compress_prefill_matches_sequential_writes(S, sink, recent):
+    """Compressed prefill cache == writing tokens one-by-one into the ring."""
+    rng = jax.random.PRNGKey(S)
+    k = jax.random.normal(rng, (1, S, 2, 8))
+    v = k + 1
+    kc, vc = A.compress_prefill_kv(k, v, sink=sink, recent=recent)
+    W = sink + recent
+    k_seq = jnp.zeros((1, W, 2, 8))
+    v_seq = jnp.zeros((1, W, 2, 8))
+    for t in range(S):
+        k_seq, v_seq = A.cache_write(k_seq, v_seq, k[:, t], v[:, t],
+                                     jnp.int32(t), sink=sink, recent=recent)
+    occ = min(S, W)
+    np.testing.assert_allclose(np.asarray(kc[:, :occ]),
+                               np.asarray(k_seq[:, :occ]), rtol=1e-6)
+
+
+def test_decode_attention_matches_dense(mesh1):
+    rng = jax.random.PRNGKey(3)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    B, W, H, K, h = 2, 32, 4, 2, 16
+    q = jax.random.normal(r1, (B, H, h))
+    kc = jax.random.normal(r2, (B, W, K, h))
+    vc = jax.random.normal(r3, (B, W, K, h))
+    t = jnp.int32(20)
+    out = A.decode_attention(q, kc, vc, t, mesh=mesh1, strategy="kv")
+    kr = jnp.repeat(kc[:, :20], 2, axis=2)
+    vr = jnp.repeat(vc[:, :20], 2, axis=2)
+    s = jnp.einsum("bhd,bwhd->bhw", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / np.sqrt(h)
+    ref = jnp.einsum("bhw,bwhd->bhd", jax.nn.softmax(s, -1),
+                     vr.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+    # per-request t vector
+    tv = jnp.array([20, 7])
+    out_v = A.decode_attention(q, kc, vc, tv, mesh=mesh1, strategy="kv")
+    np.testing.assert_allclose(np.asarray(out_v[0]), np.asarray(out[0]),
+                               rtol=1e-6)

@@ -1,0 +1,93 @@
+"""Config registry: all 10 assigned architectures + periodization invariants."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, reduced_config
+
+EXPECTED = {
+    "qwen2-1.5b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                       d_ff=8960, vocab_size=151936),
+    "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, n_kv_heads=8,
+                      d_ff=25600, vocab_size=151936),
+    "gemma3-4b": dict(n_layers=34, d_model=2560, n_heads=8, n_kv_heads=4,
+                      d_ff=10240, vocab_size=262144),
+    "granite-34b": dict(n_layers=88, d_model=6144, n_heads=48, n_kv_heads=1,
+                        d_ff=24576, vocab_size=49152),
+    "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                 n_kv_heads=8, d_ff=24576, vocab_size=65536),
+    "qwen2-moe-a2.7b": dict(n_layers=24, d_model=2048, n_heads=16,
+                            n_kv_heads=16, d_ff=1408, vocab_size=151936),
+    "qwen3-moe-235b-a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                n_kv_heads=4, d_ff=1536, vocab_size=151936),
+    "mamba2-130m": dict(n_layers=24, d_model=768, vocab_size=50280),
+    "phi-3-vision-4.2b": dict(n_layers=32, d_model=3072, n_heads=32,
+                              n_kv_heads=32, d_ff=8192, vocab_size=32064),
+    "hubert-xlarge": dict(n_layers=48, d_model=1280, n_heads=16,
+                          n_kv_heads=16, d_ff=5120, vocab_size=504),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_periodize_reconstructs_stack(arch):
+    cfg = get_config(arch)
+    specs = cfg.layer_specs(cfg.default_compression_pattern())
+    period, n_rep, rem = cfg.periodize(specs)
+    assert list(period) * n_rep + list(rem) == specs
+    assert len(period) * n_rep + len(rem) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_moe_experts_counts(arch):
+    cfg = get_config(arch)
+    if arch == "qwen2-moe-a2.7b":
+        assert cfg.moe.n_experts == 60 and cfg.moe.top_k == 4
+        assert cfg.moe.n_shared_experts == 4
+    if arch == "qwen3-moe-235b-a22b":
+        assert cfg.moe.n_experts == 128 and cfg.moe.top_k == 8
+    if arch == "jamba-1.5-large-398b":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+        # 1:7 attention:mamba interleave
+        specs = cfg.layer_specs()
+        attn = sum(1 for s in specs if s.kind == "attn")
+        assert attn == cfg.n_layers // 8
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_scale(arch):
+    """n_params within 35% of the size implied by the arch name."""
+    sizes = {"qwen2-1.5b": 1.5e9, "qwen3-32b": 32e9, "gemma3-4b": 4e9,
+             "granite-34b": 34e9, "jamba-1.5-large-398b": 398e9,
+             "qwen2-moe-a2.7b": 14e9,       # A2.7B = *active* 2.7B, total ~14B
+             "qwen3-moe-235b-a22b": 235e9, "mamba2-130m": 130e6,
+             "phi-3-vision-4.2b": 4.2e9, "hubert-xlarge": 1e9}
+    n = get_config(arch).n_params()
+    assert 0.65 * sizes[arch] <= n <= 1.5 * sizes[arch], n
+
+
+def test_active_params_moe():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert 15e9 < cfg.n_active_params() < 30e9   # A22B
+    dense = get_config("qwen3-32b")
+    assert dense.n_active_params() == dense.n_params()
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_small(arch):
+    cfg = reduced_config(arch)
+    assert cfg.n_layers <= 16 and cfg.d_model <= 128
+    assert cfg.vocab_size <= 512

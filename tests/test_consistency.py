@@ -1,0 +1,170 @@
+"""System-level numerical consistency: prefill/decode equivalence (the core
+serving invariant), padded prefill, SSD vs naive recurrence, Pallas path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.models import LM
+from repro.models import ssd as S
+
+DECODER_ARCHS = [a for a in ARCH_IDS if not reduced_config(a).encoder_only]
+
+
+def _batchify(cfg, toks):
+    b = {"tokens": toks}
+    if cfg.family == "vlm":
+        b["patches"] = jnp.ones((toks.shape[0], cfg.num_patches,
+                                 cfg.frontend_dim), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_prefill_then_decode_matches_full_prefill(arch, mesh1):
+    cfg = reduced_config(arch).with_updates(compute_dtype="float32",
+                                            param_dtype="float32")
+    lm = LM.build(cfg, mesh1, pattern=[0] * cfg.n_layers)
+    params = lm.init(jax.random.PRNGKey(0))
+    tables = lm.default_tables()
+    B, Stok = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, Stok), 0,
+                              cfg.vocab_size)
+    _, logits_full, _ = lm.prefill(params, _batchify(cfg, toks),
+                                   max_len=48, tables=tables)
+    cache, _, _ = lm.prefill(params, _batchify(cfg, toks[:, :-1]),
+                             max_len=48, tables=tables)
+    pos = Stok - 1 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    _, logits_dec, _ = lm.decode(params, cache, toks[:, -1:],
+                                 jnp.int32(pos), tables=tables)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-130m", "gemma3-4b",
+                                  "jamba-1.5-large-398b"])
+def test_padded_prefill_equals_exact(arch, mesh1):
+    cfg = reduced_config(arch).with_updates(compute_dtype="float32",
+                                            param_dtype="float32")
+    lm = LM.build(cfg, mesh1)
+    params = lm.init(jax.random.PRNGKey(0))
+    tables = lm.default_tables()
+    S, Spad = 21, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, Spad), 0,
+                              cfg.vocab_size)
+    ce, le, _ = lm.prefill(params, {"tokens": toks[:, :S]}, max_len=64,
+                           tables=tables)
+    cp, lp, _ = lm.prefill(params, {"tokens": toks}, max_len=64,
+                           tables=tables, true_len=jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(le), rtol=2e-4,
+                               atol=2e-4)
+    _, d1, _ = lm.decode(params, ce, toks[:, S:S + 1], jnp.int32(S),
+                         tables=tables)
+    _, d2, _ = lm.decode(params, cp, toks[:, S:S + 1], jnp.int32(S),
+                         tables=tables)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d1), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_multi_token_greedy_continuation(mesh1):
+    """8 decode steps == prefilling the whole greedy sequence."""
+    cfg = reduced_config("qwen2-1.5b").with_updates(compute_dtype="float32",
+                                                    param_dtype="float32")
+    lm = LM.build(cfg, mesh1, pattern=[0] * cfg.n_layers)
+    params = lm.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab_size)
+    cache, logits, _ = lm.prefill(params, {"tokens": toks}, max_len=24)
+    seq = list(np.asarray(toks)[0])
+    for t in range(8):
+        nxt = int(jnp.argmax(logits[0]))
+        seq.append(nxt)
+        cache, logits, _ = lm.decode(params, cache,
+                                     jnp.asarray([[nxt]]), jnp.int32(8 + t))
+    # reference: prefill the WHOLE greedy sequence (16 tokens) — its last
+    # logits predict position 16, matching the final decode step's output
+    _, ref_logits, _ = lm.prefill(params,
+                                  {"tokens": jnp.asarray([seq])},
+                                  max_len=24)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------------------
+def ssd_naive(x, dt, A, Bm, Cm):
+    """Token-by-token recurrence oracle."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    state = jnp.zeros((Bsz, H, P, N))
+    ys = []
+    for t in range(S):
+        y, state = S_decode(state, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t])
+        ys.append(y)
+    return jnp.stack(ys, 1)
+
+
+def S_decode(state, x, dt, A, Bm, Cm):
+    from repro.models.ssd import ssd_decode_step
+    return ssd_decode_step(state, x, dt, A, Bm, Cm)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_naive_recurrence(chunk):
+    rng = jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 5)
+    Bsz, Sq, H, P, N = 2, 32, 3, 8, 4
+    x = jax.random.normal(ks[0], (Bsz, Sq, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, Sq, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bsz, Sq, N))
+    Cm = jax.random.normal(ks[4], (Bsz, Sq, N))
+    y, final = S.ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    y_ref = ssd_naive(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_state_continuation():
+    """final state from chunked == continuing the recurrence."""
+    rng = jax.random.PRNGKey(1)
+    ks = jax.random.split(rng, 5)
+    Bsz, Sq, H, P, N = 1, 16, 2, 4, 4
+    x = jax.random.normal(ks[0], (Bsz, Sq, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, Sq, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (Bsz, Sq, N))
+    Cm = jax.random.normal(ks[4], (Bsz, Sq, N))
+    _, s_half = S.ssd_chunked(x[:, :8], dt[:, :8], A, Bm[:, :8], Cm[:, :8], 4)
+    y2, s_full = S.ssd_chunked(x[:, 8:], dt[:, 8:], A, Bm[:, 8:], Cm[:, 8:],
+                               4, initial_state=s_half)
+    _, s_ref = S.ssd_chunked(x, dt, A, Bm, Cm, 4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_causal_conv_cache_roundtrip():
+    rng = jax.random.PRNGKey(2)
+    x = jax.random.normal(rng, (2, 12, 6))
+    w = jax.random.normal(jax.random.PRNGKey(3), (4, 6))
+    y_full, cache = S.causal_conv(x, w)
+    y_a, cache_a = S.causal_conv(x[:, :7], w)
+    y_b, _ = S.causal_conv(x[:, 7:], w, cache_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_matches_jnp(mesh1):
+    cfg = reduced_config("qwen2-1.5b").with_updates(compute_dtype="float32",
+                                                    param_dtype="float32")
+    lmA = LM.build(cfg, mesh1)
+    lmB = LM.build(cfg.with_updates(use_pallas=True), mesh1)
+    params = lmA.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    cA, lA, _ = lmA.prefill(params, {"tokens": toks}, max_len=40)
+    cB, lB, _ = lmB.prefill(params, {"tokens": toks}, max_len=40)
+    np.testing.assert_allclose(np.asarray(lB), np.asarray(lA), rtol=2e-4,
+                               atol=2e-4)
+    _, dA, _ = lmA.decode(params, cA, toks[:, :1], jnp.int32(32))
+    _, dB, _ = lmB.decode(params, cB, toks[:, :1], jnp.int32(32))
+    np.testing.assert_allclose(np.asarray(dB), np.asarray(dA), rtol=2e-4,
+                               atol=2e-4)

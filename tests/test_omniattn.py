@@ -1,0 +1,111 @@
+"""OmniAttn: fidelity properties + GA pattern search behavior."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced_config
+from repro.core.omniattn import (
+    GAConfig, PatternSearch, attention_fidelity, kv_bytes_for_pattern,
+    sink_recent_indices,
+)
+
+
+def test_sink_recent_indices_shape():
+    idx = sink_recent_indices(100, 8, 16)
+    assert len(idx) == 24
+    assert list(idx[:8]) == list(range(8))
+    assert list(idx[-16:]) == list(range(84, 100))
+    # degenerate: subset covers everything
+    assert len(sink_recent_indices(10, 8, 16)) == 10
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_fidelity_improves_with_budget(seed):
+    """More retained tokens → attention output error weakly decreases."""
+    rng = jax.random.PRNGKey(seed)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    M, d = 128, 32
+    q = jax.random.normal(r1, (4, d))
+    k = jax.random.normal(r2, (M, d))
+    v = jax.random.normal(r3, (M, d))
+    errs = [attention_fidelity(q, k, v, 4, n)["rel_err"]
+            for n in (8, 32, 124)]
+    assert errs[2] <= errs[0] + 1e-6
+    assert errs[2] < 1e-5                       # full coverage → exact
+
+
+def test_fidelity_with_sink_concentration():
+    """When attention mass sits on sinks+recents (the paper's premise), the
+    approximation is good even at small budgets."""
+    rng = jax.random.PRNGKey(0)
+    r1, r2, r3 = jax.random.split(rng, 3)
+    M, d = 256, 32
+    k = jax.random.normal(r2, (M, d)) * 0.05    # flat keys...
+    k = k.at[:4].add(2.0)                       # ...except strong sinks
+    k = k.at[-32:].add(1.0)                     # and recent emphasis
+    q = jax.random.normal(r1, (8, d)) + k[:4].mean(0) * 0.5
+    v = jax.random.normal(r3, (M, d))
+    out = attention_fidelity(q, k, v, 4, 32)
+    assert out["attn_mass"] > 0.6
+    assert out["rel_err"] < 0.35
+
+
+def test_kv_bytes_pattern_monotone():
+    cfg = get_config("qwen3-32b")
+    zero = kv_bytes_for_pattern(cfg, np.zeros(cfg.n_layers, np.int64), 32768)
+    full = kv_bytes_for_pattern(cfg, np.ones(cfg.n_layers, np.int64), 32768)
+    half = kv_bytes_for_pattern(
+        cfg, np.array([1, 0] * (cfg.n_layers // 2), np.int64), 32768)
+    assert full < half < zero
+    # compression only helps beyond the window
+    W = cfg.omniattn.sink_tokens + cfg.omniattn.recent_tokens
+    assert kv_bytes_for_pattern(cfg, np.ones(cfg.n_layers, np.int64), W) == \
+        kv_bytes_for_pattern(cfg, np.zeros(cfg.n_layers, np.int64), W)
+
+
+def test_ga_finds_feasible_compression():
+    """Synthetic evaluator: accuracy drops with compressed-layer count; GA
+    must find the largest feasible compression."""
+    cfg = reduced_config("qwen3-32b").with_updates(n_layers=8)
+
+    def evaluate(pattern):
+        return 1.0 - 0.02 * pattern.sum()       # 2% penalty per layer
+
+    ps = PatternSearch(cfg, evaluate, GAConfig(population=12, generations=12,
+                                               accuracy_tau=0.9, seed=0),
+                       seq_len=8192)
+    out = ps.run()
+    assert out["feasible"]
+    n = out["pattern"].sum()
+    assert 4 <= n <= 5          # τ=0.9 → at most 5 layers @ 2% each
+    assert out["kv_gain"] > 0.3
+
+
+def test_ga_respects_hard_accuracy():
+    cfg = reduced_config("qwen2-1.5b").with_updates(n_layers=6)
+
+    def evaluate(pattern):                      # any compression breaks it
+        return 1.0 if pattern.sum() == 0 else 0.0
+
+    ps = PatternSearch(cfg, evaluate, GAConfig(population=10, generations=8,
+                                               accuracy_tau=0.99, seed=1))
+    out = ps.run()
+    assert out["pattern"].sum() == 0            # identity pattern wins
+
+
+def test_ga_periodic_restriction():
+    cfg = get_config("qwen3-32b")
+
+    def evaluate(pattern):
+        return 1.0 - 0.001 * pattern.sum()
+
+    ps = PatternSearch(cfg, evaluate, GAConfig(population=8, generations=4,
+                                               periodic=4, seed=2))
+    out = ps.run()
+    pat = out["pattern"]
+    period = pat[:4]
+    for i in range(0, len(pat) - 4, 4):
+        assert (pat[i:i + 4] == period).all()

@@ -1,0 +1,125 @@
+"""OmniPlacement invariants (paper eq. 1-4) — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (
+    DynamicScheduler, SchedulerConfig, calculate_imbalance, plan_migration,
+    static_expert_placement,
+)
+from repro.core.placement.static import determine_replicas, round_robin
+from repro.models.moe import tables_from_placement
+
+
+@settings(max_examples=25, deadline=None)
+@given(E=st.sampled_from([8, 16, 60, 128]),
+       ep=st.sampled_from([2, 4, 16]),
+       budget=st.integers(0, 8),
+       seed=st.integers(0, 10_000))
+def test_static_placement_constraints(E, ep, budget, seed):
+    rng = np.random.default_rng(seed)
+    D = rng.lognormal(0, 1.0, (3, E))
+    placements, s = static_expert_placement(D, ep=ep, budget=budget,
+                                            max_slots=int(np.ceil(E / ep)) + 3)
+    for l, p in enumerate(placements):
+        # eq.1 availability: every expert on ≥ 1 device
+        assert (p.sum(axis=0) >= 1).all()
+        # eq.2 capacity: ≤ s_l slots per device
+        assert (p.sum(axis=1) <= s[l]).all()
+        # binary
+        assert set(np.unique(p)).issubset({0, 1})
+
+
+@settings(max_examples=25, deadline=None)
+@given(E=st.sampled_from([16, 60, 128]), seed=st.integers(0, 10_000))
+def test_placement_beats_round_robin(E, seed):
+    """The optimized placement should (weakly) beat naive round-robin."""
+    rng = np.random.default_rng(seed)
+    ep = 8
+    D = rng.lognormal(0, 1.2, (1, E))
+    n_slots = int(np.ceil(E / ep)) + 2
+    placements, _ = static_expert_placement(D, ep=ep, budget=2,
+                                            max_slots=n_slots)
+    b_opt = calculate_imbalance(placements[0], D[0])
+    b_rr = calculate_imbalance(round_robin(E, ep, int(np.ceil(E / ep))), D[0])
+    assert b_opt <= b_rr * 1.05
+
+
+def test_determine_replicas_budget():
+    loads = np.array([100.0, 10, 5, 1, 1, 1, 1, 1])
+    counts = determine_replicas(loads, extra_slots=4, ep=4, n_slots=3)
+    assert counts.sum() <= 12
+    assert counts[0] >= 2                  # hottest expert replicated first
+    assert (counts >= 1).all()
+
+
+def test_tables_from_placement_invariants():
+    placement = np.array([[1, 1, 0, 0], [0, 1, 1, 0], [0, 0, 0, 1]],
+                         dtype=np.int8)
+    t = tables_from_placement(placement, n_slots=2)
+    n_rep = np.asarray(t["n_rep"])
+    assert list(n_rep) == [1, 2, 1, 1]
+    se = np.asarray(t["slot_expert"])
+    # every replica entry points at a slot that actually hosts the expert
+    rr, rs = np.asarray(t["rep_rank"]), np.asarray(t["rep_slot"])
+    for e in range(4):
+        for i in range(rr.shape[1]):
+            assert se[rr[e, i], rs[e, i]] == e
+
+
+def test_overfull_rank_raises():
+    placement = np.ones((2, 5), dtype=np.int8)
+    with pytest.raises(ValueError):
+        tables_from_placement(placement, n_slots=2)
+
+
+# ----------------------------------------------------------------------
+def test_dynamic_scheduler_rebalances_on_shift():
+    rng = np.random.default_rng(0)
+    E, ep, L = 32, 4, 2
+    n_slots = E // ep + 2
+    sched = DynamicScheduler(
+        ep=ep, n_experts=E, n_layers=L,
+        cfg=SchedulerConfig(b_trigger=1.15, delta=0.02, budget=4,
+                            max_slots=n_slots),
+        placements=[round_robin(E, ep, E // ep) for _ in range(L)])
+    flat = np.ones((L, E))
+    for _ in range(3):
+        sched.step(flat)
+    assert sched.n_rebalances == 0         # balanced load: no churn
+    skew = flat.copy()
+    skew[:, :2] = 60.0                     # two hot experts
+    plans = None
+    for _ in range(6):
+        p = sched.step(skew)
+        plans = p or plans
+    assert sched.n_rebalances >= 1
+    assert plans is not None and any(pl.n_moves > 0 for pl in plans)
+    assert sched.current_imbalance() < 2.0
+
+
+def test_migration_plan_consistency():
+    old = round_robin(16, 4, 4)
+    rng = np.random.default_rng(1)
+    D = rng.lognormal(0, 1.5, (1, 16))
+    new, _ = static_expert_placement(D, ep=4, budget=2, max_slots=5,
+                                     prev=[old])
+    plan = plan_migration(old, new[0], n_slots=5)
+    # every move lands the expert the new table claims
+    for r, s, e in plan.moves:
+        assert plan.new_slot_expert[r, s] == e
+    # unchanged slots are not moved
+    same = (plan.new_slot_expert == plan.old_slot_expert)
+    moved = np.zeros_like(same)
+    for r, s, _ in plan.moves:
+        moved[r, s] = True
+    assert not (same & moved).any()
+
+
+def test_prediction_follows_trend():
+    sched = DynamicScheduler(ep=4, n_experts=8, n_layers=1,
+                             cfg=SchedulerConfig(window=8))
+    for i in range(8):
+        sched.step(np.full((1, 8), 1.0 + i))
+    pred = sched.predict_future_activations()
+    assert pred.mean() > sched._ema.mean()   # rising trend extrapolated up

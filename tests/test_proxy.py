@@ -1,0 +1,141 @@
+"""OmniProxy: radix tree properties, OAS policies, lifecycle, fault handling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.proxy import (
+    MetricsAggregator, OASConfig, OmniProxy, Phase, RadixTree, Request,
+)
+
+token_seqs = st.lists(st.integers(0, 7), min_size=0, max_size=24)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seqs=st.lists(token_seqs, min_size=1, max_size=12), probe=token_seqs)
+def test_radix_match_is_longest_cached_prefix(seqs, probe):
+    tree = RadixTree()
+    for s in seqs:
+        tree.insert(tuple(s))
+    got = tree.match(tuple(probe))
+    # brute force: longest common prefix with any *prefix-closed* stored seq
+    best = 0
+    for s in seqs:
+        n = 0
+        for a, b in zip(s, probe):
+            if a != b:
+                break
+            n += 1
+        best = max(best, n)
+    assert got == best
+
+
+def test_radix_eviction_under_capacity():
+    tree = RadixTree(capacity_tokens=32)
+    for i in range(20):
+        tree.insert(tuple(range(i * 100, i * 100 + 8)), now=float(i))
+    assert tree.size_tokens() <= 32
+    # most recent entries survive
+    assert tree.match(tuple(range(1900, 1908)), now=99.0) == 8
+
+
+def test_prefill_cache_affinity_wins():
+    """A request matching instance 1's cache should go there (eq. 8)."""
+    p = OmniProxy(2, 1, OASConfig(defer_window=0.0, alpha=0.3))
+    warm = Request(0, tuple(range(100)), 8, arrival=0.0)
+    p.submit(warm, 0.0)
+    acts = p.tick(0.0)
+    iid = acts[0][1].iid
+    p.on_prefill_start(warm, 0.0)
+    p.on_prefill_done(warm, 0.1, 0.1)
+    # same-prefix request must pick the same instance
+    r2 = Request(1, tuple(range(100)) + (7, 8), 8, arrival=0.2)
+    p.submit(r2, 0.2)
+    acts = p.tick(0.2)
+    assert acts[0][1].iid == iid
+    assert r2.prefix_match == 100
+
+
+def test_round_robin_when_cache_unaware():
+    p = OmniProxy(3, 1, OASConfig(defer_window=0.0, cache_aware=False))
+    seen = []
+    for i in range(6):
+        r = Request(i, (1, 2, 3), 4, arrival=float(i))
+        p.submit(r, float(i))
+        acts = p.tick(float(i))
+        seen.append(acts[0][1].iid)
+    assert seen == [0, 1, 2, 0, 1, 2]
+
+
+def test_decode_lpt_ordering():
+    p = OmniProxy(1, 2, OASConfig(defer_window=0.0, lpt=True))
+    reqs = []
+    for i, (plen, mt) in enumerate([(10, 5), (500, 900), (50, 100)]):
+        r = Request(i, tuple(range(plen)), mt, arrival=0.0)
+        p.submit(r, 0.0)
+        reqs.append(r)
+    p.tick(0.0)
+    for r in reqs:
+        p.on_prefill_start(r, 0.0)
+        p.on_prefill_done(r, 0.1, 0.1)
+    acts = p.tick(0.2)
+    decode_order = [a[0].rid for a in acts if a[2] == "decode"]
+    assert decode_order[0] == 1            # longest ℓ_i = T_prompt + T_max first
+
+
+def test_straggler_penalized():
+    p = OmniProxy(2, 1, OASConfig(defer_window=0.0, alpha=0.0,
+                                  cache_aware=True, straggler_factor=1.5))
+    p.prefill[0].observe_batch_time(1.0, 1.0)    # slow instance
+    p.prefill[1].observe_batch_time(0.1, 1.0)
+    for i in range(4):
+        r = Request(i, (i,), 4, arrival=0.0)
+        p.submit(r, 0.0)
+    acts = p.tick(0.0)
+    assert all(a[1].iid == 1 for a in acts)
+
+
+def test_failure_requeue_and_retry_budget():
+    p = OmniProxy(2, 1, OASConfig(defer_window=0.0, max_retries=1))
+    r = Request(0, (1, 2, 3), 4, arrival=0.0)
+    p.submit(r, 0.0)
+    p.tick(0.0)
+    assert r.phase == Phase.PREFILL_SCHEDULED
+    requeued = p.mark_unhealthy("prefill", r.prefill_instance, 0.1)
+    assert r in requeued and r.n_retries == 1
+    acts = p.tick(0.2)                      # re-dispatched to healthy instance
+    assert acts and acts[0][1].healthy
+    requeued = p.mark_unhealthy("prefill", r.prefill_instance, 0.3)
+    assert r.phase == Phase.FAILED          # retry budget exhausted
+
+
+def test_lifecycle_phases_and_metrics():
+    p = OmniProxy(1, 1, OASConfig(defer_window=0.0))
+    m = MetricsAggregator()
+    r = Request(0, (1, 2), 3, arrival=0.0)
+    p.submit(r, 0.0)
+    p.tick(0.0)
+    p.on_prefill_start(r, 0.01)
+    p.on_prefill_done(r, 0.05, 0.04)
+    p.on_first_token(r, 0.05)
+    p.tick(0.06)
+    p.on_decode_start(r, 0.06)
+    r.output_tokens = [1, 2, 3]
+    p.on_decode_done(r, 0.26, 0.1)
+    m.add(r)
+    s = m.summary(wall_time=0.26)
+    assert abs(s["ttft_mean"] - 0.05) < 1e-9
+    assert abs(s["tpot_mean_ms"] - (0.21 / 2) * 1e3) < 1e-6
+    assert s["n_done"] == 1
+    for ph in ("TOKENIZE", "PREFILL_SCHEDULED", "PREFILL_RUNNING",
+               "DECODE_WAIT", "DECODE_SCHEDULED", "DECODE_RUNNING", "DONE"):
+        assert ph in r.phase_times
+
+
+def test_deferred_submission_holds_then_releases():
+    p = OmniProxy(1, 1, OASConfig(defer_window=0.5, deferred=True))
+    p.prefill[0].observe_batch_time(0.6, 1.0)   # predicted cycle > window
+    r = Request(0, (1,), 2, arrival=0.0)
+    p.submit(r, 0.0)
+    assert p.tick(0.1) == []               # held (within defer window)
+    acts = p.tick(0.6)                     # released after window
+    assert len(acts) == 1

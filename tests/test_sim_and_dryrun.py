@@ -1,0 +1,166 @@
+"""Cluster simulator behavior + dry-run artifact validation + multi-device
+distribution smoke (subprocess with forced host devices)."""
+import glob
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.sim import ClusterSim, SimConfig
+from repro.sim.workload import WorkloadConfig, closed_loop_requests
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(**kw):
+    cfg = SimConfig(n_requests=250, concurrency=200,
+                    workload=WorkloadConfig(seed=1), **kw)
+    return ClusterSim(cfg).run()
+
+
+@pytest.fixture(scope="module")
+def sims():
+    return {
+        "full": _run(),
+        "wo_placement": _run(use_placement=False),
+        "wo_attn": _run(use_omniattn=False),
+        "wo_all": _run(use_placement=False, use_omniattn=False,
+                       use_proxy=False),
+    }
+
+
+def test_sim_completes_all(sims):
+    for k, s in sims.items():
+        assert s["n_done"] == 250, k
+
+
+def test_ablation_ordering(sims):
+    """Paper Table 2 ordering: full ≥ w/o attn > w/o placement ≥ w/o all."""
+    assert sims["full"]["qpm"] >= sims["wo_attn"]["qpm"] * 0.98
+    assert sims["wo_attn"]["qpm"] > sims["wo_placement"]["qpm"]
+    assert sims["full"]["qpm"] > sims["wo_all"]["qpm"] * 1.15
+
+
+def test_placement_reduces_imbalance(sims):
+    assert sims["full"]["moe_imbalance_final"] < \
+        sims["wo_placement"]["moe_imbalance_final"] - 0.3
+
+
+def test_omniattn_reduces_tpot(sims):
+    assert sims["full"]["tpot_mean_ms"] < sims["wo_attn"]["tpot_mean_ms"]
+
+
+def test_workload_long_tail():
+    reqs = closed_loop_requests(WorkloadConfig(seed=0), 4000)
+    lin = np.array([r[0] for r in reqs])
+    lout = np.array([r[1] for r in reqs])
+    assert (lin + lout).max() <= 16384
+    assert 2000 < lin.mean() < 5000
+    assert lin.max() > 4 * lin.mean()        # pronounced tail
+
+
+# ----------------------------------------------------------------------
+RESULTS = REPO / "results" / "dryrun"
+
+
+@pytest.mark.skipif(not RESULTS.exists(), reason="dry-run artifacts absent")
+@pytest.mark.parametrize("mesh", ["pod_16x16", "multipod_2x16x16"])
+def test_dryrun_matrix_green(mesh):
+    recs = [json.loads(Path(f).read_text())
+            for f in sorted(glob.glob(str(RESULTS / mesh / "*.json")))]
+    base = [r for r in recs if not r.get("tag")]    # exclude §Perf variants
+    assert len(base) == 40, "expected 40 baseline cells per mesh"
+    bad = []
+    for r in base:
+        if r["status"] == "error":
+            bad.append((r["arch"], r["shape"]))
+        elif r["status"] == "ok":
+            t = r["roofline"]["terms"]
+            assert t["compute_s"] >= 0 and t["memory_s"] > 0
+            assert r["flops_per_device"] > 0
+    assert not bad, bad
+
+
+@pytest.mark.skipif(not RESULTS.exists(), reason="dry-run artifacts absent")
+def test_dryrun_skips_are_encoder_only():
+    for mesh in ("pod_16x16", "multipod_2x16x16"):
+        for f in glob.glob(str(RESULTS / mesh / "*.json")):
+            r = json.loads(Path(f).read_text())
+            if r["status"] == "skipped":
+                assert r["arch"] == "hubert-xlarge"
+                assert r["shape"] in ("decode_32k", "long_500k")
+
+
+@pytest.mark.skipif(not RESULTS.exists(), reason="dry-run artifacts absent")
+def test_perf_variants_improved_dominant_term():
+    """§Perf: each hillclimb cell's best tagged variant beats its baseline
+    on the dominant (memory) roofline term."""
+    best = {("qwen3-moe-235b-a22b", "prefill_32k"): "A6_int8a2a",
+            ("qwen2-1.5b", "train_4k"): "B3_bigchunk",
+            ("gemma3-4b", "train_4k"): "C4_winskip"}
+    for (arch, shape), tag in best.items():
+        b = RESULTS / "pod_16x16" / f"{arch}__{shape}.json"
+        v = RESULTS / "pod_16x16" / f"{arch}__{shape}__{tag}.json"
+        if not (b.exists() and v.exists()):
+            pytest.skip("hillclimb records absent")
+        rb = json.loads(b.read_text())["roofline"]["terms"]
+        rv = json.loads(v.read_text())["roofline"]["terms"]
+        assert rv["memory_s"] < 0.6 * rb["memory_s"], (arch, shape)
+        assert rv["collective_s"] < rb["collective_s"], (arch, shape)
+
+
+# ----------------------------------------------------------------------
+@pytest.mark.slow
+def test_multi_device_moe_subprocess():
+    """shard_map MoE vs dense oracle on an 8-device (2,2,2) pod/data/model
+    mesh — run in a subprocess so the forced device count can't leak."""
+    code = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.ctx import MeshCtx
+from repro.configs import reduced_config
+from repro.models import moe as M
+from dataclasses import replace
+mesh = MeshCtx(jax.make_mesh((2,2,2), ('pod','data','model')))
+cfg = reduced_config('qwen2-moe-a2.7b').with_updates(compute_dtype='float32', param_dtype='float32')
+cfg = replace(cfg, moe=replace(cfg.moe, capacity_factor=8.0))
+E, Fe, D = cfg.moe.n_experts, cfg.moe.d_ff_expert, cfg.d_model
+s = M.default_slot_count(cfg, mesh.ep)
+tables = M.tables_from_placement(M.round_robin_placement(E, mesh.ep, s), s)
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+x = jax.random.normal(ks[0], (64, D))
+rw = jax.random.normal(ks[1], (D, E)) * 0.1
+cw = [jax.random.normal(k, shp)*0.05 for k, shp in zip(ks[2:], [(E,D,Fe),(E,D,Fe),(E,Fe,D)])]
+slots = [M.slots_from_canonical(c, tables['slot_expert']) for c in cw]
+y, _ = jax.jit(lambda *a: M.moe_ffn(mesh, cfg, *a, batch_part=('pod','data')))(x, rw, *slots, tables)
+ref = M.moe_ffn_dense(cfg, x, rw, *cw)
+err = float(jnp.max(jnp.abs(y - ref)))
+assert err < 1e-4, err
+print('OK', err)
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(REPO / "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_train_resume_after_preemption(tmp_path):
+    """Integration drill: preempted training resumes from checkpoint."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    base = [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-1.5b",
+            "--reduced", "--steps", "24", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "10"]
+    first = subprocess.run(base + ["--preempt-at", "12"], env=env,
+                           capture_output=True, text=True, timeout=560)
+    assert first.returncode == 42, first.stderr[-1500:]
+    second = subprocess.run(base, env=env, capture_output=True, text=True,
+                            timeout=560)
+    assert second.returncode == 0, second.stderr[-1500:]
+    assert "resumed from step 10" in second.stdout

@@ -1,0 +1,93 @@
+"""Training substrate: loss decreases, grad-accum equivalence, optimizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models import LM
+from repro.training.data import DataConfig, make_batch, synth_tokens
+from repro.training.optim import adamw_init, adamw_update
+from repro.training.trainer import make_train_step
+
+
+def test_loss_decreases(mesh1):
+    cfg = reduced_config("qwen2-1.5b")
+    lm = LM.build(cfg, mesh1)
+    params = lm.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, cfg.optimizer_dtype)
+    step = jax.jit(make_train_step(lm, lr=1e-3))
+    dcfg = DataConfig(cfg.vocab_size, 64, 4)
+    losses = []
+    for i in range(12):
+        params, opt, m = step(params, opt, make_batch(cfg, dcfg, i), None)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 1.0
+
+
+def test_grad_accum_equivalent(mesh1):
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", remat=False)
+    lm1 = LM.build(cfg, mesh1)
+    lm2 = LM.build(cfg.with_updates(grad_accum=2), mesh1)
+    params = lm1.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, "float32")
+    dcfg = DataConfig(cfg.vocab_size, 32, 4)
+    batch = make_batch(cfg, dcfg, 0)
+    p1, _, m1 = jax.jit(make_train_step(lm1))(params, opt, batch, None)
+    p2, _, m2 = jax.jit(make_train_step(lm2))(params, opt, batch, None)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    # updates agree to fp32 tolerance (microbatch loss averaging reorders ops)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3,
+                                   atol=2e-5)
+
+
+def test_int8_grad_compression_trains(mesh1):
+    cfg = reduced_config("qwen2-1.5b")
+    lm = LM.build(cfg, mesh1)
+    params = lm.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params, cfg.optimizer_dtype)
+    step = jax.jit(make_train_step(lm, lr=1e-3, grad_compress_int8=True))
+    dcfg = DataConfig(cfg.vocab_size, 32, 4)
+    losses = []
+    for i in range(8):
+        params, opt, m = step(params, opt, make_batch(cfg, dcfg, i), None)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all() and losses[-1] < losses[0]
+
+
+def test_adamw_weight_decay_shrinks_params():
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.zeros((4, 4))}
+    new, _, _ = adamw_update(grads, opt, params, lr=0.1, weight_decay=0.5,
+                             grad_clip=0.0)
+    assert float(new["w"].mean()) < 1.0
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    _, _, gnorm = adamw_update(grads, opt, params, grad_clip=1.0)
+    assert float(gnorm) > 1e5               # pre-clip norm reported
+
+
+def test_data_pipeline_deterministic_restart():
+    dcfg = DataConfig(512, 32, 4, seed=3)
+    a = synth_tokens(dcfg, 17)
+    b = synth_tokens(dcfg, 17)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(synth_tokens(dcfg, 18), a)
+
+
+def test_data_bigram_structure_learnable():
+    dcfg = DataConfig(512, 256, 2, seed=0)
+    t = synth_tokens(dcfg, 0)
+    follow = (t[:, :-1] * 7 + 3) % 512
+    frac = (t[:, 1:] == follow).mean()
+    # the follow-chain is computed from the base sample, so replacements
+    # dilute the observable rate to ~0.25 — still far above chance (1/512)
+    assert frac > 0.2
