@@ -8,12 +8,18 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: scaling ablation accuracy kernels roofline")
+                    help="subset: serving scaling ablation accuracy kernels "
+                         "roofline")
     ap.add_argument("--fast", action="store_true",
                     help="smaller request counts / fewer steps")
     args = ap.parse_args()
     want = set(args.only) if args.only else \
-        {"scaling", "ablation", "accuracy", "kernels", "roofline"}
+        {"scaling", "ablation", "accuracy", "kernels", "roofline", "serving"}
+
+    if "serving" in want:
+        print("== bench_serving (continuous-batching ablation) ==", flush=True)
+        from benchmarks import bench_serving
+        bench_serving.main(fast=args.fast)
 
     if "kernels" in want:
         print("== bench_kernels (name,us_per_call,derived) ==", flush=True)

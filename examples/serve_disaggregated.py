@@ -40,6 +40,7 @@ def main():
           f"requeued by OmniProxy")
     while srv.proxy.inflight and time.monotonic() - t0 < 180:
         srv._drain_actions(time.monotonic())
+        srv._prefill_round()           # chunked prefill is budgeted per tick
         srv._decode_round()
     s = srv.metrics.summary(time.monotonic() - t0)
     print(f"completed {s['n_done']}/{len(requests)} despite the failure; "

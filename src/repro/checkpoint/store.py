@@ -29,7 +29,27 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:          # container without zstandard: zlib fallback with
+    import zlib              # the same 2-method surface (format not portable
+                             # across the two codecs; checkpoints are local)
+
+    class _ZlibCompressor:
+        def __init__(self, level=3):
+            self._level = level
+
+        def compress(self, data):
+            return zlib.compress(data, self._level)
+
+    class _ZlibDecompressor:
+        def decompress(self, data, max_output_size=0):
+            return zlib.decompress(data)
+
+    class zstd:  # type: ignore[no-redef]
+        ZstdCompressor = _ZlibCompressor
+        ZstdDecompressor = _ZlibDecompressor
 
 
 def _flatten(tree) -> dict[str, Any]:

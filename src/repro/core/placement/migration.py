@@ -58,14 +58,32 @@ def apply_migration(plan: MigrationPlan, canonical_weights: dict, slots: dict,
 
 
 def tables_from_placement_from_slots(slot_expert: np.ndarray) -> dict:
-    """Rebuild replica lookup tables directly from a slot_expert map."""
+    """Rebuild replica lookup tables directly from a slot_expert map,
+    preserving the given slot assignment. (Round-tripping through a binary
+    placement would re-pack experts in ascending order and silently undo any
+    slot permutation the weights were migrated to.)"""
     import jax.numpy as jnp
+    slot_expert = np.asarray(slot_expert)
     R, s = slot_expert.shape
     E = int(slot_expert.max()) + 1
-    placement = np.zeros((R, E), dtype=np.int8)
+    reps: list[list[tuple[int, int]]] = [[] for _ in range(E)]
     for r in range(R):
         for i in range(s):
-            e = slot_expert[r, i]
+            e = int(slot_expert[r, i])
             if e >= 0:
-                placement[r, e] = 1
-    return tables_from_placement(placement, s)
+                reps[e].append((r, i))
+    max_rep = max(1, max(len(x) for x in reps))
+    rep_rank = np.zeros((E, max_rep), dtype=np.int32)
+    rep_slot = np.zeros((E, max_rep), dtype=np.int32)
+    n_rep = np.zeros((E,), dtype=np.int32)
+    for e, lst in enumerate(reps):
+        if not lst:
+            raise ValueError(f"expert {e} unplaced")
+        n_rep[e] = len(lst)
+        for i in range(max_rep):
+            r, sl = lst[i % len(lst)]
+            rep_rank[e, i] = r
+            rep_slot[e, i] = sl
+    return dict(rep_rank=jnp.asarray(rep_rank), rep_slot=jnp.asarray(rep_slot),
+                n_rep=jnp.asarray(n_rep),
+                slot_expert=jnp.asarray(slot_expert.astype(np.int32)))

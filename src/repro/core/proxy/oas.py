@@ -191,6 +191,39 @@ class OmniProxy:
         inst.running_tokens += req.effective_load
         req.advance(Phase.DECODE_RUNNING, now)
 
+    def on_decode_requeue(self, req: Request, now: float):
+        """Admission refused (no slot / no KV blocks): return the request to
+        the decode wait pool, undoing the schedule-time accounting."""
+        inst = self.decode[req.decode_instance]
+        inst.queue_len -= 1
+        inst.queued_tokens -= req.max_tokens
+        req.decode_instance = None
+        req.advance(Phase.DECODE_WAIT, now)
+        self.decode_wait.append(req)
+
+    def on_decode_kv_lost(self, req: Request, now: float):
+        """Scheduled for decode but its KV vanished (e.g. decode-instance
+        failure between admissions): undo the schedule accounting and route
+        the request back through prefill from scratch."""
+        inst = self.decode[req.decode_instance]
+        inst.queue_len -= 1
+        inst.queued_tokens -= req.max_tokens
+        req.decode_instance = None
+        req.prefill_instance = None
+        req.output_tokens.clear()
+        req.advance(Phase.APC_MATCH, now)
+        self.pending.append(req)
+
+    def on_decode_preempt(self, req: Request, now: float):
+        """Running request evicted by the engine (KV block exhaustion):
+        back to the wait pool for re-admission with its extracted cache."""
+        inst = self.decode[req.decode_instance]
+        inst.running -= 1
+        inst.running_tokens -= req.effective_load
+        req.decode_instance = None
+        req.advance(Phase.DECODE_WAIT, now)
+        self.decode_wait.append(req)
+
     def on_first_token(self, req: Request, now: float):
         if req.first_token_time is None:
             req.first_token_time = now

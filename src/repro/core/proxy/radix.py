@@ -16,6 +16,7 @@ class _Node:
     children: dict = field(default_factory=dict)   # first-token → _Node
     last_access: float = 0.0
     n_tokens_here: int = 0                # tokens stored on this edge
+    payload: object = None                # engine-side KV handle at this depth
 
 
 def _common_prefix(a: tuple, b: tuple) -> int:
@@ -86,6 +87,55 @@ class RadixTree:
         if self.total_tokens > self.capacity:
             self._evict()
         return added
+
+    # ------------------------------------------------------------------
+    # Payload handles: the serving engine marks prefixes whose KV is
+    # resident in its store, so Match_P scoring (eq. 8) and the engine agree
+    # on what a prefix hit is actually worth.
+    def attach(self, tokens, payload, now: Optional[float] = None) -> bool:
+        """Insert `tokens` and attach a payload handle at its exact boundary;
+        → True if attached. insert() splits edges at every divergence point —
+        including the strict-prefix case — so the walk below consumes whole
+        edges and ends on a node at exactly len(tokens), UNLESS insert's own
+        LRU eviction removed part of the just-inserted path (prompt longer
+        than the tree capacity): then we report False instead of attaching."""
+        self.insert(tokens, now)
+        tokens = tuple(tokens)
+        if not tokens:
+            self.root.payload = payload
+            return True
+        node, matched = self.root, 0
+        while matched < len(tokens):
+            child = node.children.get(tokens[matched])
+            if child is None:
+                return False          # evicted mid-path: no boundary node
+            node = child
+            matched += len(node.edge)
+        if matched != len(tokens):
+            return False
+        node.payload = payload
+        return True
+
+    def payload_prefixes(self, tokens, now: Optional[float] = None) -> list:
+        """All (depth, payload) pairs on the matched path of `tokens`,
+        shallow → deep. Handles may be stale (evicted store entries):
+        callers must validate against their own store."""
+        self._clock = now if now is not None else self._clock + 1e-9
+        tokens = tuple(tokens)
+        node, matched, found = self.root, 0, []
+        while True:
+            node.last_access = self._clock
+            rest = tokens[matched:]
+            if not rest or rest[0] not in node.children:
+                return found
+            child = node.children[rest[0]]
+            cp = _common_prefix(child.edge, rest)
+            matched += cp
+            if cp < len(child.edge):
+                return found
+            if child.payload is not None:
+                found.append((matched, child.payload))
+            node = child
 
     # ------------------------------------------------------------------
     def _evict(self):

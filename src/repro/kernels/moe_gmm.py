@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax>=0.7 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(nv_ref, x_ref, w_ref, o_ref, acc_ref, *, block_c: int,
             block_d: int, n_d: int):
@@ -71,7 +75,7 @@ def moe_gmm(x, w, n_valid, *, block_c: int = 256, block_f: int = 256,
                                lambda s, c, f, d: (s, c, f)),
         out_shape=jax.ShapeDtypeStruct((S, C, F), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

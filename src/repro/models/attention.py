@@ -226,6 +226,97 @@ def cache_write(k_cache, v_cache, k_new, v_new, t, *, sink: int = 0, recent: int
     return k_cache, v_cache
 
 
+def resident_token_positions(W: int, off, *, sink: int, recent: int):
+    """Token position resident at each cache slot after `off` tokens written.
+
+    Full cache (sink==recent==0): slot j holds token j iff j < off. Ring
+    layout (cache_write): slots < sink are immutable sink tokens; ring slot
+    j ≥ sink hosts the residue class {j, j+recent, j+2·recent, ...} and the
+    resident token is the largest class member < off.
+
+    Returns (tok_pos [W] int32, resident [W] bool).
+    """
+    j = jnp.arange(W, dtype=jnp.int32)
+    off = jnp.asarray(off, jnp.int32)
+    if sink or recent:
+        wraps = jnp.maximum((off - 1 - j) // recent, 0)
+        tok = jnp.where(j < sink, j, j + wraps * recent)
+    else:
+        tok = j
+    return tok, tok < off
+
+
+def prefill_resume_attention(q, k_new, v_new, k_cache, v_cache, positions, *,
+                             chunk_len, sink: int, recent: int,
+                             mask_window: int = 0, mask_sink: int = 0,
+                             attend_limit: int = 0):
+    """Exact continuation-prefill attention for one chunk.
+
+    q [B,S,H,h], k_new/v_new [B,S,K,h] at absolute `positions` [S]
+    (= off + arange(S)); caches [B,W,K,h] hold tokens < off. Queries attend
+    resident cache tokens plus causal in-chunk keys, optionally under a
+    sink+window sparsity mask (mask_window=0 → dense causal). Only the first
+    `chunk_len` chunk rows are real: padded tail queries produce garbage
+    outputs (callers must ignore them) and padded keys are neither attended
+    nor written. The chunk is scattered into the cache at linear slots when
+    sink==recent==0, else at ring slots — callers must keep S ≤ recent for
+    ring caches so in-chunk slots stay distinct.
+
+    attend_limit (static, full layout only): a known upper bound on off —
+    scores are computed against cache[:, :attend_limit] instead of the whole
+    allocation, so early chunks pay O(prefix), not O(max_len).
+
+    Returns (out [B,S,H,h], k_cache', v_cache').
+    """
+    B, S, H, h = q.shape
+    K = k_new.shape[2]
+    G = H // K
+    k_att, v_att = k_cache, v_cache
+    if attend_limit and not (sink or recent):
+        lim = min(attend_limit, k_cache.shape[1])
+        k_att, v_att = k_cache[:, :lim], v_cache[:, :lim]
+    W = k_att.shape[1]
+    scale = h ** -0.5
+    f32 = jnp.float32
+    pos = jnp.asarray(positions, jnp.int32)
+    off = pos[0]
+    cl = jnp.asarray(chunk_len, jnp.int32)
+    valid_q = jnp.arange(S) < cl
+
+    def allowed(p, t):
+        ok = t <= p
+        if mask_window > 0:
+            ok &= ((p - t) < mask_window) | (t < mask_sink)
+        return ok
+
+    tok_old, res_old = resident_token_positions(W, off, sink=sink, recent=recent)
+    qg = q.reshape(B, S, K, G, h).astype(f32)
+    s_old = jnp.einsum("bskgh,bwkh->bskgw", qg, k_att.astype(f32)) * scale
+    m_old = res_old[None, :] & allowed(pos[:, None], tok_old[None, :])
+    s_old = jnp.where(m_old[None, :, None, None, :], s_old,
+                      jnp.asarray(NEG_INF, f32))
+    s_new = jnp.einsum("bskgh,bukh->bskgu", qg, k_new.astype(f32)) * scale
+    m_new = allowed(pos[:, None], pos[None, :]) & valid_q[None, :]
+    s_new = jnp.where(m_new[None, :, None, None, :], s_new,
+                      jnp.asarray(NEG_INF, f32))
+
+    p_att = jax.nn.softmax(jnp.concatenate([s_old, s_new], axis=-1), axis=-1)
+    v_all = jnp.concatenate([v_att.astype(f32), v_new.astype(f32)], axis=1)
+    out = jnp.einsum("bskgw,bwkh->bskgh", p_att, v_all)
+    out = out.reshape(B, S, H, h).astype(q.dtype)
+
+    slots = ring_slot(pos, sink, recent) if (sink or recent) else pos
+    safe = jnp.clip(slots, 0, k_cache.shape[1] - 1)
+    vq = valid_q[None, :, None, None]
+    k_wr = jnp.where(vq, k_new.astype(k_cache.dtype),
+                     jnp.take(k_cache, safe, axis=1))
+    v_wr = jnp.where(vq, v_new.astype(v_cache.dtype),
+                     jnp.take(v_cache, safe, axis=1))
+    k_cache = k_cache.at[:, slots].set(k_wr, mode="drop")
+    v_cache = v_cache.at[:, slots].set(v_wr, mode="drop")
+    return out, k_cache, v_cache
+
+
 def compress_prefill_kv(k, v, *, sink: int, recent: int, true_len=None):
     """Build a sink+recent ring cache from full prefill K/V [B, S, K, h].
 

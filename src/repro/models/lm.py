@@ -146,8 +146,63 @@ class LM:
             cache["pos"] = jnp.asarray(true_len, jnp.int32)
         return cache, logits, aux
 
-    def decode(self, params, cache, token, positions, tables=None):
-        """token [B,1] int32; positions scalar or [B,1]. → (cache, logits [B,V])."""
+    def prefill_resume(self, params, batch, cache, *, max_len: int,
+                       tables=None, chunk_len=None, attend_limit: int = 0):
+        """Continue prefill from an existing cache (chunked prefill / radix
+        prefix-KV reuse). batch['tokens'] [B,S] is the next chunk, occupying
+        absolute positions cache['pos'] + arange(S); chunk_len (traced scalar)
+        marks the real rows of a right-padded final chunk. Returns
+        (cache, logits-of-last-real-token [B,V], aux). A prefill from scratch
+        is the degenerate case: a zero cache with pos=0 (alloc_cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        bp = self.mesh.batch_part(B)
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+        x = self.mesh.constrain(x, P(bp, None, None))
+        off = jnp.asarray(cache["pos"], jnp.int32)
+        positions = off + jnp.arange(S)
+        cl = jnp.asarray(S if chunk_len is None else chunk_len, jnp.int32)
+        x, new_cache, aux = stack_mod.stack_apply(
+            cfg, self.mesh, self.plan, params["stack"], x, mode="prefill",
+            positions=positions, caches=cache, max_len=max_len,
+            batch_part=bp, tables=tables, true_len=cl,
+            attend_limit=attend_limit)
+        last = jax.lax.dynamic_index_in_dim(x, cl - 1, axis=1, keepdims=False)
+        logits = self._logits(params, last)
+        new_cache["pos"] = off + cl
+        return new_cache, logits, aux
+
+    @cached_property
+    def chunked_prefill_support(self) -> tuple:
+        """(supported, max_chunk_tokens). Chunked prefill is exact only when
+        every attention layer's prefill mask needs no evicted keys: full
+        layers always qualify; windowed layers ride their window ring;
+        compressed (OmniAttn) layers qualify only under cfg.prefill_sparse
+        (dense-prefill compressed layers attend tokens the ring has dropped).
+        Ring scatter-writes additionally bound the chunk to the smallest
+        ring so in-chunk slots stay distinct."""
+        cfg = self.cfg
+        if cfg.encoder_only or cfg.family in ("vlm", "audio"):
+            return False, 0
+        limit = 1 << 30
+        for spec in self.plan.all_specs():
+            if spec.kind != "attn":
+                continue
+            if spec.compressed and not cfg.prefill_sparse:
+                return False, 0
+            sink, recent = stack_mod.cache_window(cfg, spec)
+            if sink or recent:
+                limit = min(limit, recent)
+        return True, limit
+
+    def decode(self, params, cache, token, positions, tables=None,
+               token_mask=None):
+        """token [B,1] int32; positions scalar or [B,1]. → (cache, logits [B,V]).
+        token_mask [B] (optional) marks live rows — it only weights the MoE
+        activation counts (inactive slots in a slot-dense batch would
+        otherwise pollute the placement signal)."""
         cfg = self.cfg
         B = token.shape[0]
         bp = self.mesh.batch_part(B)
@@ -157,6 +212,6 @@ class LM:
         x, new_cache, aux = stack_mod.stack_apply(
             cfg, self.mesh, self.plan, params["stack"], x, mode="decode",
             positions=jnp.asarray(positions), caches=cache, batch_part=bp,
-            tables=tables)
+            tables=tables, token_mask=token_mask)
         logits = self._logits(params, x[:, 0])
         return new_cache, logits, aux

@@ -30,6 +30,17 @@ from repro.configs.base import ModelConfig
 from repro.distributed.ctx import MeshCtx
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable shard_map: jax>=0.6 exposes jax.shard_map
+    (check_vma); older releases ship jax.experimental.shard_map (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 # ----------------------------------------------------------------------
 # Placement tables (pytree of arrays — swapped atomically at migration time).
 def tables_from_placement(placement: np.ndarray, n_slots: int) -> dict:
@@ -102,11 +113,15 @@ def _bucket_capacity(tc: int, k: int, ep: int, s: int, cf: float) -> int:
 
 # ----------------------------------------------------------------------
 def moe_ffn(mesh: MeshCtx, cfg: ModelConfig, x, router_w, w1, w3, w2,
-            tables: dict, shared: Optional[tuple] = None, batch_part="data"):
+            tables: dict, shared: Optional[tuple] = None, batch_part="data",
+            token_mask=None):
     """x [T, D] (T sharded over batch axes, replicated over model).
 
     Returns (y [T, D], expert_counts [E] f32) — counts feed OmniPlacement's
-    activation window.
+    activation window. token_mask [T] (optional) weights the counts so
+    invalid rows (inactive decode slots, padded prefill tail) don't pollute
+    the activation signal; the outputs of masked rows are unaffected
+    (callers already ignore them).
     """
     ep, s = w1.shape[0], w1.shape[1]
     k = cfg.moe.top_k
@@ -125,6 +140,8 @@ def moe_ffn(mesh: MeshCtx, cfg: ModelConfig, x, router_w, w1, w3, w2,
     if shared is not None:
         shared_specs = ((P(None, "model"), P(None, "model"), P("model", None)),)
         in_specs = in_specs + shared_specs
+    if token_mask is not None:
+        in_specs = in_specs + (P(batch_part),)
     out_specs = (P(batch_part, None), P(None))
 
     T_loc = T // mesh.dp if batch_part is not None else T
@@ -135,10 +152,15 @@ def moe_ffn(mesh: MeshCtx, cfg: ModelConfig, x, router_w, w1, w3, w2,
     Cb = _bucket_capacity(tc, k, ep, s, cfg.moe.capacity_factor)
     a = tc * k
 
-    def body(x_loc, rw, w1_l, w3_l, w2_l, tbl, *shared_l):
+    def body(x_loc, rw, w1_l, w3_l, w2_l, tbl, *extra):
+        extra = list(extra)
+        mask_l = extra.pop() if token_mask is not None else None
+        shared_l = tuple(extra)
         w1_l, w3_l, w2_l = w1_l[0], w3_l[0], w2_l[0]   # [s, D, Fe_loc] ...
         gates, eidx, _ = router(cfg, x_loc, rw)        # [T_loc,k]
-        counts = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+        cw = (jnp.repeat(mask_l.astype(jnp.float32), k)
+              if mask_l is not None else 1.0)
+        counts = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(cw)
 
         # replica choice: deterministic round-robin over (token, choice)
         tok_pos = jnp.arange(T_loc)[:, None] * k + jnp.arange(k)[None, :]
@@ -203,9 +225,11 @@ def moe_ffn(mesh: MeshCtx, cfg: ModelConfig, x, router_w, w1, w3, w2,
             counts = jax.lax.psum(counts, axes)
         return y, counts
 
-    args = (x, router_w, w1, w3, w2, tables) + ((shared,) if shared is not None else ())
-    return jax.shard_map(body, mesh=mesh.mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(*args)
+    args = (x, router_w, w1, w3, w2, tables) + \
+        ((shared,) if shared is not None else ()) + \
+        ((token_mask,) if token_mask is not None else ())
+    return _shard_map(body, mesh=mesh.mesh, in_specs=in_specs,
+                      out_specs=out_specs)(*args)
 
 
 # ----------------------------------------------------------------------

@@ -248,7 +248,7 @@ def regroup_params(params: dict, plan_from: StackPlan, plan_to: StackPlan) -> di
 # Layer application
 def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
                   mode: str, positions, cache, max_len: int, batch_part,
-                  true_len=None):
+                  true_len=None, attend_limit: int = 0):
     B = x.shape[0]
     H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = jnp.dtype(cfg.compute_dtype)
@@ -271,7 +271,24 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
 
     use_pallas = cfg.use_pallas and mesh.tp == 1
     new_cache = None
-    if mode == "decode":
+    if mode == "prefill" and cache is not None:
+        # continuation chunk (chunked prefill / radix prefix-KV resume):
+        # attend resident cache tokens + causal in-chunk keys, then scatter
+        # the chunk into the cache. true_len here is chunk-local.
+        mask_window = mask_sink = 0
+        if spec.window > 0:
+            mask_window = spec.window
+        elif spec.compressed and cfg.prefill_sparse:
+            mask_window, mask_sink = recent, sink
+        out, kc, vc = attn_mod.prefill_resume_attention(
+            q, k, v, cache["k"], cache["v"], positions,
+            chunk_len=(S if true_len is None else true_len),
+            sink=sink, recent=recent,
+            mask_window=mask_window, mask_sink=mask_sink,
+            attend_limit=attend_limit)
+        y = out.reshape(B, S, H * h)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "decode":
         pos = jnp.asarray(positions)
         t = pos[:, 0] if pos.ndim == 2 else (pos[0] if pos.ndim == 1 else pos)
         kc, vc = attn_mod.cache_write(cache["k"], cache["v"], k[:, 0], v[:, 0], t,
@@ -361,11 +378,19 @@ def mamba_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, mode: str,
         live = (jnp.arange(S) < true_len)
         dt = dt * live[None, :, None]
         xin = xin * live[None, :, None].astype(xin.dtype)
-        # conv caches hold the last conv_width-1 REAL pre-conv inputs
+        # conv caches hold the last conv_width-1 REAL pre-conv inputs; for a
+        # continuation chunk they may straddle the chunk boundary, so slice
+        # from (old cache ‖ chunk) instead of a zero-padded chunk.
         cw = ssm.conv_width
-        pad_x = jnp.pad(xin_pre, ((0, 0), (cw - 1, 0), (0, 0)))
+        if cx_cache is not None:
+            pad_x = jnp.concatenate([cx_cache.astype(xin_pre.dtype), xin_pre],
+                                    axis=1)
+            pad_bc = jnp.concatenate([cbc_cache.astype(bc_pre.dtype), bc_pre],
+                                     axis=1)
+        else:
+            pad_x = jnp.pad(xin_pre, ((0, 0), (cw - 1, 0), (0, 0)))
+            pad_bc = jnp.pad(bc_pre, ((0, 0), (cw - 1, 0), (0, 0)))
         new_cx = jax.lax.dynamic_slice_in_dim(pad_x, true_len, cw - 1, axis=1)
-        pad_bc = jnp.pad(bc_pre, ((0, 0), (cw - 1, 0), (0, 0)))
         new_cbc = jax.lax.dynamic_slice_in_dim(pad_bc, true_len, cw - 1, axis=1)
     Bm, Cm = bc[..., :N], bc[..., N:]
 
@@ -392,7 +417,7 @@ def mamba_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, mode: str,
 
 
 def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
-                 batch_part):
+                 batch_part, token_mask=None):
     """Returns (x, moe_counts or None)."""
     B, S, D = x.shape
     cd = jnp.dtype(cfg.compute_dtype)
@@ -407,7 +432,8 @@ def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec
         tables = p["_tables"]
         y, counts = moe_mod.moe_ffn(mesh, cfg, flat, p["router"], p["moe_w1"],
                                     p["moe_w3"], p["moe_w2"], tables, shared,
-                                    batch_part=batch_part)
+                                    batch_part=batch_part,
+                                    token_mask=token_mask)
         y = y.reshape(B, S, D)
         return x + y.astype(x.dtype), counts
     h1 = jax.nn.silu(hid @ p["w1"]) * (hid @ p["w3"])
@@ -417,15 +443,18 @@ def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec
 
 
 def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
-                cache, max_len, batch_part, true_len=None):
+                cache, max_len, batch_part, true_len=None, attend_limit=0,
+                token_mask=None):
     if spec.kind == "attn":
         x, nc = attn_sublayer(cfg, mesh, p, x, spec=spec, mode=mode,
                               positions=positions, cache=cache, max_len=max_len,
-                              batch_part=batch_part, true_len=true_len)
+                              batch_part=batch_part, true_len=true_len,
+                              attend_limit=attend_limit)
     else:
         x, nc = mamba_sublayer(cfg, mesh, p, x, mode=mode, cache=cache,
                                batch_part=batch_part, true_len=true_len)
-    x, counts = ffn_sublayer(cfg, mesh, p, x, spec=spec, batch_part=batch_part)
+    x, counts = ffn_sublayer(cfg, mesh, p, x, spec=spec, batch_part=batch_part,
+                             token_mask=token_mask)
     x = mesh.constrain(x, P(batch_part, None, None))
     return x, nc, counts
 
@@ -433,7 +462,8 @@ def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
 # ======================================================================
 def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
                 x, *, mode: str, positions, caches=None, max_len: int = 0,
-                batch_part=None, tables=None, true_len=None):
+                batch_part=None, tables=None, true_len=None,
+                attend_limit: int = 0, token_mask=None):
     """Run the full layer stack.
 
     tables: MoE placement tables dict (injected into layer params as '_tables').
@@ -457,7 +487,9 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
             h, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(p_slices[i]), h,
                                      mode=mode, positions=positions,
                                      cache=c_slices[i], max_len=max_len,
-                                     batch_part=batch_part, true_len=true_len)
+                                     batch_part=batch_part, true_len=true_len,
+                                     attend_limit=attend_limit,
+                                     token_mask=token_mask)
             if nc is not None:
                 new_cs.append(nc)
             if cnt is not None:
@@ -482,7 +514,9 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
         x, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(params["rem"][i]), x,
                                  mode=mode, positions=positions,
                                  cache=rem_caches[i], max_len=max_len,
-                                 batch_part=batch_part, true_len=true_len)
+                                 batch_part=batch_part, true_len=true_len,
+                                 attend_limit=attend_limit,
+                                 token_mask=token_mask)
         if nc is not None:
             new_rem_caches.append(nc)
         if cnt is not None:

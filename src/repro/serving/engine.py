@@ -1,16 +1,29 @@
-"""In-process serving engines (CPU-real, small models): batched decode with
-slot-dense caches + per-request positions, single-request prefill with KV
-handoff — the execution layer under OmniProxy.
+"""In-process serving engines (CPU-real, small models) — the execution layer
+under OmniProxy, built for continuous batching.
+
+PrefillEngine processes prompts in fixed-size token chunks (jit'd once per
+chunk bucket, cache threaded between chunks through LM.prefill_resume) and
+schedules queued prompts shortest-remaining-first at chunk granularity, so a
+short prompt never sits behind a long in-flight prefill. Completed prefixes
+land in a radix-backed PrefixKVStore: a later prompt sharing an N-token
+prefix resumes prefill at token N instead of recomputing it.
+
+DecodeEngine admits pending caches in one donated jit call per batch, keeps
+slot state (pos / cur_tok / active) device-side so the hot step has a single
+[n_slots] host fetch (the sampled tokens), and masks inactive slots. Block
+accounting runs through KVPool: an admission that does not fit is refused,
+and a decode step that cannot extend its block allocation preempts the
+request (cache extracted for re-admission) instead of over-committing HBM.
 
 PD disaggregation: PrefillEngine produces a B=1 cache pytree; DecodeEngine
-admits it into a free slot of its slot-dense cache (the "KV transfer" — an
+inserts it into a free slot of its slot-dense cache (the "KV transfer" — an
 array copy in-process; bytes are metered for the transfer-cost model).
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Optional
 
 import jax
@@ -18,9 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.proxy.radix import RadixTree
 from repro.models.lm import LM
 from repro.models.stack import alloc_cache
-from repro.serving.kvpool import KVPool
+from repro.serving.kvpool import KVPool, PrefixKVStore
 
 
 def _bucket(n: int, lo: int = 32) -> int:
@@ -30,8 +44,44 @@ def _bucket(n: int, lo: int = 32) -> int:
     return b
 
 
+def _pow2_floor(n: int) -> int:
+    b = 1
+    while b * 2 <= n:
+        b *= 2
+    return b
+
+
 def kv_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# ======================================================================
+@dataclass
+class PrefillTask:
+    rid: int
+    prompt: tuple
+    cache: object = None              # threaded B=1 cache (None until started)
+    logits: object = None             # last-token logits of the latest chunk
+    cursor: int = 0                   # tokens resident (incl. reused prefix)
+    reused: int = 0                   # prefix tokens resumed from the store
+    snap: int = 0                     # snapshot boundary (shared-prefix hint)
+    t_start: float = 0.0
+    compute_s: float = 0.0            # pure prefill compute (excl. queue wait)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.cursor
+
+
+@dataclass
+class PrefillResult:
+    rid: int
+    cache: object
+    first_token: int
+    prompt_len: int
+    reused: int
+    elapsed_s: float                  # prefill compute time (EWMA batch time)
+    t_done: float = 0.0               # wall time the first token materialized
 
 
 @dataclass
@@ -40,45 +90,170 @@ class PrefillEngine:
     params: dict
     tables: Optional[dict]
     max_len: int
-    cache_exact: dict = field(default_factory=dict)   # full-prompt APC reuse
-    cache_cap: int = 32
-    stats: dict = field(default_factory=lambda: {"prefills": 0, "cache_hits": 0,
-                                                 "tokens": 0, "busy_s": 0.0})
+    chunk_tokens: int = 64            # target chunk size (TTFT/TPOT knob)
+    enable_chunked: bool = True
+    allow_partial_reuse: bool = True
+    cache_cap: int = 32               # PrefixKVStore entries
+    tree: Optional[RadixTree] = None  # share the proxy's per-instance tree
+    stats: dict = field(default_factory=lambda: {
+        "prefills": 0, "cache_hits": 0, "prefix_hits": 0, "reused_tokens": 0,
+        "tokens": 0, "chunks": 0, "busy_s": 0.0})
 
     def __post_init__(self):
-        self._fn = jax.jit(self._prefill, static_argnames=())
+        self._fn = jax.jit(self._prefill)
+        self._resume = jax.jit(self._resume_impl, donate_argnums=(2,),
+                               static_argnums=(5,))
+        self.store = PrefixKVStore(self.tree, self.cache_cap)
+        self.queue: deque[PrefillTask] = deque()
+        self._ready: list[PrefillResult] = []
+        sup, limit = self.lm.chunked_prefill_support
+        self.chunk = _pow2_floor(max(min(self.chunk_tokens, limit), 1))
+        self.chunked = bool(self.enable_chunked and sup and self.chunk >= 8)
 
+    # ---- jit bodies --------------------------------------------------
     def _prefill(self, params, tokens, true_len, tables):
-        batch = {"tokens": tokens}
-        cache, logits, _ = self.lm.prefill(params, batch, max_len=self.max_len,
-                                           tables=tables, true_len=true_len)
+        cache, logits, _ = self.lm.prefill(params, {"tokens": tokens},
+                                           max_len=self.max_len, tables=tables,
+                                           true_len=true_len)
         return cache, logits
 
-    def process(self, prompt: tuple) -> tuple:
-        """→ (cache B=1, first_token:int, elapsed_s). Exact-prefix APC reuse.
-        Prompts are right-padded to pow2 buckets (one compile per bucket);
-        true_len keeps the cache/logits exact."""
+    def _resume_impl(self, params, tokens, cache, chunk_len, tables,
+                     attend_limit):
+        cache, logits, _ = self.lm.prefill_resume(
+            params, {"tokens": tokens}, cache, max_len=self.max_len,
+            tables=tables, chunk_len=chunk_len, attend_limit=attend_limit)
+        return cache, logits
+
+    # ---- scheduling --------------------------------------------------
+    def start(self, rid: int, prompt: tuple, prefix_hint: int = 0) -> None:
+        """Enqueue a prompt. Exact store hits complete immediately (drained
+        by the next step()); partial hits resume at the stored boundary.
+        prefix_hint (the proxy's Match_P, computed before self-insertion)
+        marks a prefix shared with other prompts: the engine snapshots its
+        cache at that boundary so later sharers can resume there."""
+        # a re-dispatch of the same rid (instance fail/recover) supersedes any
+        # queued task or undelivered result — otherwise both complete and the
+        # proxy sees duplicate first tokens
+        for t in list(self.queue):
+            if t.rid == rid:
+                self.queue.remove(t)
+        self._ready = [r for r in self._ready if r.rid != rid]
+        task = PrefillTask(rid, tuple(prompt), t_start=time.monotonic())
+        if (self.chunked and self.allow_partial_reuse
+                and 8 <= prefix_hint < len(task.prompt)):
+            task.snap = prefix_hint
+        self._try_resume(task)
+        self.queue.append(task)
+
+    def _try_resume(self, task: PrefillTask) -> None:
+        """Resume from the deepest stored prefix (exact hits: adopt whole)."""
+        n, cache, logits = self.store.lookup(task.prompt)
+        if cache is None or n <= task.cursor:
+            return
+        if n == len(task.prompt):
+            task.cache, task.logits = cache, logits   # store entry: not
+            task.cursor = task.reused = n             # donated downstream
+            return
+        if self.chunked and self.allow_partial_reuse:
+            # copy — the threaded cache is donated chunk-to-chunk and must
+            # not eat the store's buffers
+            task.cache = jax.tree.map(jnp.copy, cache)
+            task.cursor = task.reused = n
+            self.stats["prefix_hits"] += 1
+            self.stats["reused_tokens"] += n
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self._ready)
+
+    def step(self, token_budget: int = 1 << 30) -> list[PrefillResult]:
+        """Run up to `token_budget` tokens of prefill work; → completed
+        prompts. Chunked mode schedules shortest-remaining-first at chunk
+        granularity (a short prompt preempts an in-flight long prefill at
+        the next chunk boundary); unchunked mode is the pre-chunking engine:
+        FIFO, one whole prompt per call."""
+        done, budget = self._ready, token_budget
+        self._ready = []
         t0 = time.monotonic()
-        key = tuple(prompt)
-        if key in self.cache_exact:
+        while budget > 0 and self.queue:
+            task = (min(self.queue, key=lambda t: t.remaining)
+                    if self.chunked else self.queue[0])
+            if task.cursor == 0:
+                # entries stored since enqueue (e.g. a queued sharer's
+                # snapshot) are visible to tasks that have not started
+                self._try_resume(task)
+            if task.remaining > 0:
+                budget -= (self._run_chunk(task, min(budget, self.chunk))
+                           if self.chunked else self._run_full(task))
+            if task.remaining == 0:
+                self.queue.remove(task)
+                done.append(self._finish(task))
+        self.stats["busy_s"] += time.monotonic() - t0
+        return done
+
+    def _run_chunk(self, task: PrefillTask, budget: int) -> int:
+        t0 = time.monotonic()
+        if task.cache is None:
+            task.cache = alloc_cache(self.lm.cfg, self.lm.mesh, self.lm.plan,
+                                     1, self.max_len)
+        cl = min(self.chunk, task.remaining, max(budget, 1))
+        if task.cursor < task.snap:
+            cl = min(cl, task.snap - task.cursor)   # land on the boundary
+        S = min(_bucket(cl, lo=8), self.chunk)
+        toks = list(task.prompt[task.cursor:task.cursor + cl]) + [0] * (S - cl)
+        # attend_limit=0: one trace per chunk bucket. (Passing a pow2 prefix
+        # bound trims attention flops but multiplies trace count — a win on
+        # accelerators, a compile-stall hazard on the CPU-real path.)
+        task.cache, task.logits = self._resume(
+            self.params, jnp.asarray([toks], jnp.int32), task.cache,
+            jnp.int32(cl), self.tables, 0)
+        task.cursor += cl
+        self.stats["tokens"] += cl
+        self.stats["chunks"] += 1
+        if task.cursor == task.snap:
+            shared = task.prompt[:task.snap]
+            if self.store.lookup(shared)[0] != task.snap:
+                self.store.put(shared, jax.tree.map(jnp.copy, task.cache),
+                               task.logits)
+        task.compute_s += time.monotonic() - t0
+        return cl
+
+    def _run_full(self, task: PrefillTask) -> int:
+        t0 = time.monotonic()
+        S = len(task.prompt)
+        pad = min(_bucket(S), self.max_len) - S
+        toks = jnp.asarray([list(task.prompt) + [0] * pad], jnp.int32)
+        task.cache, task.logits = self._fn(self.params, toks, jnp.int32(S),
+                                           self.tables)
+        task.cursor = S
+        self.stats["tokens"] += S
+        task.compute_s += time.monotonic() - t0
+        return S
+
+    def _finish(self, task: PrefillTask) -> PrefillResult:
+        if task.reused == len(task.prompt):     # whole prompt adopted
             self.stats["cache_hits"] += 1
-            cache, logits = self.cache_exact[key]
         else:
-            S = len(prompt)
-            pad = min(_bucket(S), self.max_len) - S
-            toks = jnp.asarray([list(prompt) + [0] * pad], jnp.int32)
-            cache, logits = self._fn(self.params, toks, jnp.int32(S),
-                                     self.tables)
-            if len(self.cache_exact) < self.cache_cap:
-                self.cache_exact[key] = (cache, logits)
             self.stats["prefills"] += 1
-            self.stats["tokens"] += S
-        first = int(jnp.argmax(logits[0]))
-        dt = time.monotonic() - t0
-        self.stats["busy_s"] += dt
-        return cache, first, dt
+            self.store.put(task.prompt, task.cache, task.logits)
+        first = int(jnp.argmax(task.logits[0]))
+        return PrefillResult(task.rid, task.cache, first, len(task.prompt),
+                             task.reused, task.compute_s, time.monotonic())
+
+    # ---- blocking back-compat API ------------------------------------
+    def process(self, prompt: tuple) -> tuple:
+        """→ (cache B=1, first_token:int, elapsed_s). Runs the prompt to
+        completion (chunked underneath when supported)."""
+        t0 = time.monotonic()
+        self.start(-1, tuple(prompt))
+        while True:
+            recs = self.step()
+            self._ready.extend(r for r in recs if r.rid != -1)
+            for rec in recs:
+                if rec.rid == -1:
+                    return rec.cache, rec.first_token, time.monotonic() - t0
 
 
+# ======================================================================
 @dataclass
 class DecodeEngine:
     lm: LM
@@ -87,86 +262,182 @@ class DecodeEngine:
     n_slots: int
     max_len: int
     hbm_budget_bytes: int = 1 << 34
+    kv_blocks: Optional[int] = None   # explicit pool size (tests/benchmarks)
     stats: dict = field(default_factory=lambda: {
         "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
-        "moe_counts": None})
+        "admits": 0, "preemptions": 0, "moe_counts": None})
 
     def __post_init__(self):
         cfg = self.lm.cfg
         self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan, self.n_slots,
                                  self.max_len)
-        per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
-        self.pool = KVPool(n_blocks=max(self.hbm_budget_bytes // max(per_slot, 1),
-                                        self.n_slots) * 4, block_size=16)
+        if self.kv_blocks is None:
+            per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
+            self.kv_blocks = max(self.hbm_budget_bytes // max(per_slot, 1),
+                                 self.n_slots) * 4
+        self.pool = KVPool(n_blocks=self.kv_blocks, block_size=16)
         self.free = list(range(self.n_slots))
         self.slot_rid: dict[int, int] = {}
-        self.pos = np.zeros(self.n_slots, np.int32)
-        self.cur_tok = np.zeros(self.n_slots, np.int32)
-        self.active = np.zeros(self.n_slots, bool)
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0,))
-        self._step = jax.jit(self._step_impl, donate_argnums=(1,))
+        self.rid_slot: dict[int, int] = {}
+        # device-resident slot state threaded (donated) through the step jit;
+        # host mirrors updated from values we already know — no device sync
+        self.state = {"pos": jnp.zeros(self.n_slots, jnp.int32),
+                      "tok": jnp.zeros(self.n_slots, jnp.int32),
+                      "active": jnp.zeros(self.n_slots, bool)}
+        n_moe = sum(1 for sp in self.lm.plan.all_specs() if sp.use_moe)
+        if n_moe and cfg.moe.n_experts:
+            # expert activation counts accumulate device-side too — fetched
+            # (and reset) only at placement ticks via take_moe_counts()
+            self.state["moe_counts"] = jnp.zeros((n_moe, cfg.moe.n_experts),
+                                                 jnp.float32)
+        self.pos_h = np.zeros(self.n_slots, np.int64)      # next write position
+        self.tok_h = np.zeros(self.n_slots, np.int64)      # current input token
+        self.tokens_h = np.zeros(self.n_slots, np.int64)   # pool-accounted tokens
+        self.preempted: list[tuple] = []   # (rid, cache_one, next_tok, pos)
+        self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
+        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
+        self._extract = jax.jit(self._extract_impl)
 
-    # ------------------------------------------------------------------
-    def _insert_impl(self, cache_all, cache_one, slot):
-        def ins2(a, o):
-            # period/rem cache leaves: [n_rep, B, ...] ← [n_rep, 1, ...]
-            return a.at[:, slot].set(o[:, 0])
-        new = {"period": jax.tree.map(ins2, cache_all["period"], cache_one["period"]),
-               "rem": jax.tree.map(ins2, cache_all["rem"], cache_one["rem"]),
-               "pos": cache_all["pos"]}
-        return new
+    # ---- jit bodies --------------------------------------------------
+    def _insert_impl(self, cache_all, state, caches, slots, toks, poss):
+        """Admit len(caches) B=1 caches into `slots` in one call."""
+        per, rem = cache_all["period"], cache_all["rem"]
+        for j in range(len(caches)):
+            s = slots[j]
+            per = jax.tree.map(lambda a, o, s=s: a.at[:, s].set(o[:, 0]),
+                               per, caches[j]["period"])
+            rem = jax.tree.map(lambda a, o, s=s: a.at[s].set(o[0]),
+                               rem, caches[j]["rem"])
+        state = dict(state)
+        state.update(pos=state["pos"].at[slots].set(poss),
+                     tok=state["tok"].at[slots].set(toks),
+                     active=state["active"].at[slots].set(True))
+        return {"period": per, "rem": rem, "pos": cache_all["pos"]}, state
 
-    def _step_impl(self, params, cache, tokens, positions, tables):
-        new_cache, logits, _ = self.lm.decode(params, cache, tokens, positions,
-                                              tables=tables)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return new_cache, next_tok
+    def _step_impl(self, params, cache, state, tables):
+        new_cache, logits, aux = self.lm.decode(
+            params, cache, state["tok"][:, None], state["pos"][:, None],
+            tables=tables, token_mask=state["active"])
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        act = state["active"]
+        new_state = dict(state)
+        new_state.update(pos=state["pos"] + act.astype(jnp.int32),
+                         tok=jnp.where(act, nxt, state["tok"]))
+        if "moe_counts" in state:
+            cnts = ([c.reshape(-1, c.shape[-1]) for c in aux["period_counts"]]
+                    + [c[None] for c in aux["rem_counts"]])
+            new_state["moe_counts"] = (state["moe_counts"] +
+                                       jnp.concatenate(cnts, axis=0))
+        return new_cache, new_state, nxt
+
+    def _extract_impl(self, cache_all, slot):
+        """Pull one slot back out as a B=1 cache (preemption path)."""
+        per = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+            cache_all["period"])
+        rem = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+            cache_all["rem"])
+        return {"period": per, "rem": rem, "pos": cache_all["pos"]}
 
     # ------------------------------------------------------------------
     def has_capacity(self) -> bool:
         return len(self.free) > 0
 
-    def admit(self, rid: int, cache_one, first_token: int, prompt_len: int) -> bool:
-        if not self.free:
-            return False
-        if not self.pool.allocate(rid, prompt_len + 1):
-            return False
-        slot = self.free.pop()
-        self.cache = self._insert(self.cache, cache_one, slot)
-        self.stats["kv_transfer_bytes"] += kv_bytes(cache_one)
-        self.slot_rid[slot] = rid
-        self.pos[slot] = prompt_len
-        self.cur_tok[slot] = first_token
-        self.active[slot] = True
-        return True
+    def admit_batch(self, items: list[tuple]) -> dict[int, bool]:
+        """items: (rid, cache_one, next_token, pos, cached_tokens). Inserts
+        every admissible item in ONE donated jit call; → {rid: admitted}."""
+        out: dict[int, bool] = {}
+        batch = []
+        for rid, cache_one, tok, pos, cached in items:
+            if not self.free or not self.pool.allocate(rid, pos + 1,
+                                                       cached_tokens=cached):
+                out[rid] = False
+                continue
+            slot = self.free.pop()
+            self.slot_rid[slot] = rid
+            self.rid_slot[rid] = slot
+            self.pos_h[slot] = pos
+            self.tok_h[slot] = tok
+            self.tokens_h[slot] = pos + 1
+            self.stats["kv_transfer_bytes"] += kv_bytes(cache_one)
+            self.stats["admits"] += 1
+            batch.append((slot, cache_one, tok, pos))
+            out[rid] = True
+        if batch:
+            # pad to a pow2 batch by repeating the last insert (idempotent:
+            # same slot, same values) — bounds jit retraces to log2(n_slots)
+            while len(batch) & (len(batch) - 1):
+                batch.append(batch[-1])
+            slots = jnp.asarray([b[0] for b in batch], jnp.int32)
+            toks = jnp.asarray([b[2] for b in batch], jnp.int32)
+            poss = jnp.asarray([b[3] for b in batch], jnp.int32)
+            self.cache, self.state = self._insert(
+                self.cache, self.state, tuple(b[1] for b in batch),
+                slots, toks, poss)
+        return out
 
+    def admit(self, rid: int, cache_one, first_token: int, prompt_len: int,
+              cached_tokens: int = 0) -> bool:
+        return self.admit_batch([(rid, cache_one, first_token, prompt_len,
+                                  cached_tokens)])[rid]
+
+    # ------------------------------------------------------------------
     def step(self) -> dict[int, int]:
-        """One batched decode step → {rid: next_token} for active slots."""
+        """One batched decode step → {rid: next_token} for active slots.
+        Requests whose block allocation cannot grow are preempted into
+        self.preempted (cache extracted for later re-admission)."""
         if not self.slot_rid:
             return {}
         t0 = time.monotonic()
-        toks = jnp.asarray(self.cur_tok[:, None])
-        pos = jnp.asarray(self.pos[:, None])
-        self.cache, next_tok = self._step(self.params, self.cache, toks, pos,
-                                          self.tables)
-        next_np = np.asarray(next_tok)
+        self.cache, self.state, nxt = self._step(
+            self.params, self.cache, self.state, self.tables)
+        next_np = np.asarray(nxt)          # the single per-step host fetch
         out = {}
         for slot, rid in list(self.slot_rid.items()):
-            out[rid] = int(next_np[slot])
-            self.pool.extend(rid, int(self.pos[slot]) + 1, int(self.pos[slot]) + 2)
-            self.pos[slot] += 1
-            self.cur_tok[slot] = next_np[slot]
+            tok = int(next_np[slot])
+            out[rid] = tok
+            self.pos_h[slot] += 1
+            self.tok_h[slot] = tok
+            if not self.pool.extend(rid, int(self.tokens_h[slot]),
+                                    int(self.tokens_h[slot]) + 1):
+                self.stats["preemptions"] += 1
+                self.preempted.append(self._preempt(rid))
+                continue
+            self.tokens_h[slot] += 1
         dt = time.monotonic() - t0
         self.stats["steps"] += 1
         self.stats["tokens"] += len(out)
         self.stats["busy_s"] += dt
         return out
 
+    def take_moe_counts(self):
+        """Fetch + reset the device-side expert activation window ([L_moe, E]
+        np array, or None for non-MoE models). The only host sync for counts
+        — call it at monitor ticks, not per step."""
+        c = self.state.get("moe_counts")
+        if c is None:
+            return None
+        out = np.asarray(c, np.float64)
+        self.state["moe_counts"] = jnp.zeros_like(c)
+        self.stats["moe_counts"] = out          # last fetched window (stats)
+        return out
+
+    def _preempt(self, rid: int) -> tuple:
+        slot = self.rid_slot[rid]
+        cache_one = self._extract(self.cache, jnp.int32(slot))
+        rec = (rid, cache_one, int(self.tok_h[slot]), int(self.pos_h[slot]))
+        self._free_slot(rid, slot)
+        return rec
+
+    def _free_slot(self, rid: int, slot: int):
+        del self.slot_rid[slot]
+        del self.rid_slot[rid]
+        self.state["active"] = self.state["active"].at[slot].set(False)
+        self.free.append(slot)
+        self.pool.release(rid)
+
     def release(self, rid: int):
-        for slot, r in list(self.slot_rid.items()):
-            if r == rid:
-                del self.slot_rid[slot]
-                self.active[slot] = False
-                self.free.append(slot)
-                self.pool.release(rid)
-                return
+        slot = self.rid_slot.get(rid)
+        if slot is not None:
+            self._free_slot(rid, slot)

@@ -8,7 +8,54 @@ credited as already-resident blocks.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.proxy.radix import RadixTree
+
+
+class PrefixKVStore:
+    """Radix-backed prefix → KV-cache store for the prefill engine.
+
+    Entries are (cache, logits) snapshots keyed by full stored prompts.
+    `lookup` returns the deepest stored prompt that is a prefix of the query,
+    so prefill resumes at that boundary (resuming mid-entry is unsound for
+    ring caches — the ring beyond the cut holds later tokens). When
+    constructed over the proxy's per-instance RadixTree, eq. 8 Match_P
+    scoring and the engine agree on what is actually resident.
+
+    LRU-capped on entry count; evicted handles left in the tree are treated
+    as stale and skipped at lookup.
+    """
+
+    def __init__(self, tree: Optional[RadixTree] = None, capacity: int = 32):
+        self.tree = tree if tree is not None else RadixTree()
+        self.capacity = capacity
+        self.entries: OrderedDict[int, tuple] = OrderedDict()
+        self._next_id = 0
+
+    def put(self, tokens, cache, logits, now: Optional[float] = None):
+        if self.capacity <= 0:
+            return
+        handle = self._next_id
+        self._next_id += 1
+        if not self.tree.attach(tuple(tokens), handle, now):
+            return       # tree evicted the path (prompt > tree capacity):
+                         # an unreachable entry would only pin memory
+        self.entries[handle] = (len(tokens), cache, logits)
+        while len(self.entries) > self.capacity:
+            self.entries.popitem(last=False)      # stale handle stays in tree
+
+    def lookup(self, tokens, now: Optional[float] = None):
+        """→ (n_matched, cache, logits) for the deepest resident stored
+        prefix of `tokens`, or (0, None, None)."""
+        for depth, handle in reversed(self.tree.payload_prefixes(tokens, now)):
+            hit = self.entries.get(handle)
+            if hit is not None and hit[0] == depth:
+                self.entries.move_to_end(handle)
+                return depth, hit[1], hit[2]
+        return 0, None, None
 
 
 @dataclass

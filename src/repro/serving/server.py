@@ -1,10 +1,18 @@
-"""PD-disaggregated server: OmniProxy + prefill/decode engines, wall-clock.
+"""PD-disaggregated continuous-batching server: OmniProxy + engines, wall-clock.
 
 The end-to-end driver for deliverable (b): serves a real (small) model with
-batched requests through the full paper stack — APC-aware prefill dispatch,
-LPT decode scheduling, deferred submission, sink+recent compressed caches,
-and (for MoE configs) OmniPlacement with live expert-load monitoring and
-placement migration.
+batched requests through the full paper stack — APC-aware prefill dispatch
+with radix-backed partial-prefix KV reuse, chunked prefill interleaved with
+decode rounds (the prefill_tick_budget knob arbitrates the TTFT/TPOT
+trade-off per tick), LPT decode scheduling with batched admission, deferred
+submission, sink+recent compressed caches, and (for MoE configs)
+OmniPlacement live expert-load monitoring with pipelined weight migration.
+
+Request lifecycle: proxy tick (eq. 8 dispatch) → chunked prefill (shortest-
+remaining-first across queued prompts, resumed at radix prefix boundaries) →
+KV handoff (batched donated insert) → continuous-batch decode (device-side
+slot state; KVPool-preempted requests re-enter decode_wait with their
+extracted cache). See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -17,10 +25,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.placement import DynamicScheduler, SchedulerConfig
+from repro.core.placement.migration import tables_from_placement_from_slots
 from repro.core.proxy import MetricsAggregator, OASConfig, OmniProxy, Phase, Request
 from repro.distributed.ctx import MeshCtx, local_mesh_ctx
+from repro.models import moe as moe_mod
 from repro.models.lm import LM
-from repro.models.moe import slots_from_canonical, tables_from_placement
 from repro.serving.engine import DecodeEngine, PrefillEngine
 
 
@@ -31,6 +40,13 @@ class ServerConfig:
     decode_slots: int = 8
     max_len: int = 256
     oas: OASConfig = field(default_factory=OASConfig)
+    chunked_prefill: bool = True      # chunk + interleave prefill with decode
+    chunk_tokens: int = 64            # prefill chunk size (jit bucket ceiling)
+    prefill_tick_budget: int = 128    # prefill tokens per tick: ↑TTFT-biased,
+                                      # ↓TPOT-biased (the paper's P/D knob)
+    prefix_reuse: bool = True         # radix partial-prefix KV resume
+    prefix_cache_cap: int = 32        # stored prefixes per prefill instance
+    kv_blocks: Optional[int] = None   # decode KVPool size override
     enable_placement: bool = True     # OmniPlacement dynamic scheduler
     placement_interval: int = 16      # decode steps between monitor ticks
     eos_token: int = -1               # -1 → run to max_tokens
@@ -48,23 +64,33 @@ class Server:
         self.tables = self.lm.default_tables()
         self.proxy = OmniProxy(scfg.n_prefill, scfg.n_decode, scfg.oas)
         self.metrics = MetricsAggregator()
-        self.prefills = [PrefillEngine(self.lm, self.params, self.tables,
-                                       scfg.max_len)
-                         for _ in range(scfg.n_prefill)]
+        self.prefills = [
+            PrefillEngine(self.lm, self.params, self.tables, scfg.max_len,
+                          chunk_tokens=scfg.chunk_tokens,
+                          enable_chunked=scfg.chunked_prefill,
+                          allow_partial_reuse=scfg.prefix_reuse,
+                          cache_cap=scfg.prefix_cache_cap,
+                          tree=self.proxy.trees[i])
+            for i in range(scfg.n_prefill)]
         self.decodes = [DecodeEngine(self.lm, self.params, self.tables,
-                                     scfg.decode_slots, scfg.max_len)
+                                     scfg.decode_slots, scfg.max_len,
+                                     kv_blocks=scfg.kv_blocks)
                         for _ in range(scfg.n_decode)]
+        # rid → (cache B=1, next_token, pos, cached_tokens) awaiting admission
         self._pending_kv: dict[int, tuple] = {}
         self._step_count = 0
+        self.n_migrations = 0
         self.placement_sched = None
         if scfg.enable_placement and cfg.moe.n_experts:
-            n_moe_layers = sum(1 for s in self.lm.plan.all_specs() if s.use_moe)
+            s = int(self.tables["slot_expert"].shape[1])
+            placement = moe_mod.round_robin_placement(cfg.moe.n_experts,
+                                                      self.mesh.ep, s)
+            # the engine applies ONE placement table across layers, so the
+            # monitor runs on layer-summed counts (n_layers=1 collapse)
             self.placement_sched = DynamicScheduler(
-                ep=self.mesh.ep, n_experts=cfg.moe.n_experts,
-                n_layers=n_moe_layers,
-                cfg=SchedulerConfig(budget=0, max_slots=int(
-                    self.tables["slot_expert"].shape[1])),
-                placements=None)
+                ep=self.mesh.ep, n_experts=cfg.moe.n_experts, n_layers=1,
+                cfg=SchedulerConfig(budget=0, max_slots=s),
+                placements=[placement])
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: tuple, max_tokens: int, now: float):
@@ -72,62 +98,164 @@ class Server:
                           now)
 
     def _drain_actions(self, now: float):
+        admissions: dict[int, list[Request]] = {}
         for req, inst, stage in self.proxy.tick(now):
             if stage == "prefill":
-                eng = self.prefills[inst.iid]
                 self.proxy.on_prefill_start(req, time.monotonic())
-                cache, first, dt = eng.process(req.tokens)
-                tnow = time.monotonic()
-                self.proxy.on_prefill_done(req, tnow, batch_time=dt)
-                self.proxy.on_first_token(req, tnow)
-                req.output_tokens.append(first)
-                self._pending_kv[req.rid] = (cache, first)
-            else:  # decode admission
-                eng = self.decodes[inst.iid]
-                cache, first = self._pending_kv.pop(req.rid)
-                ok = eng.admit(req.rid, cache, first, req.prompt_len)
-                if not ok:
-                    self.proxy.decode_wait.append(req)   # retry next tick
-                    self._pending_kv[req.rid] = (cache, first)
+                self.prefills[inst.iid].start(req.rid, req.tokens,
+                                              prefix_hint=req.prefix_match)
+            else:
+                admissions.setdefault(inst.iid, []).append(req)
+        for iid, reqs in admissions.items():
+            eng = self.decodes[iid]
+            tnow = time.monotonic()
+            items, live = [], []
+            for r in reqs:
+                kv = self._pending_kv.pop(r.rid, None)
+                if kv is None:   # KV died with a failed decode instance
+                    self.proxy.on_decode_kv_lost(r, tnow)
                     continue
-                self.proxy.on_decode_start(req, time.monotonic())
+                items.append((r.rid,) + kv)
+                live.append(r)
+            granted = eng.admit_batch(items)
+            for req, item in zip(live, items):
+                if granted[req.rid]:
+                    self.proxy.on_decode_start(req, tnow)
+                else:
+                    self._pending_kv[req.rid] = item[1:]
+                    self.proxy.on_decode_requeue(req, tnow)
+
+    def _prefill_round(self):
+        budget = self.scfg.prefill_tick_budget
+        for iid, eng in enumerate(self.prefills):
+            if not self.proxy.prefill[iid].healthy:
+                eng.queue.clear()      # died mid-queue: proxy re-dispatches
+                continue
+            if not eng.has_work():
+                continue
+            for rec in eng.step(budget):
+                req = self.proxy.inflight.get(rec.rid)
+                tnow = time.monotonic()
+                if req is None or req.prefill_instance != iid:
+                    continue           # stale result for a re-dispatched rid
+                self.proxy.on_prefill_done(req, tnow, batch_time=rec.elapsed_s)
+                # the first token materialized inside the engine round, not
+                # when this bookkeeping runs
+                self.proxy.on_first_token(req, rec.t_done or tnow)
+                req.output_tokens.append(rec.first_token)
+                self._pending_kv[req.rid] = (rec.cache, rec.first_token,
+                                             rec.prompt_len, rec.reused)
 
     def _decode_round(self):
         for iid, eng in enumerate(self.decodes):
+            if not self.proxy.decode[iid].healthy:
+                for rid in list(eng.rid_slot):   # died: slots are garbage,
+                    eng.release(rid)             # proxy re-routes the reqs
+                eng.preempted.clear()
+                continue
             toks = eng.step()
             now = time.monotonic()
+            finished = set()
             for rid, tok in toks.items():
                 req = self.proxy.inflight.get(rid)
-                if req is None:
-                    eng.release(rid)
+                if req is None or req.decode_instance != iid:
+                    eng.release(rid)             # done or re-routed elsewhere
+                    finished.add(rid)
                     continue
                 req.output_tokens.append(tok)
                 done = (len(req.output_tokens) >= req.max_tokens or
                         tok == self.scfg.eos_token)
                 if done:
+                    finished.add(rid)
                     eng.release(rid)
                     self.proxy.on_decode_done(req, now,
                                               batch_time=eng.stats["busy_s"] /
                                               max(eng.stats["steps"], 1))
                     self.metrics.add(req)
-            if eng.stats["moe_counts"] is not None and self.placement_sched:
-                pass  # counts wired via bench harness (aux plumbed offline)
+            for rid, cache_one, tok, pos in eng.preempted:
+                req = self.proxy.inflight.get(rid)
+                if rid in finished or req is None:
+                    continue
+                self._pending_kv[rid] = (cache_one, tok, pos, 0)
+                self.proxy.on_decode_preempt(req, now)
+            eng.preempted.clear()
         self._step_count += 1
+        self._maybe_placement_tick()
+
+    # ---- OmniPlacement closed loop -----------------------------------
+    def _maybe_placement_tick(self):
+        """One monitor tick per interval on counts aggregated across every
+        decode engine (the scheduler's activation window is time-indexed)."""
+        if (self.placement_sched is None or
+                self._step_count % max(self.scfg.placement_interval, 1) != 0):
+            return
+        counts = None
+        for eng in self.decodes:
+            c = eng.take_moe_counts()           # fetch + reset the window
+            if c is not None:
+                counts = c if counts is None else counts + c
+        if counts is None:
+            return
+        plans = self.placement_sched.step(counts.sum(axis=0, keepdims=True))
+        if plans:
+            self._apply_migration(plans[0])
+
+    def _apply_migration(self, plan):
+        """Rebuild MoE slot weights + tables for a new placement (the jit'd
+        gather XLA overlaps with serving; tables swap atomically after)."""
+        old = self.tables
+        rr = np.asarray(old["rep_rank"])[:, 0]
+        rs = np.asarray(old["rep_slot"])[:, 0]
+        new_se = plan.new_slot_expert
+
+        def remap_layer(p, stacked):
+            if "moe_w1" not in p:
+                return p
+            p = dict(p)
+            for k in ("moe_w1", "moe_w3", "moe_w2"):
+                if stacked:     # [n_rep, R, s, ...] — gather canonical rows
+                    canon = p[k][:, rr, rs]
+                    p[k] = jax.vmap(
+                        lambda c: moe_mod.slots_from_canonical(c, new_se))(canon)
+                else:
+                    p[k] = moe_mod.slots_from_canonical(p[k][rr, rs], new_se)
+            return p
+
+        stack = self.params["stack"]
+        self.params["stack"] = {
+            "period": tuple(remap_layer(p, True) for p in stack["period"]),
+            "rem": tuple(remap_layer(p, False) for p in stack["rem"])}
+        self.tables = tables_from_placement_from_slots(np.asarray(new_se))
+        for eng in self.prefills + self.decodes:
+            eng.tables = self.tables
+        self.n_migrations += 1
 
     # ------------------------------------------------------------------
-    def run(self, requests: list[tuple[tuple, int]], max_wall_s: float = 300.0):
-        """requests: [(prompt_tokens, max_tokens)] all submitted at t=0
-        (closed-loop pressure). Returns metrics summary."""
+    def run(self, requests: list[tuple[tuple, int]], max_wall_s: float = 300.0,
+            arrivals: Optional[list[float]] = None):
+        """requests: [(prompt_tokens, max_tokens)]; arrivals: per-request
+        offsets from t=0 (None → all at t=0, closed-loop pressure).
+        Returns metrics summary."""
         t_start = time.monotonic()
-        for i, (prompt, mt) in enumerate(requests):
-            self.submit(i, prompt, mt, t_start)
-        while self.proxy.inflight and time.monotonic() - t_start < max_wall_s:
+        todo = sorted(
+            ((0.0 if arrivals is None else arrivals[i], i, p, mt)
+             for i, (p, mt) in enumerate(requests)))
+        k = 0
+        while k < len(todo) or self.proxy.inflight:
             now = time.monotonic()
+            if now - t_start >= max_wall_s:
+                break
+            while k < len(todo) and now - t_start >= todo[k][0]:
+                _, i, prompt, mt = todo[k]
+                self.submit(i, prompt, mt, now)
+                k += 1
             self._drain_actions(now)
+            self._prefill_round()
             self._decode_round()
         wall = time.monotonic() - t_start
         summary = self.metrics.summary(wall)
         summary["wall_s"] = wall
+        summary["n_migrations"] = self.n_migrations
         summary["prefill_stats"] = [e.stats for e in self.prefills]
         summary["decode_stats"] = [e.stats for e in self.decodes]
         return summary

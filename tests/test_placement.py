@@ -1,6 +1,7 @@
 """OmniPlacement invariants (paper eq. 1-4) — property-based."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import (

@@ -1,6 +1,7 @@
 """OmniProxy: radix tree properties, OAS policies, lifecycle, fault handling."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.proxy import (

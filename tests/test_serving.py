@@ -102,6 +102,280 @@ def test_kvpool_admission():
     assert pool.utilization == 0.75
 
 
+def test_chunked_prefill_matches_full(small):
+    """Chunked engine prefill (threaded resume chunks) must match the
+    blocking whole-prompt path: same first token, matching stored logits,
+    and identical greedy continuation through the decode engine."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(3)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 37))
+    ref = greedy_reference(lm, params, prompt, 6)
+
+    pe_full = PrefillEngine(lm, params, None, max_len=96, enable_chunked=False)
+    pe_chunk = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    assert pe_chunk.chunked and not pe_full.chunked
+    cache_f, first_f, _ = pe_full.process(prompt)
+    cache_c, first_c, _ = pe_chunk.process(prompt)
+    assert first_c == first_f == ref[0]
+    assert pe_chunk.stats["chunks"] >= 3
+    lf = pe_full.store.lookup(prompt)[2]
+    lc = pe_chunk.store.lookup(prompt)[2]
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc),
+                               rtol=1e-4, atol=1e-4)
+
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96)
+    assert de.admit(0, cache_c, first_c, len(prompt))
+    outs = [first_c]
+    for _ in range(5):
+        outs.append(de.step()[0])
+    assert outs == ref
+
+
+def test_prefix_reuse_suffix_only(small):
+    """A prompt sharing an N-token prefix with a stored entry must prefill
+    only the suffix (token counter) and produce logits matching the
+    from-scratch path."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(4)
+    p1 = tuple(rng.integers(0, cfg.vocab_size, 24))
+    suffix = tuple(rng.integers(0, cfg.vocab_size, 13))
+    p2 = p1 + suffix
+
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    pe.process(p1)
+    assert pe.stats["tokens"] == len(p1)
+    cache2, first2, _ = pe.process(p2)
+    assert pe.stats["prefix_hits"] == 1
+    assert pe.stats["reused_tokens"] == len(p1)
+    assert pe.stats["tokens"] == len(p1) + len(suffix)   # suffix work only
+
+    # from-scratch reference: logits and greedy continuation must agree
+    scratch = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    cache_ref, first_ref, _ = scratch.process(p2)
+    assert first2 == first_ref
+    l_re = pe.store.lookup(p2)[2]
+    l_ref = scratch.store.lookup(p2)[2]
+    np.testing.assert_allclose(np.asarray(l_re), np.asarray(l_ref),
+                               rtol=1e-4, atol=1e-4)
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96)
+    assert de.admit(0, cache2, first2, len(p2))
+    assert de.admit(1, cache_ref, first_ref, len(p2))
+    for _ in range(4):
+        toks = de.step()
+        assert toks[0] == toks[1]
+
+    # exact re-submission: no new compute
+    n_before = pe.stats["tokens"]
+    pe.process(p2)
+    assert pe.stats["tokens"] == n_before
+    assert pe.stats["cache_hits"] == 1
+
+
+def test_batched_admission_matches_references(small):
+    """Three caches admitted in ONE donated insert call must decode exactly
+    like isolated reference streams."""
+    cfg, lm, params = small
+    pe = PrefillEngine(lm, params, None, max_len=96)
+    de = DecodeEngine(lm, params, None, n_slots=4, max_len=96)
+    rng = np.random.default_rng(5)
+    prompts = [tuple(rng.integers(0, cfg.vocab_size, n)) for n in (7, 12, 19)]
+    refs = [greedy_reference(lm, params, p, 5) for p in prompts]
+    items = []
+    for i, p in enumerate(prompts):
+        cache, first, _ = pe.process(p)
+        items.append((i, cache, first, len(p), 0))
+    granted = de.admit_batch(items)
+    assert all(granted.values())
+    outs = {i: [items[i][2]] for i in range(3)}
+    for _ in range(4):
+        for rid, t in de.step().items():
+            outs[rid].append(t)
+    for i in range(3):
+        assert outs[i] == refs[i], f"request {i}"
+    # O(1) release bookkeeping stays consistent
+    de.release(1)
+    assert 1 not in de.rid_slot and len(de.free) == 2
+    assert sorted(de.slot_rid.values()) == [0, 2]
+
+
+def test_decode_preemption_on_block_exhaustion(small):
+    """pool.extend failure must preempt the request (slot + blocks freed,
+    cache extracted) and re-admission must resume the exact token stream."""
+    cfg, lm, params = small
+    pe = PrefillEngine(lm, params, None, max_len=96)
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96,
+                      kv_blocks=3)    # block_size=16 → 48 tokens total
+    prompt = tuple(np.random.default_rng(6).integers(0, cfg.vocab_size, 14))
+    ref = greedy_reference(lm, params, prompt, 8)
+    cache, first, _ = pe.process(prompt)
+    assert de.admit(0, cache, first, len(prompt))       # 1 block (15 tokens)
+    assert de.admit(1, cache, first, len(prompt))       # 1 block
+    outs = {0: [first], 1: [first]}
+    # decoding grows both requests; at the 16-token crossing each needs a new
+    # block — the pool (1 spare) can only serve one, the other preempts
+    preempted = None
+    for _ in range(8):
+        for r, t in de.step().items():
+            outs[r].append(t)
+        if de.preempted:
+            preempted = de.preempted.pop(0)
+            break
+    assert preempted is not None
+    assert de.stats["preemptions"] == 1
+    rid, cache_one, tok, pos = preempted
+    assert rid not in de.rid_slot and len(de.free) == 1
+    assert tok == outs[rid][-1] and pos == len(prompt) + len(outs[rid]) - 1
+    # free the survivor's blocks, re-admit the preempted stream, and check
+    # it continues the exact reference token sequence
+    de.release(1 - rid)
+    assert de.admit(rid, cache_one, tok, pos)
+    while len(outs[rid]) < len(ref):
+        outs[rid].append(de.step()[rid])
+    assert outs[rid] == ref
+
+
+def test_kvpool_denial_extend_release_readmit():
+    pool = KVPool(n_blocks=3, block_size=16)
+    assert pool.allocate(1, 30)            # 2 blocks
+    assert not pool.allocate(2, 20)        # needs 2, only 1 free
+    assert pool.allocate(2, 10)            # 1 block
+    assert not pool.extend(1, 30, 35)      # crosses 32 → needs a 3rd block
+    assert pool.extend(1, 30, 32)          # same block: free
+    pool.release(2)
+    assert pool.extend(1, 32, 35)          # now fits
+    assert pool.free_blocks == 0
+    pool.release(1)
+    assert pool.free_blocks == 3
+    assert pool.allocate(3, 48)            # release → readmit full pool
+    # prefix-credited admission only charges the non-resident suffix
+    pool.release(3)
+    assert pool.allocate(4, 48, cached_tokens=32)
+    assert pool.free_blocks == 2
+
+
+def test_radix_payload_prefix_store(small):
+    from repro.core.proxy.radix import RadixTree
+    from repro.serving.kvpool import PrefixKVStore
+    tree = RadixTree()
+    store = PrefixKVStore(tree, capacity=2)
+    store.put((1, 2, 3, 4), "c1", "l1")
+    store.put((1, 2, 3, 4, 5, 6), "c2", "l2")
+    n, c, l = store.lookup((1, 2, 3, 4, 5, 6, 7, 8))
+    assert (n, c) == (6, "c2")
+    n, c, _ = store.lookup((1, 2, 3, 4, 9))
+    assert (n, c) == (4, "c1")
+    assert store.lookup((2, 1))[0] == 0
+    store.put((8, 8, 8), "c3", "l3")       # beyond cap=2: LRU evicts c2
+    assert len(store.entries) == 2
+    # c2's payload is still attached in the tree but stale — lookup must
+    # skip it and fall back to the shallower live entry
+    n, c, _ = store.lookup((1, 2, 3, 4, 5, 6))
+    assert (n, c) == (4, "c1")
+
+
+def test_moe_migration_preserves_outputs():
+    """Swapping expert slots via _apply_migration (weights + tables) must not
+    change model outputs."""
+    from repro.core.placement.migration import MigrationPlan
+    cfg = reduced_config("qwen2-moe-a2.7b").with_updates(
+        n_layers=2, compute_dtype="float32", param_dtype="float32")
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=2, max_len=64,
+                        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg)
+    rng = np.random.default_rng(8)
+    toks = jnp.asarray([rng.integers(0, cfg.vocab_size, 9)], jnp.int32)
+    _, logits_before, _ = srv.lm.prefill(srv.params, {"tokens": toks},
+                                         max_len=64, tables=srv.tables)
+    old_se = np.asarray(srv.tables["slot_expert"]).copy()
+    new_se = old_se.copy()
+    new_se[0, 0], new_se[0, 1] = old_se[0, 1], old_se[0, 0]   # swap two slots
+    srv._apply_migration(MigrationPlan(old_se, new_se, ((0, 0, 0),), 1))
+    assert srv.n_migrations == 1
+    _, logits_after, _ = srv.lm.prefill(srv.params, {"tokens": toks},
+                                        max_len=64, tables=srv.tables)
+    np.testing.assert_allclose(np.asarray(logits_before),
+                               np.asarray(logits_after), rtol=2e-4, atol=2e-4)
+
+
+def test_server_prefix_reuse_end_to_end(small):
+    """Shared-prefix prompts through the whole server: snapshot-at-boundary
+    plus resume must cut computed prefill tokens."""
+    cfg, _, _ = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        chunk_tokens=16, prefill_tick_budget=64,
+                        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(9)
+    base = tuple(rng.integers(0, cfg.vocab_size, 24))
+    reqs = [(base + tuple(rng.integers(0, cfg.vocab_size, 8)), 3)
+            for _ in range(4)]
+    s = srv.run(reqs, max_wall_s=120)
+    ps = s["prefill_stats"][0]
+    assert s["n_done"] == 4
+    assert ps["prefix_hits"] >= 1
+    assert ps["tokens"] + ps["reused_tokens"] >= 4 * 32
+    assert ps["tokens"] < 4 * 32          # strictly less than recompute-all
+
+
+def test_server_decode_instance_failure_recovers(small):
+    """A decode-instance death mid-run loses KV for its requests; the proxy
+    requeues them and the server must route them back through prefill and
+    still finish every request."""
+    import time as _t
+    cfg, _, _ = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(11)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 8)), 6) for _ in range(3)]
+    t0 = _t.monotonic()
+    for i, (p, m) in enumerate(reqs):
+        srv.submit(i, p, m, t0)
+    # run a few ticks so requests reach decode, then kill the instance
+    for _ in range(3):
+        srv._drain_actions(_t.monotonic())
+        srv._prefill_round()
+        srv._decode_round()
+    requeued = srv.proxy.mark_unhealthy("decode", 0, _t.monotonic())
+    assert requeued, "expected in-flight decode work to be requeued"
+    srv.proxy.mark_healthy("decode", 0)
+    while srv.proxy.inflight and _t.monotonic() - t0 < 120:
+        srv._drain_actions(_t.monotonic())
+        srv._prefill_round()
+        srv._decode_round()
+    s = srv.metrics.summary(_t.monotonic() - t0)
+    assert s["n_done"] == 3
+    for r in srv.metrics.done:
+        assert len(r.output_tokens) == 6
+
+
+def test_server_prefill_instance_fail_recover(small):
+    """Fail + recover a prefill instance while its engine holds half-done
+    chunked tasks: the re-dispatched requests must supersede the stale tasks
+    (no duplicate first tokens, accounting balanced)."""
+    import time as _t
+    cfg, _, _ = small
+    scfg = ServerConfig(decode_slots=4, max_len=96, chunk_tokens=8,
+                        prefill_tick_budget=8, oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(13)
+    t0 = _t.monotonic()
+    for i in range(2):
+        srv.submit(i, tuple(rng.integers(0, cfg.vocab_size, 20)), 4, t0)
+    srv._drain_actions(_t.monotonic())
+    srv._prefill_round()              # partial progress only (tiny budget)
+    srv.proxy.mark_unhealthy("prefill", 0, _t.monotonic())
+    srv.proxy.mark_healthy("prefill", 0)
+    while srv.proxy.inflight and _t.monotonic() - t0 < 120:
+        srv._drain_actions(_t.monotonic())
+        srv._prefill_round()
+        srv._decode_round()
+    s = srv.metrics.summary(_t.monotonic() - t0)
+    assert s["n_done"] == 2
+    assert all(len(r.output_tokens) == 4 for r in srv.metrics.done)
+    assert srv.proxy.prefill[0].running == 0
+
+
 def test_server_end_to_end(small):
     cfg, _, _ = small
     scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
