@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_decode import paged_decode
 from repro.kernels.sink_decode import sink_decode
 
 
@@ -43,6 +44,17 @@ def attention_decode_op(q, k_cache, v_cache, t, *, block_w=512):
     vc = v_cache.transpose(0, 2, 1, 3)
     t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
     o = sink_decode(qg, kc, vc, t, block_w=block_w, interpret=_interpret())
+    return o.reshape(B, H, h)
+
+
+def attention_paged_decode_op(q, k_pages, v_pages, tables, lens):
+    """q [B,H,h]; arenas [N,K,bs,h]; tables [B,nb] physical block ids;
+    lens [B] resident logical slots → [B,H,h]."""
+    B, H, h = q.shape
+    K = k_pages.shape[1]
+    G = H // K
+    o = paged_decode(q.reshape(B, K, G, h), k_pages, v_pages, tables, lens,
+                     interpret=_interpret())
     return o.reshape(B, H, h)
 
 

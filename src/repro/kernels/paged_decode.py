@@ -1,0 +1,118 @@
+"""Decode-step attention over physically paged KV (TPU Pallas).
+
+PagedAttention for the decode hot path: each sequence's KV lives in
+non-contiguous fixed-size blocks of a global per-layer arena
+``[n_blocks, K, block_size, h]`` (kv-head-major so the block_size×h tile for
+one (block, kv-head) is contiguous). A per-sequence block table maps logical
+block j → physical arena block; the table is a scalar-prefetch operand so the
+BlockSpec index map can drive the DMA gather directly — no host-side gather.
+
+The occupancy operand `lens [B]` is the number of logical slots resident for
+each sequence: t+1 once the current token's K/V is written for full-attention
+layers, min(t+1, sink+recent) for ring (sliding-window / OmniAttn sink+recent
+compressed) layers — the ring mapping lives in the caller; this kernel only
+sees logical slot space, which makes one kernel serve full, windowed and
+compressed layers. Compute for blocks whose logical range starts at or
+beyond `lens` is skipped (the resident-blocks-only win; their block-spec
+DMA still fetches the tabled entry, which the engine points at the null
+block); the tail block is masked per-slot.
+
+GQA is native: the q block carries all G=H/K heads of one kv group, so each
+cache block is read once per group. Grid: (B, K, n_blocks_per_seq) with the
+block dimension sequential (online softmax accumulates in VMEM scratch).
+
+Table entries past a sequence's resident count should point at a reserved
+null block (id 0 by convention in the serving engine): the DMA still touches
+it, but the compute guard masks it out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax>=0.7 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+            l_ref, *, scale: float, block_size: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Skip compute for blocks entirely past the resident region. The logical
+    # slot range of block j is [j*bs, (j+1)*bs); lens >= 1 always (the block
+    # holding the current token is resident), so block 0 is never skipped and
+    # m/l carry at least one finite score into the final normalization.
+    @pl.when(j * block_size < lens_ref[b])
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)              # [G, h]
+        k = k_ref[...].astype(jnp.float32)              # [bs, h]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        slot = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slot < lens_ref[b], s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        m_ref[...] = m_new
+        v = v_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode(q, k_pages, v_pages, tables, lens, *, interpret: bool = False):
+    """q [B, K, G, h]; pages [N, K, bs, h]; tables [B, nb] int32 (physical
+    block ids); lens [B] resident logical slots → o [B, K, G, h]."""
+    B, K, G, h = q.shape
+    bs = k_pages.shape[2]
+    nb = tables.shape[1]
+    scale = h ** -0.5
+    kernel = functools.partial(_kernel, scale=scale, block_size=bs,
+                               n_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # tables, lens
+        grid=(B, K, nb),
+        in_specs=[
+            pl.BlockSpec((None, None, G, h),
+                         lambda b, kh, j, tbl, lens: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, h),
+                               lambda b, kh, j, tbl, lens: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, h), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, h), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lens.astype(jnp.int32), q, k_pages, v_pages)

@@ -40,6 +40,18 @@ def sink_decode_ref(q, k_cache, v_cache, t):
                       v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pages, v_pages, tables, lens):
+    """q [B,K,G,h]; pages [N,K,bs,h]; tables [B,nb]; lens [B] → [B,K,G,h].
+    Gather the pages into a linear [B,K,nb*bs,h] cache, then masked softmax
+    attention over the first `lens` logical slots."""
+    B, K, G, h = q.shape
+    nb = tables.shape[1]
+    bs = k_pages.shape[2]
+    k_lin = jnp.moveaxis(k_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    v_lin = jnp.moveaxis(v_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    return sink_decode_ref(q, k_lin, v_lin, lens)
+
+
 def moe_gmm_ref(x, w, n_valid):
     """x [s,C,D] @ w [s,D,F] with valid-row masking → [s,C,F]."""
     C = x.shape[1]

@@ -202,6 +202,43 @@ def decode_attention(
 
 
 # ----------------------------------------------------------------------
+def paged_decode_attention(q, k_pages, v_pages, tables, lens):
+    """Single-token attention over physically paged KV (pure-jnp path).
+
+    q [B, H, h]; arenas [N, K, bs, h] (kv-head-major blocks); tables [B, nb]
+    physical block ids; lens [B] = resident logical slots (t+1 once the
+    current token's K/V is written; min(t+1, W) for ring layers). Gathers
+    the tabled blocks into a linear [B, nb·bs, K, h] view (non-resident
+    entries alias the null block and are masked by `lens`) and reuses the
+    dense masked-softmax decode math. The Pallas kernel additionally skips
+    compute for blocks past `lens` — this fallback pays the full gather.
+    """
+    B = q.shape[0]
+    nb = tables.shape[1]
+    bs, h = k_pages.shape[2], k_pages.shape[3]
+    K = k_pages.shape[1]
+    k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, K, h)
+    v_lin = v_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, K, h)
+    return decode_attention(q, k_lin, v_lin, lens)
+
+
+def paged_cache_write(k_pages, v_pages, k_new, v_new, blk, off):
+    """Write one token's K/V per sequence into arena blocks.
+
+    arenas [N, K, bs, h]; k_new/v_new [B, K, h]; blk/off [B] physical block
+    id and in-block offset. Distinct live sequences always target distinct
+    blocks (append-only block ownership); freed slots are redirected to the
+    null block by the caller, where duplicate writes are harmless.
+    """
+    K = k_pages.shape[1]
+    ki = jnp.arange(K)[None, :]
+    k_pages = k_pages.at[blk[:, None], ki, off[:, None]].set(
+        k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[blk[:, None], ki, off[:, None]].set(
+        v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
 def ring_slot(t, sink: int, recent: int):
     """Cache slot for the token written at absolute position t (sink+ring)."""
     W = sink + recent

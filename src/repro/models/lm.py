@@ -198,11 +198,13 @@ class LM:
         return True, limit
 
     def decode(self, params, cache, token, positions, tables=None,
-               token_mask=None):
+               token_mask=None, block_tables=None):
         """token [B,1] int32; positions scalar or [B,1]. → (cache, logits [B,V]).
         token_mask [B] (optional) marks live rows — it only weights the MoE
         activation counts (inactive slots in a slot-dense batch would
-        otherwise pollute the placement signal)."""
+        otherwise pollute the placement signal). block_tables [B, nb]
+        (optional) selects the physically paged decode path: attention cache
+        leaves are block arenas and reads gather only resident blocks."""
         cfg = self.cfg
         B = token.shape[0]
         bp = self.mesh.batch_part(B)
@@ -212,6 +214,6 @@ class LM:
         x, new_cache, aux = stack_mod.stack_apply(
             cfg, self.mesh, self.plan, params["stack"], x, mode="decode",
             positions=jnp.asarray(positions), caches=cache, batch_part=bp,
-            tables=tables, token_mask=token_mask)
+            tables=tables, token_mask=token_mask, block_tables=block_tables)
         logits = self._logits(params, x[:, 0])
         return new_cache, logits, aux

@@ -211,6 +211,72 @@ def alloc_cache(cfg, mesh, plan, B, max_len, dtype=None):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
 
 
+# ----------------------------------------------------------------------
+# Physically paged decode caches: attention KV lives in a global per-layer
+# block arena [N, K, block_size, h] indexed through per-slot block tables.
+def ring_block_count(sink: int, recent: int, block_size: int) -> int:
+    """Blocks backing one slot's sink+recent ring (ceil, last may be partial)."""
+    return -(-(sink + recent) // block_size)
+
+
+def layer_cache_shape_paged(cfg: ModelConfig, mesh: MeshCtx, spec: LayerSpec,
+                            n_slots: int, max_len: int, n_arena_blocks: int,
+                            block_size: int) -> dict:
+    """{name: (shape, spec)} for one layer's paged decode cache.
+
+    Full-attention layers share the pool-managed arena (`n_arena_blocks`
+    includes the reserved null block 0); ring layers (windowed / sink+recent
+    compressed) have fixed per-slot capacity, so each slot statically owns a
+    contiguous run of ring blocks. Non-attention layers keep their per-slot
+    dense state (it does not grow with context).
+    """
+    if spec.kind != "attn":
+        return layer_cache_shape(cfg, mesh, spec, n_slots, max_len)
+    sink, recent = cache_window(cfg, spec)
+    K, h = cfg.n_kv_heads, cfg.head_dim
+    if sink or recent:
+        N = n_slots * ring_block_count(sink, recent, block_size)
+    else:
+        N = n_arena_blocks
+    kv_part = "model" if attn_mod.decode_strategy(K, mesh.tp) == "kv" else None
+    sp = P(None, kv_part, None, None)
+    return {"k": ((N, K, block_size, h), sp),
+            "v": ((N, K, block_size, h), sp)}
+
+
+def paged_cache_struct(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan,
+                       n_slots: int, max_len: int, n_arena_blocks: int,
+                       block_size: int, dtype=None):
+    """(ShapeDtypeStruct pytree, PartitionSpec pytree) for the paged cache."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    def one(spec: LayerSpec, stacked: bool):
+        shapes = layer_cache_shape_paged(cfg, mesh, spec, n_slots, max_len,
+                                         n_arena_blocks, block_size)
+        sds, sps = {}, {}
+        for name, (shp, sp) in shapes.items():
+            dt = jnp.float32 if name == "state" else dtype
+            if stacked:
+                shp = (plan.n_rep,) + shp
+                sp = P(*((None,) + tuple(sp)))
+            sds[name] = jax.ShapeDtypeStruct(shp, dt)
+            sps[name] = sp
+        return sds, sps
+    period = [one(s, True) for s in plan.period]
+    rem = [one(s, False) for s in plan.rem]
+    sds = {"period": tuple(p[0] for p in period), "rem": tuple(r[0] for r in rem),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    sps = {"period": tuple(p[1] for p in period), "rem": tuple(r[1] for r in rem),
+           "pos": P()}
+    return sds, sps
+
+
+def alloc_paged_cache(cfg, mesh, plan, n_slots, max_len, n_arena_blocks,
+                      block_size, dtype=None):
+    sds, _ = paged_cache_struct(cfg, mesh, plan, n_slots, max_len,
+                                n_arena_blocks, block_size, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+
 # ======================================================================
 def unstack_params(plan: StackPlan, params: dict) -> list[dict]:
     """Stack params → flat per-layer list (layer order)."""
@@ -248,7 +314,7 @@ def regroup_params(params: dict, plan_from: StackPlan, plan_to: StackPlan) -> di
 # Layer application
 def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
                   mode: str, positions, cache, max_len: int, batch_part,
-                  true_len=None, attend_limit: int = 0):
+                  true_len=None, attend_limit: int = 0, block_tables=None):
     B = x.shape[0]
     H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = jnp.dtype(cfg.compute_dtype)
@@ -287,6 +353,42 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
             mask_window=mask_window, mask_sink=mask_sink,
             attend_limit=attend_limit)
         y = out.reshape(B, S, H * h)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "decode" and block_tables is not None:
+        # physically paged decode: the cache leaves are block arenas
+        # [N, K, bs, h]; full layers map logical position blocks through the
+        # per-slot table, ring layers statically own a contiguous block run.
+        pos = jnp.asarray(positions)
+        t = pos[:, 0] if pos.ndim == 2 else (pos[0] if pos.ndim == 1 else pos)
+        t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (B,))
+        bs = cache["k"].shape[2]
+        bidx = jnp.arange(B, dtype=jnp.int32)
+        if sink or recent:
+            W = sink + recent
+            bpw = ring_block_count(sink, recent, bs)
+            slot = attn_mod.ring_slot(t, sink, recent)
+            blk = bidx * bpw + slot // bs
+            off = slot % bs
+            tbl = bidx[:, None] * bpw + jnp.arange(bpw, dtype=jnp.int32)[None, :]
+            lens = jnp.minimum(t + 1, W)
+        else:
+            # past the table's logical capacity the write is redirected to
+            # the null block (the dense per-request path drops OOB writes)
+            nb = block_tables.shape[1]
+            blk = jnp.where(t < nb * bs,
+                            block_tables[bidx, jnp.minimum(t // bs, nb - 1)],
+                            0)
+            off = t % bs
+            tbl = block_tables
+            lens = jnp.minimum(t + 1, nb * bs)
+        kc, vc = attn_mod.paged_cache_write(cache["k"], cache["v"],
+                                            k[:, 0], v[:, 0], blk, off)
+        if use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.attention_paged_decode_op(q[:, 0], kc, vc, tbl, lens)
+        else:
+            out = attn_mod.paged_decode_attention(q[:, 0], kc, vc, tbl, lens)
+        y = out.reshape(B, 1, H * h)
         new_cache = {"k": kc, "v": vc}
     elif mode == "decode":
         pos = jnp.asarray(positions)
@@ -444,12 +546,13 @@ def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec
 
 def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
                 cache, max_len, batch_part, true_len=None, attend_limit=0,
-                token_mask=None):
+                token_mask=None, block_tables=None):
     if spec.kind == "attn":
         x, nc = attn_sublayer(cfg, mesh, p, x, spec=spec, mode=mode,
                               positions=positions, cache=cache, max_len=max_len,
                               batch_part=batch_part, true_len=true_len,
-                              attend_limit=attend_limit)
+                              attend_limit=attend_limit,
+                              block_tables=block_tables)
     else:
         x, nc = mamba_sublayer(cfg, mesh, p, x, mode=mode, cache=cache,
                                batch_part=batch_part, true_len=true_len)
@@ -463,10 +566,12 @@ def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
 def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
                 x, *, mode: str, positions, caches=None, max_len: int = 0,
                 batch_part=None, tables=None, true_len=None,
-                attend_limit: int = 0, token_mask=None):
+                attend_limit: int = 0, token_mask=None, block_tables=None):
     """Run the full layer stack.
 
     tables: MoE placement tables dict (injected into layer params as '_tables').
+    block_tables: [B, nb] physical KV block ids (decode over paged caches —
+    every attention layer's cache leaves must then be block arenas).
     Returns (x, new_caches | None, aux dict with per-layer MoE counts).
     """
     def with_tables(p):
@@ -489,7 +594,8 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
                                      cache=c_slices[i], max_len=max_len,
                                      batch_part=batch_part, true_len=true_len,
                                      attend_limit=attend_limit,
-                                     token_mask=token_mask)
+                                     token_mask=token_mask,
+                                     block_tables=block_tables)
             if nc is not None:
                 new_cs.append(nc)
             if cnt is not None:
@@ -516,7 +622,8 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
                                  cache=rem_caches[i], max_len=max_len,
                                  batch_part=batch_part, true_len=true_len,
                                  attend_limit=attend_limit,
-                                 token_mask=token_mask)
+                                 token_mask=token_mask,
+                                 block_tables=block_tables)
         if nc is not None:
             new_rem_caches.append(nc)
         if cnt is not None:

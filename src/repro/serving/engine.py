@@ -10,14 +10,19 @@ prefix resumes prefill at token N instead of recomputing it.
 
 DecodeEngine admits pending caches in one donated jit call per batch, keeps
 slot state (pos / cur_tok / active) device-side so the hot step has a single
-[n_slots] host fetch (the sampled tokens), and masks inactive slots. Block
-accounting runs through KVPool: an admission that does not fit is refused,
-and a decode step that cannot extend its block allocation preempts the
-request (cache extracted for re-admission) instead of over-committing HBM.
+[n_slots] host fetch (the sampled tokens), and masks inactive slots. With
+paged=True (default) attention KV lives in physically paged per-layer
+arenas: KVPool allocates real refcounted block ids, admission scatters the
+incoming dense cache into them (prefix-sharing admissions MAP the lender's
+full prefix blocks instead of copying), the decode step reads only resident
+blocks through per-slot block tables, and a step that cannot grow its
+allocation preempts the request (cache gathered back out of the arenas for
+re-admission) instead of over-committing HBM. See docs/serving.md.
 
-PD disaggregation: PrefillEngine produces a B=1 cache pytree; DecodeEngine
-inserts it into a free slot of its slot-dense cache (the "KV transfer" — an
-array copy in-process; bytes are metered for the transfer-cost model).
+PD disaggregation: PrefillEngine produces a B=1 dense cache pytree — the
+KV-transfer interchange format; DecodeEngine scatters it into arena blocks
+(paged) or a free slot (dense). Bytes are metered for the transfer-cost
+model.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.proxy.radix import RadixTree
 from repro.models.lm import LM
-from repro.models.stack import alloc_cache
+from repro.models.stack import (alloc_cache, alloc_paged_cache, cache_window,
+                                ring_block_count)
 from repro.serving.kvpool import KVPool, PrefixKVStore
 
 
@@ -53,6 +59,24 @@ def _pow2_floor(n: int) -> int:
 
 def kv_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def dense_kv_to_blocks(x, n_blocks: int, block_size: int):
+    """[..., L, K, h] (dense token-major KV) → [..., n_blocks, K, bs, h]
+    (kv-head-major arena blocks); the tail is zero-padded to block_size."""
+    L, K, h = x.shape[-3:]
+    pad = n_blocks * block_size - L
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+    x = x.reshape(x.shape[:-3] + (n_blocks, block_size, K, h))
+    return jnp.moveaxis(x, -3, -2)
+
+
+def blocks_to_dense_kv(x, L: int):
+    """Inverse of dense_kv_to_blocks: [..., nb, K, bs, h] → [..., L, K, h]."""
+    x = jnp.moveaxis(x, -2, -3)
+    nb, bs, K, h = x.shape[-4:]
+    return x.reshape(x.shape[:-4] + (nb * bs, K, h))[..., :L, :, :]
 
 
 # ======================================================================
@@ -256,6 +280,19 @@ class PrefillEngine:
 # ======================================================================
 @dataclass
 class DecodeEngine:
+    """Continuous-batch decode engine.
+
+    paged=True (default): attention KV lives in physically paged per-layer
+    arenas. Admission allocates real blocks from the KVPool and scatters the
+    incoming B=1 dense cache into them (prefix-sharing admissions map the
+    lender's full prefix blocks instead of writing them — only the partial
+    tail block and the suffix are copied); each decode step writes the new
+    token's K/V through the per-slot block table and attends over resident
+    blocks only; preemption extracts the dense cache back out of the arenas
+    and releases the blocks (refcounted — shared blocks survive until their
+    last mapper leaves). paged=False preserves the slot-dense layout with
+    accounting-only admission control.
+    """
     lm: LM
     params: dict
     tables: Optional[dict]
@@ -263,22 +300,45 @@ class DecodeEngine:
     max_len: int
     hbm_budget_bytes: int = 1 << 34
     kv_blocks: Optional[int] = None   # explicit pool size (tests/benchmarks)
+    paged: bool = True                # physically paged attention KV
+    block_size: int = 16
     stats: dict = field(default_factory=lambda: {
         "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
-        "admits": 0, "preemptions": 0, "moe_counts": None})
+        "admits": 0, "preemptions": 0, "moe_counts": None,
+        "blocks_touched": 0, "blocks_shared": 0, "blocks_fresh": 0})
 
     def __post_init__(self):
         cfg = self.lm.cfg
-        self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan, self.n_slots,
-                                 self.max_len)
-        if self.kv_blocks is None:
-            per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
-            self.kv_blocks = max(self.hbm_budget_bytes // max(per_slot, 1),
-                                 self.n_slots) * 4
-        self.pool = KVPool(n_blocks=self.kv_blocks, block_size=16)
+        self.max_blocks = -(-self.max_len // self.block_size)
+        if self.paged:
+            if self.kv_blocks is None:
+                # capacity parity with the dense layout: every slot can run
+                # to max_len; the pool turns that into admission flexibility
+                self.kv_blocks = self.n_slots * self.max_blocks
+            # arena block 0 is the reserved null block (never allocated)
+            self.cache = alloc_paged_cache(cfg, self.lm.mesh, self.lm.plan,
+                                           self.n_slots, self.max_len,
+                                           self.kv_blocks + 1, self.block_size)
+            self.tables_h = np.zeros((self.n_slots, self.max_blocks), np.int32)
+            self._tbl_dev = jnp.asarray(self.tables_h)
+            self._tbl_dirty = False
+        else:
+            self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan,
+                                     self.n_slots, self.max_len)
+            if self.kv_blocks is None:
+                per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
+                budget = max(self.hbm_budget_bytes // max(per_slot, 1),
+                             self.n_slots) * 4
+                # the accounting pool only needs to never constrain below the
+                # slot-dense physical capacity — don't materialize a free
+                # list for the raw HBM-budget block count (~1e5 ids)
+                self.kv_blocks = min(budget,
+                                     self.n_slots * self.max_blocks * 4)
+        self.pool = KVPool(n_blocks=self.kv_blocks, block_size=self.block_size)
         self.free = list(range(self.n_slots))
         self.slot_rid: dict[int, int] = {}
         self.rid_slot: dict[int, int] = {}
+        self._prompts: dict[int, tuple] = {}   # live rid → prompt (sharing)
         # device-resident slot state threaded (donated) through the step jit;
         # host mirrors updated from values we already know — no device sync
         self.state = {"pos": jnp.zeros(self.n_slots, jnp.int32),
@@ -294,9 +354,72 @@ class DecodeEngine:
         self.tok_h = np.zeros(self.n_slots, np.int64)      # current input token
         self.tokens_h = np.zeros(self.n_slots, np.int64)   # pool-accounted tokens
         self.preempted: list[tuple] = []   # (rid, cache_one, next_tok, pos)
-        self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
+        if self.paged:
+            self._insert = jax.jit(self._insert_paged_impl,
+                                   donate_argnums=(0, 1))
+            self._extract = jax.jit(self._extract_paged_impl)
+        else:
+            self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
+            self._extract = jax.jit(self._extract_impl)
         self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
-        self._extract = jax.jit(self._extract_impl)
+
+    # ---- paged layout helpers (trace-level) --------------------------
+    def _attn_classes(self):
+        """[(spec, (sink, recent)) for period entries], same for rem."""
+        cfg = self.lm.cfg
+        per = [(s, cache_window(cfg, s)) for s in self.lm.plan.period]
+        rem = [(s, cache_window(cfg, s)) for s in self.lm.plan.rem]
+        return per, rem
+
+    def _insert_attn_paged(self, win, entry, one, slot, wtbl, stacked):
+        """Scatter one request's dense per-layer KV into arena blocks.
+        Full layers write through `wtbl` (shared prefix entries redirected to
+        the null block — mapped, not copied); ring layers overwrite the
+        slot's statically owned block run."""
+        sink, recent = win
+        bs = self.block_size
+        out = dict(entry)
+        for name in ("k", "v"):
+            a = entry[name]
+            o = one[name][:, 0] if stacked else one[name][0]   # [(R,) L, K, h]
+            if sink or recent:
+                bpw = ring_block_count(sink, recent, bs)
+                blocks = dense_kv_to_blocks(o, bpw, bs).astype(a.dtype)
+                start = (0, slot * bpw, 0, 0, 0) if stacked else \
+                    (slot * bpw, 0, 0, 0)
+                a = jax.lax.dynamic_update_slice(a, blocks, start)
+            else:
+                blocks = dense_kv_to_blocks(o, self.max_blocks,
+                                            bs).astype(a.dtype)
+                a = a.at[:, wtbl].set(blocks) if stacked else \
+                    a.at[wtbl].set(blocks)
+            out[name] = a
+        return out
+
+    def _extract_attn_paged(self, win, entry, slot, tbl, stacked):
+        """Gather one slot's dense per-layer KV back out of the arenas."""
+        sink, recent = win
+        bs = self.block_size
+        out = {}
+        for name in ("k", "v"):
+            a = entry[name]
+            K, h = a.shape[-3], a.shape[-1]
+            if sink or recent:
+                W = sink + recent
+                bpw = ring_block_count(sink, recent, bs)
+                if stacked:
+                    blocks = jax.lax.dynamic_slice(
+                        a, (0, slot * bpw, 0, 0, 0),
+                        (a.shape[0], bpw, K, bs, h))
+                else:
+                    blocks = jax.lax.dynamic_slice(
+                        a, (slot * bpw, 0, 0, 0), (bpw, K, bs, h))
+                x = blocks_to_dense_kv(blocks, W)
+            else:
+                blocks = a[:, tbl] if stacked else a[tbl]
+                x = blocks_to_dense_kv(blocks, self.max_len)
+            out[name] = x[:, None] if stacked else x[None]
+        return out
 
     # ---- jit bodies --------------------------------------------------
     def _insert_impl(self, cache_all, state, caches, slots, toks, poss):
@@ -314,10 +437,48 @@ class DecodeEngine:
                      active=state["active"].at[slots].set(True))
         return {"period": per, "rem": rem, "pos": cache_all["pos"]}, state
 
-    def _step_impl(self, params, cache, state, tables):
+    def _insert_paged_impl(self, cache_all, state, caches, slots, toks, poss,
+                           tbls, shns):
+        """Paged admission: scatter each B=1 dense cache into arena blocks
+        through its table row (tbls [n, max_blocks]); the first shns[j]
+        entries are prefix blocks mapped from a lender and must not be
+        written (redirected to the null block). Non-attention layer state
+        stays per-slot."""
+        per_cls, rem_cls = self._attn_classes()
+        per = list(cache_all["period"])
+        rem = list(cache_all["rem"])
+        nb_iota = jnp.arange(self.max_blocks)
+        for j in range(len(caches)):
+            s = slots[j]
+            wtbl = jnp.where(nb_iota < shns[j], 0, tbls[j])
+            for i, (spec, win) in enumerate(per_cls):
+                one = caches[j]["period"][i]
+                if spec.kind == "attn":
+                    per[i] = self._insert_attn_paged(win, per[i], one, s,
+                                                     wtbl, stacked=True)
+                else:
+                    per[i] = jax.tree.map(
+                        lambda a, o, s=s: a.at[:, s].set(o[:, 0]),
+                        per[i], one)
+            for i, (spec, win) in enumerate(rem_cls):
+                one = caches[j]["rem"][i]
+                if spec.kind == "attn":
+                    rem[i] = self._insert_attn_paged(win, rem[i], one, s,
+                                                     wtbl, stacked=False)
+                else:
+                    rem[i] = jax.tree.map(
+                        lambda a, o, s=s: a.at[s].set(o[0]), rem[i], one)
+        state = dict(state)
+        state.update(pos=state["pos"].at[slots].set(poss),
+                     tok=state["tok"].at[slots].set(toks),
+                     active=state["active"].at[slots].set(True))
+        return {"period": tuple(per), "rem": tuple(rem),
+                "pos": cache_all["pos"]}, state
+
+    def _step_impl(self, params, cache, state, tables, block_tbl):
         new_cache, logits, aux = self.lm.decode(
             params, cache, state["tok"][:, None], state["pos"][:, None],
-            tables=tables, token_mask=state["active"])
+            tables=tables, token_mask=state["active"], block_tables=block_tbl)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         act = state["active"]
         new_state = dict(state)
@@ -340,29 +501,98 @@ class DecodeEngine:
             cache_all["rem"])
         return {"period": per, "rem": rem, "pos": cache_all["pos"]}
 
+    def _extract_paged_impl(self, cache_all, slot, tbl):
+        """Pull one slot's KV out of the arenas as a dense B=1 cache
+        (preemption / re-admission interchange format)."""
+        per_cls, rem_cls = self._attn_classes()
+        per, rem = [], []
+        for i, (spec, win) in enumerate(per_cls):
+            e = cache_all["period"][i]
+            if spec.kind == "attn":
+                per.append(self._extract_attn_paged(win, e, slot, tbl,
+                                                    stacked=True))
+            else:
+                per.append(jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                    e))
+        for i, (spec, win) in enumerate(rem_cls):
+            e = cache_all["rem"][i]
+            if spec.kind == "attn":
+                rem.append(self._extract_attn_paged(win, e, slot, tbl,
+                                                    stacked=False))
+            else:
+                rem.append(jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
+                    e))
+        return {"period": tuple(per), "rem": tuple(rem),
+                "pos": cache_all["pos"]}
+
     # ------------------------------------------------------------------
     def has_capacity(self) -> bool:
         return len(self.free) > 0
 
+    def _find_shared(self, prompt, cached: int) -> list[int]:
+        """Physical prefix blocks to map for an admission whose first
+        `cached` tokens are radix-cached: a live request whose prompt shares
+        that prefix lends its FULL prefix blocks (floor — the partial tail
+        block is always privately copied by the borrower). Returns [] when
+        no lender is resident (the credit is then not taken: PR 1 credited
+        blocks that were not physically anywhere)."""
+        shn = self.pool.shareable_blocks(cached)
+        if shn <= 0 or prompt is None:
+            return []
+        prompt = tuple(prompt)
+        for rid, ptoks in self._prompts.items():
+            if (ptoks is not None and len(ptoks) >= cached
+                    and tuple(ptoks[:cached]) == prompt[:cached]):
+                blocks = self.pool.owned(rid)
+                if len(blocks) >= shn:
+                    return blocks[:shn]
+        return []
+
     def admit_batch(self, items: list[tuple]) -> dict[int, bool]:
-        """items: (rid, cache_one, next_token, pos, cached_tokens). Inserts
-        every admissible item in ONE donated jit call; → {rid: admitted}."""
+        """items: (rid, cache_one, next_token, pos, cached_tokens[, prompt]).
+        Inserts every admissible item in ONE donated jit call;
+        → {rid: admitted}. With paged KV, `prompt` enables prefix-sharing
+        admission: full blocks of the cached prefix are mapped from a live
+        lender instead of copied."""
         out: dict[int, bool] = {}
         batch = []
-        for rid, cache_one, tok, pos, cached in items:
-            if not self.free or not self.pool.allocate(rid, pos + 1,
-                                                       cached_tokens=cached):
+        for item in items:
+            rid, cache_one, tok, pos, cached = item[:5]
+            prompt = item[5] if len(item) > 5 else None
+            if not self.free:
                 out[rid] = False
                 continue
-            slot = self.free.pop()
+            if self.paged:
+                shared = self._find_shared(prompt, cached)
+                tbl = self.pool.allocate(rid, pos + 1, shared=shared)
+                if tbl is None:
+                    out[rid] = False
+                    continue
+                self.stats["blocks_shared"] += len(shared)
+                self.stats["blocks_fresh"] += len(tbl) - len(shared)
+                slot = self.free.pop()
+                row = np.zeros(self.max_blocks, np.int32)
+                row[:len(tbl)] = tbl
+                self.tables_h[slot] = row
+                shn = len(shared)
+            else:
+                if self.pool.allocate(rid, pos + 1,
+                                      cached_tokens=cached) is None:
+                    out[rid] = False
+                    continue
+                slot = self.free.pop()
+                row, shn = None, 0
             self.slot_rid[slot] = rid
             self.rid_slot[rid] = slot
+            self._prompts[rid] = tuple(prompt) if prompt is not None else None
             self.pos_h[slot] = pos
             self.tok_h[slot] = tok
             self.tokens_h[slot] = pos + 1
             self.stats["kv_transfer_bytes"] += kv_bytes(cache_one)
             self.stats["admits"] += 1
-            batch.append((slot, cache_one, tok, pos))
+            batch.append((slot, cache_one, tok, pos, row, shn))
             out[rid] = True
         if batch:
             # pad to a pow2 batch by repeating the last insert (idempotent:
@@ -372,15 +602,24 @@ class DecodeEngine:
             slots = jnp.asarray([b[0] for b in batch], jnp.int32)
             toks = jnp.asarray([b[2] for b in batch], jnp.int32)
             poss = jnp.asarray([b[3] for b in batch], jnp.int32)
-            self.cache, self.state = self._insert(
-                self.cache, self.state, tuple(b[1] for b in batch),
-                slots, toks, poss)
+            caches = tuple(b[1] for b in batch)
+            if self.paged:
+                tbls = jnp.asarray(np.stack([b[4] for b in batch]), jnp.int32)
+                shns = jnp.asarray([b[5] for b in batch], jnp.int32)
+                self.cache, self.state = self._insert(
+                    self.cache, self.state, caches, slots, toks, poss,
+                    tbls, shns)
+                self._tbl_dev = jnp.asarray(self.tables_h)
+                self._tbl_dirty = False
+            else:
+                self.cache, self.state = self._insert(
+                    self.cache, self.state, caches, slots, toks, poss)
         return out
 
     def admit(self, rid: int, cache_one, first_token: int, prompt_len: int,
-              cached_tokens: int = 0) -> bool:
+              cached_tokens: int = 0, prompt: Optional[tuple] = None) -> bool:
         return self.admit_batch([(rid, cache_one, first_token, prompt_len,
-                                  cached_tokens)])[rid]
+                                  cached_tokens, prompt)])[rid]
 
     # ------------------------------------------------------------------
     def step(self) -> dict[int, int]:
@@ -390,8 +629,12 @@ class DecodeEngine:
         if not self.slot_rid:
             return {}
         t0 = time.monotonic()
+        if self.paged and self._tbl_dirty:
+            self._tbl_dev = jnp.asarray(self.tables_h)
+            self._tbl_dirty = False
         self.cache, self.state, nxt = self._step(
-            self.params, self.cache, self.state, self.tables)
+            self.params, self.cache, self.state, self.tables,
+            self._tbl_dev if self.paged else None)
         next_np = np.asarray(nxt)          # the single per-step host fetch
         out = {}
         for slot, rid in list(self.slot_rid.items()):
@@ -399,12 +642,33 @@ class DecodeEngine:
             out[rid] = tok
             self.pos_h[slot] += 1
             self.tok_h[slot] = tok
-            if not self.pool.extend(rid, int(self.tokens_h[slot]),
-                                    int(self.tokens_h[slot]) + 1):
+            # work-based read metric: full-attention blocks gathered for this
+            # slot this step (the dense layout always touches max_blocks)
+            self.stats["blocks_touched"] += (
+                self.pool.blocks_for(int(self.tokens_h[slot]))
+                if self.paged else self.max_blocks)
+            # capacity is capped at max_len: a request decoding past it keeps
+            # emitting (its writes are dropped — null block for paged, OOB
+            # scatter drop for dense) but never grows its allocation —
+            # growing would index past the table row
+            cur = int(self.tokens_h[slot])
+            new_tokens = min(cur + 1, self.max_len)
+            nb_used = self.pool.blocks_for(cur)
+            grown = self.pool.extend(rid, cur, new_tokens)
+            if grown is None:
+                # the sampled token is already in `out` (delivered once); the
+                # preemption record carries it as the resume input so it is
+                # neither dropped nor replayed on re-admission
                 self.stats["preemptions"] += 1
                 self.preempted.append(self._preempt(rid))
                 continue
-            self.tokens_h[slot] += 1
+            if grown and self.paged:
+                for b in grown:
+                    self.tables_h[slot, nb_used] = b
+                    nb_used += 1
+                self._tbl_dirty = True
+                self.stats["blocks_fresh"] += len(grown)
+            self.tokens_h[slot] = new_tokens
         dt = time.monotonic() - t0
         self.stats["steps"] += 1
         self.stats["tokens"] += len(out)
@@ -425,7 +689,11 @@ class DecodeEngine:
 
     def _preempt(self, rid: int) -> tuple:
         slot = self.rid_slot[rid]
-        cache_one = self._extract(self.cache, jnp.int32(slot))
+        if self.paged:
+            cache_one = self._extract(self.cache, jnp.int32(slot),
+                                      jnp.asarray(self.tables_h[slot]))
+        else:
+            cache_one = self._extract(self.cache, jnp.int32(slot))
         rec = (rid, cache_one, int(self.tok_h[slot]), int(self.pos_h[slot]))
         self._free_slot(rid, slot)
         return rec
@@ -433,9 +701,16 @@ class DecodeEngine:
     def _free_slot(self, rid: int, slot: int):
         del self.slot_rid[slot]
         del self.rid_slot[rid]
+        self._prompts.pop(rid, None)
         self.state["active"] = self.state["active"].at[slot].set(False)
         self.free.append(slot)
         self.pool.release(rid)
+        if self.paged:
+            # the freed slot keeps decoding garbage until reused: its writes
+            # must land in the null block, not in blocks the pool may hand to
+            # another request
+            self.tables_h[slot] = 0
+            self._tbl_dirty = True
 
     def release(self, rid: int):
         slot = self.rid_slot.get(rid)

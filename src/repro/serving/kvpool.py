@@ -1,16 +1,29 @@
-"""Block-quantized KV accounting (vLLM-style paged allocator, host side).
+"""Physical paged KV allocator + radix-backed prefix KV store.
 
-The jit'd decode step operates on slot-dense caches; this allocator performs
-admission control and prefix-reuse accounting in block units so the engine
-refuses work that would exceed HBM — the part of PagedAttention that matters
-for scheduling fidelity. Prefix-cache hits (via the proxy radix tree) are
-credited as already-resident blocks.
+`KVPool` hands out real block ids for the decode engine's per-layer KV
+arenas (vLLM-style PagedAttention). Block id 0 is reserved as the null /
+scratch block — table entries past a request's resident count point at it,
+and writes from freed slots are redirected to it — so the pool allocates ids
+in [1, n_blocks]. Blocks are refcounted: a prefix-sharing admission maps the
+lender's full prefix blocks into the borrower's table (refcount++) instead
+of copying, and `release` only frees a block when its last mapper leaves.
+
+Sharing is restricted to FULL blocks of the cached prefix
+(`shareable_blocks` = floor(cached / block_size)): a prefix that ends
+mid-block leaves a partial tail block that the borrower must own privately
+(its content diverges as the borrower appends), so the tail is always
+freshly allocated and copied — crediting `ceil` here (the pre-paging
+arithmetic) both under-allocated and let a sharer's release free a block
+another request still mapped.
+
+The pool also serves accounting-only admission control for the slot-dense
+decode path (`cached_tokens` credit without physical sharing).
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import List, Optional, Sequence
 
 from repro.core.proxy.radix import RadixTree
 
@@ -26,7 +39,9 @@ class PrefixKVStore:
     scoring and the engine agree on what is actually resident.
 
     LRU-capped on entry count; evicted handles left in the tree are treated
-    as stale and skipped at lookup.
+    as stale and skipped at lookup. Re-storing a prompt supersedes the old
+    entry: its handle is dropped immediately (not left pinning dead KV until
+    LRU capacity happens to evict it).
     """
 
     def __init__(self, tree: Optional[RadixTree] = None, capacity: int = 32):
@@ -38,11 +53,20 @@ class PrefixKVStore:
     def put(self, tokens, cache, logits, now: Optional[float] = None):
         if self.capacity <= 0:
             return
+        tokens = tuple(tokens)
+        # a payload already attached at exactly this boundary is about to be
+        # superseded — drop its entry or the dead snapshot stays resident
+        old = None
+        for depth, handle in self.tree.payload_prefixes(tokens, now):
+            if depth == len(tokens):
+                old = handle
         handle = self._next_id
         self._next_id += 1
-        if not self.tree.attach(tuple(tokens), handle, now):
+        if not self.tree.attach(tokens, handle, now):
             return       # tree evicted the path (prompt > tree capacity):
                          # an unreachable entry would only pin memory
+        if old is not None:
+            self.entries.pop(old, None)
         self.entries[handle] = (len(tokens), cache, logits)
         while len(self.entries) > self.capacity:
             self.entries.popitem(last=False)      # stale handle stays in tree
@@ -60,42 +84,110 @@ class PrefixKVStore:
 
 @dataclass
 class KVPool:
-    n_blocks: int
+    n_blocks: int                       # allocatable blocks (ids 1..n_blocks)
     block_size: int = 16
-    free_blocks: int = field(init=False)
-    per_request: dict = field(default_factory=dict)
+    refcount: dict = field(default_factory=dict)       # block id → mappers
+    per_request: dict = field(default_factory=dict)    # rid → [block ids]
+    _free: List[int] = field(default_factory=list)
 
     def __post_init__(self):
-        self.free_blocks = self.n_blocks
+        self._free = list(range(self.n_blocks, 0, -1))   # pop() → id 1 first
 
+    # ---- arithmetic ---------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
-    def can_admit(self, n_tokens: int, cached_tokens: int = 0) -> bool:
-        need = self.blocks_for(n_tokens) - self.blocks_for(cached_tokens)
-        return need <= self.free_blocks
+    def shareable_blocks(self, cached_tokens: int) -> int:
+        """FULL blocks of a cached prefix — the only ones a borrower may map.
+        A prefix ending mid-block leaves a partial tail the borrower must
+        own privately (floor, not ceil: the pre-paging bug)."""
+        return cached_tokens // self.block_size
 
-    def allocate(self, rid: int, n_tokens: int, cached_tokens: int = 0) -> bool:
-        need = max(self.blocks_for(n_tokens) - self.blocks_for(cached_tokens), 0)
-        if need > self.free_blocks:
-            return False
-        self.free_blocks -= need
-        self.per_request[rid] = self.per_request.get(rid, 0) + need
-        return True
-
-    def extend(self, rid: int, old_tokens: int, new_tokens: int) -> bool:
-        need = self.blocks_for(new_tokens) - self.blocks_for(old_tokens)
-        if need <= 0:
-            return True
-        if need > self.free_blocks:
-            return False
-        self.free_blocks -= need
-        self.per_request[rid] = self.per_request.get(rid, 0) + need
-        return True
-
-    def release(self, rid: int):
-        self.free_blocks += self.per_request.pop(rid, 0)
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
 
     @property
     def utilization(self) -> float:
-        return 1.0 - self.free_blocks / max(self.n_blocks, 1)
+        return 1.0 - len(self._free) / max(self.n_blocks, 1)
+
+    def owned(self, rid: int) -> List[int]:
+        return list(self.per_request.get(rid, ()))
+
+    # ---- admission ----------------------------------------------------
+    def can_admit(self, n_tokens: int, cached_tokens: int = 0) -> bool:
+        need = self.blocks_for(n_tokens) - self.shareable_blocks(cached_tokens)
+        return max(need, 0) <= len(self._free)
+
+    def allocate(self, rid: int, n_tokens: int, cached_tokens: int = 0,
+                 shared: Optional[Sequence[int]] = None) -> Optional[List[int]]:
+        """Admit `rid` with capacity for `n_tokens`. → the request's block
+        table (logical order) or None if the pool cannot serve it.
+
+        shared: physical block ids mapped from a lender's resident prefix
+        (refcounted, never written by the borrower). Without `shared`,
+        `cached_tokens` is an accounting-only credit (slot-dense engines):
+        floor(cached/block_size) blocks are assumed resident elsewhere.
+        """
+        if rid in self.per_request:
+            raise ValueError(f"rid {rid} already admitted")
+        total = self.blocks_for(n_tokens)
+        if shared is not None:
+            shared = list(shared[:total])
+            fresh_n = total - len(shared)
+        else:
+            shared = []
+            fresh_n = total - min(self.shareable_blocks(cached_tokens), total)
+        if fresh_n > len(self._free):
+            return None
+        fresh = [self._free.pop() for _ in range(fresh_n)]
+        table = shared + fresh
+        for b in table:
+            self.refcount[b] = self.refcount.get(b, 0) + 1
+        self.per_request[rid] = table
+        return table
+
+    def extend(self, rid: int, old_tokens: int, new_tokens: int
+               ) -> Optional[List[int]]:
+        """Grow `rid`'s allocation from old_tokens → new_tokens. → the newly
+        allocated block ids ([] if the tail block still has room) or None if
+        the pool is exhausted (caller preempts). New blocks are always
+        private: shared prefix blocks are full by construction, so growth
+        never lands in a block another request maps."""
+        need = self.blocks_for(new_tokens) - self.blocks_for(old_tokens)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            return None
+        fresh = [self._free.pop() for _ in range(need)]
+        for b in fresh:
+            self.refcount[b] = self.refcount.get(b, 0) + 1
+        self.per_request.setdefault(rid, []).extend(fresh)
+        return fresh
+
+    def release(self, rid: int):
+        """Unmap all of `rid`'s blocks; a block returns to the free list only
+        when its last mapper releases (prefix sharers keep it alive)."""
+        for b in self.per_request.pop(rid, ()):
+            n = self.refcount.get(b, 0) - 1
+            if n <= 0:
+                self.refcount.pop(b, None)
+                self._free.append(b)
+            else:
+                self.refcount[b] = n
+
+    # ---- invariants (property tests) ---------------------------------
+    def check_invariants(self):
+        """No block is both free and mapped; refcounts match mapper counts;
+        block population is conserved."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate ids in free list"
+        assert not (free & set(self.refcount)), "block both free and mapped"
+        assert free | set(self.refcount) == set(range(1, self.n_blocks + 1)), \
+            "block population not conserved"
+        counts: dict = {}
+        for blocks in self.per_request.values():
+            assert len(set(blocks)) == len(blocks), "duplicate block in table"
+            for b in blocks:
+                counts[b] = counts.get(b, 0) + 1
+        assert counts == self.refcount, "refcounts diverge from mappings"

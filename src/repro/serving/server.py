@@ -47,6 +47,8 @@ class ServerConfig:
     prefix_reuse: bool = True         # radix partial-prefix KV resume
     prefix_cache_cap: int = 32        # stored prefixes per prefill instance
     kv_blocks: Optional[int] = None   # decode KVPool size override
+    paged_kv: bool = True             # physically paged decode KV arenas
+    kv_block_size: int = 16           # tokens per KV block
     enable_placement: bool = True     # OmniPlacement dynamic scheduler
     placement_interval: int = 16      # decode steps between monitor ticks
     eos_token: int = -1               # -1 → run to max_tokens
@@ -74,9 +76,12 @@ class Server:
             for i in range(scfg.n_prefill)]
         self.decodes = [DecodeEngine(self.lm, self.params, self.tables,
                                      scfg.decode_slots, scfg.max_len,
-                                     kv_blocks=scfg.kv_blocks)
+                                     kv_blocks=scfg.kv_blocks,
+                                     paged=scfg.paged_kv,
+                                     block_size=scfg.kv_block_size)
                         for _ in range(scfg.n_decode)]
-        # rid → (cache B=1, next_token, pos, cached_tokens) awaiting admission
+        # rid → (cache B=1, next_token, pos, cached_tokens, prompt) awaiting
+        # admission (prompt drives prefix-block sharing in the paged pool)
         self._pending_kv: dict[int, tuple] = {}
         self._step_count = 0
         self.n_migrations = 0
@@ -144,7 +149,8 @@ class Server:
                 self.proxy.on_first_token(req, rec.t_done or tnow)
                 req.output_tokens.append(rec.first_token)
                 self._pending_kv[req.rid] = (rec.cache, rec.first_token,
-                                             rec.prompt_len, rec.reused)
+                                             rec.prompt_len, rec.reused,
+                                             req.tokens)
 
     def _decode_round(self):
         for iid, eng in enumerate(self.decodes):
@@ -176,7 +182,7 @@ class Server:
                 req = self.proxy.inflight.get(rid)
                 if rid in finished or req is None:
                     continue
-                self._pending_kv[rid] = (cache_one, tok, pos, 0)
+                self._pending_kv[rid] = (cache_one, tok, pos, 0, req.tokens)
                 self.proxy.on_decode_preempt(req, now)
             eng.preempted.clear()
         self._step_count += 1

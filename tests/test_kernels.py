@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.moe_gmm import moe_gmm
+from repro.kernels.paged_decode import paged_decode
 from repro.kernels.sink_decode import sink_decode
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
@@ -59,6 +60,71 @@ def test_sink_decode_occupancy_zero():
     out = sink_decode(q, kc, vc, jnp.array([1]), block_w=8, interpret=True)
     np.testing.assert_allclose(np.asarray(out[0, 0]),
                                np.asarray(vc[0, 0, 0][None].repeat(2, 0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bs,nb", [(8, 6), (16, 4), (16, 1)])
+@pytest.mark.parametrize("G", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_sweep(bs, nb, G, dtype):
+    """Block-table gather + online softmax vs the linear-gather oracle,
+    including partial tail blocks and per-sequence lens."""
+    rng = jax.random.PRNGKey(bs * nb + G)
+    r = jax.random.split(rng, 4)
+    B, K, h, N = 3, 2, 32, 24
+    q = jax.random.normal(r[0], (B, K, G, h), dtype)
+    kp = jax.random.normal(r[1], (N, K, bs, h), dtype)
+    vp = jax.random.normal(r[2], (N, K, bs, h), dtype)
+    tables = jax.random.randint(r[3], (B, nb), 1, N)
+    # lens: one token, a mid-block tail, and fully resident
+    lens = jnp.array([1, max(nb * bs // 2 - 3, 1), nb * bs])
+    out = paged_decode(q, kp, vp, tables, lens, interpret=True)
+    want = ref.paged_decode_ref(q, kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_decode_null_blocks_masked():
+    """Table entries past the resident count point at the null block (id 0);
+    its content must never leak into the output."""
+    rng = jax.random.PRNGKey(1)
+    r = jax.random.split(rng, 3)
+    B, K, G, h, bs, N = 1, 1, 2, 16, 8, 6
+    q = jax.random.normal(r[0], (B, K, G, h))
+    kp = jax.random.normal(r[1], (N, K, bs, h))
+    vp = jax.random.normal(r[2], (N, K, bs, h))
+    kp = kp.at[0].set(1e4)          # poisoned null block
+    vp = vp.at[0].set(1e4)
+    tables = jnp.array([[3, 0, 0]])            # only block 0 logical resident
+    lens = jnp.array([bs])
+    out = paged_decode(q, kp, vp, tables, lens, interpret=True)
+    want = ref.sink_decode_ref(q, kp[jnp.array([3])], vp[jnp.array([3])], lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_paged_vs_sink_decode_linear_tables():
+    """With an identity block table the paged kernel must reproduce
+    sink_decode exactly (same occupancy semantics)."""
+    rng = jax.random.PRNGKey(2)
+    r = jax.random.split(rng, 3)
+    B, K, G, h, bs = 2, 2, 2, 32, 16
+    nb = 4
+    W = nb * bs
+    q = jax.random.normal(r[0], (B, K, G, h))
+    kc = jax.random.normal(r[1], (B, K, W, h))
+    vc = jax.random.normal(r[2], (B, K, W, h))
+    # arena: batch-major linear layout, identity tables per sequence
+    kp = kc.reshape(B, K, nb, bs, h).transpose(0, 2, 1, 3, 4).reshape(
+        B * nb, K, bs, h)
+    vp = vc.reshape(B, K, nb, bs, h).transpose(0, 2, 1, 3, 4).reshape(
+        B * nb, K, bs, h)
+    tables = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    t = jnp.array([W // 3, W])
+    out = paged_decode(q, kp, vp, tables, t, interpret=True)
+    want = sink_decode(q, kc, vc, t, block_w=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 

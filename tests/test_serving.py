@@ -93,13 +93,14 @@ def test_prefill_exact_cache_hit(small):
 
 def test_kvpool_admission():
     pool = KVPool(n_blocks=4, block_size=16)
-    assert pool.allocate(1, 40)            # 3 blocks
-    assert not pool.can_admit(40)          # only 1 left
-    assert pool.allocate(2, 10)            # 1 block
-    assert not pool.allocate(3, 1)
+    assert pool.allocate(1, 40) is not None     # 3 blocks
+    assert not pool.can_admit(40)               # only 1 left
+    assert pool.allocate(2, 10) is not None     # 1 block
+    assert pool.allocate(3, 1) is None
     pool.release(1)
-    assert pool.allocate(3, 30)            # 2 blocks
+    assert pool.allocate(3, 30) is not None     # 2 blocks
     assert pool.utilization == 0.75
+    pool.check_invariants()
 
 
 def test_chunked_prefill_matches_full(small):
@@ -236,21 +237,266 @@ def test_decode_preemption_on_block_exhaustion(small):
 
 def test_kvpool_denial_extend_release_readmit():
     pool = KVPool(n_blocks=3, block_size=16)
-    assert pool.allocate(1, 30)            # 2 blocks
-    assert not pool.allocate(2, 20)        # needs 2, only 1 free
-    assert pool.allocate(2, 10)            # 1 block
-    assert not pool.extend(1, 30, 35)      # crosses 32 → needs a 3rd block
-    assert pool.extend(1, 30, 32)          # same block: free
+    assert pool.allocate(1, 30) is not None     # 2 blocks
+    assert pool.allocate(2, 20) is None         # needs 2, only 1 free
+    assert pool.allocate(2, 10) is not None     # 1 block
+    assert pool.extend(1, 30, 35) is None  # crosses 32 → needs a 3rd block
+    assert pool.extend(1, 30, 32) == []    # same block: free
     pool.release(2)
     assert pool.extend(1, 32, 35)          # now fits
     assert pool.free_blocks == 0
     pool.release(1)
     assert pool.free_blocks == 3
-    assert pool.allocate(3, 48)            # release → readmit full pool
+    assert pool.allocate(3, 48) is not None     # release → readmit full pool
     # prefix-credited admission only charges the non-resident suffix
     pool.release(3)
-    assert pool.allocate(4, 48, cached_tokens=32)
+    assert pool.allocate(4, 48, cached_tokens=32) is not None
     assert pool.free_blocks == 2
+    pool.check_invariants()
+
+
+def test_kvpool_partial_block_prefix_credit():
+    """A cached prefix ending mid-block must only credit its FULL blocks:
+    the partial tail block is the borrower's to allocate and copy (the
+    pre-paging ceil arithmetic under-allocated by one block here)."""
+    pool = KVPool(n_blocks=4, block_size=16)
+    # 20 cached tokens = 1 full block + 4 tokens into the second: only ONE
+    # block is shareable; admitting 40 tokens (3 blocks) must charge 2.
+    assert pool.shareable_blocks(20) == 1
+    t = pool.allocate(1, 40, cached_tokens=20)
+    assert t is not None and pool.free_blocks == 4 - 2
+    pool.release(1)
+    assert pool.free_blocks == 4
+    # physical sharing path: lender's full prefix block is mapped, borrower
+    # owns the tail block privately, and release order cannot double-free
+    pool = KVPool(n_blocks=5, block_size=16)
+    lend = pool.allocate(10, 40)                # 3 blocks, rids 10/11 share
+    assert lend is not None
+    borrow = pool.allocate(11, 40, shared=lend[:1])
+    assert borrow is not None
+    assert borrow[0] == lend[0] and borrow[1] != lend[1]
+    assert pool.refcount[lend[0]] == 2
+    pool.release(10)                            # lender leaves first
+    assert pool.refcount[lend[0]] == 1          # borrower still maps it
+    pool.check_invariants()
+    pool.release(11)
+    assert pool.free_blocks == 5
+    pool.check_invariants()
+
+
+def test_kvpool_property_random_ops():
+    """Randomized allocator property sweep: alloc/extend/share/release never
+    double-free, never hand out a mapped block, and conserve the block
+    population (checked after every op)."""
+    rng = np.random.default_rng(0)
+    pool = KVPool(n_blocks=24, block_size=8)
+    live: dict[int, int] = {}           # rid → accounted tokens
+    next_rid = 0
+    for _ in range(1500):
+        op = rng.integers(0, 3)
+        if op == 0:                     # allocate, sometimes prefix-sharing
+            n_tokens = int(rng.integers(1, 120))
+            shared = None
+            if live and rng.random() < 0.5:
+                donor = int(rng.choice(list(live)))
+                cached = int(rng.integers(0, min(live[donor], n_tokens) + 1))
+                shared = pool.owned(donor)[:pool.shareable_blocks(cached)]
+            t = pool.allocate(next_rid, n_tokens, shared=shared)
+            if t is not None:
+                assert len(t) == pool.blocks_for(n_tokens)
+                live[next_rid] = n_tokens
+            next_rid += 1
+        elif op == 1 and live:          # extend
+            rid = int(rng.choice(list(live)))
+            grow = int(rng.integers(1, 20))
+            if pool.extend(rid, live[rid], live[rid] + grow) is not None:
+                live[rid] += grow
+                assert len(pool.owned(rid)) == pool.blocks_for(live[rid])
+        elif op == 2 and live:          # release
+            rid = int(rng.choice(list(live)))
+            pool.release(rid)
+            del live[rid]
+            pool.release(rid)           # double release must be a no-op
+        pool.check_invariants()
+    for rid in list(live):
+        pool.release(rid)
+    pool.check_invariants()
+    assert pool.free_blocks == pool.n_blocks
+
+
+def test_kvpool_property_hypothesis():
+    """Same invariants driven by hypothesis (skipped where not installed)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 7),
+                                  st.integers(1, 90)), max_size=60))
+    @hyp.settings(deadline=None, max_examples=50)
+    def run(ops):
+        pool = KVPool(n_blocks=8, block_size=16)
+        live: dict[int, int] = {}
+        for kind, rid, n in ops:
+            if kind == 0 and rid not in live:
+                if pool.allocate(rid, n) is not None:
+                    live[rid] = n
+            elif kind == 1 and rid in live:
+                if pool.extend(rid, live[rid], live[rid] + n) is not None:
+                    live[rid] += n
+            elif kind == 2:
+                pool.release(rid)
+                live.pop(rid, None)
+            pool.check_invariants()
+        for rid in list(live):
+            pool.release(rid)
+        assert pool.free_blocks == pool.n_blocks
+
+    run()
+
+
+def test_prefix_store_supersede_drops_old_entry():
+    """Re-storing the same prompt must drop the superseded entry immediately
+    instead of letting the dead (cache, logits) snapshot pin KV memory until
+    LRU capacity eviction."""
+    from repro.serving.kvpool import PrefixKVStore
+    store = PrefixKVStore(capacity=8)
+    store.put((1, 2, 3), "c1", "l1")
+    assert len(store.entries) == 1
+    store.put((1, 2, 3), "c2", "l2")
+    assert len(store.entries) == 1            # old snapshot dropped eagerly
+    assert store.lookup((1, 2, 3))[1:] == ("c2", "l2")
+    # strict-prefix and unrelated entries are NOT superseded
+    store.put((1, 2), "p", "lp")
+    store.put((9, 9), "q", "lq")
+    store.put((1, 2, 3), "c3", "l3")
+    assert len(store.entries) == 3
+    assert store.lookup((1, 2, 3))[1] == "c3"
+    assert store.lookup((1, 2, 7))[1] == "p"
+    assert store.lookup((9, 9))[1] == "q"
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_paged_vs_dense_decode_equivalence(block_size):
+    """Greedy outputs must be identical between the slot-dense and the
+    physically paged decode paths, over a stack mixing full, sliding-window,
+    and sink+recent-compressed attention layers."""
+    from repro.configs.base import OmniAttnConfig
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=4,
+        local_per_global=1, local_window=16,
+        omniattn=OmniAttnConfig(sink_tokens=8, recent_tokens=24))
+    lm = LM.build(cfg, mesh, pattern=[0, 0, 0, 1])
+    specs = lm.plan.all_specs()
+    assert any(s.window > 0 and not s.compressed for s in specs)
+    assert any(s.compressed for s in specs)
+    assert any(s.kind == "attn" and s.window == 0 and not s.compressed
+               for s in specs)
+    params = lm.init(jax.random.PRNGKey(1))
+    pe = PrefillEngine(lm, params, None, max_len=96)
+    rng = np.random.default_rng(7)
+    prompts = [tuple(rng.integers(0, cfg.vocab_size, n)) for n in (9, 21, 33)]
+    handoff = []
+    for i, p in enumerate(prompts):
+        cache, first, _ = pe.process(p)
+        handoff.append((i, cache, first, len(p), 0, p))
+    outs = {}
+    for paged in (False, True):
+        de = DecodeEngine(lm, params, None, n_slots=4, max_len=96,
+                          paged=paged, block_size=block_size)
+        granted = de.admit_batch(handoff)
+        assert all(granted.values())
+        o = {rid: [f] for rid, _, f, *_ in handoff}
+        for _ in range(8):
+            for rid, t in de.step().items():
+                o[rid].append(t)
+        outs[paged] = o
+    assert outs[True] == outs[False]
+
+
+def test_paged_prefix_sharing_maps_blocks(small):
+    """A prefix-sharing admission must MAP the lender's full prefix blocks
+    (refcount 2, no fresh allocation for them) and copy only from the
+    partial tail block onward; the borrower must survive the lender's
+    release and still decode the from-scratch greedy stream."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(21)
+    base = tuple(rng.integers(0, cfg.vocab_size, 32))     # 2 full blocks
+    p1 = base + tuple(rng.integers(0, cfg.vocab_size, 8))
+    p2 = base + tuple(rng.integers(0, cfg.vocab_size, 11))
+    ref2 = greedy_reference(lm, params, p2, 7)
+
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    de = DecodeEngine(lm, params, None, n_slots=4, max_len=96, block_size=16)
+    c1, f1, _ = pe.process(p1)
+    assert de.admit(0, c1, f1, len(p1), prompt=p1)
+    fresh0 = de.stats["blocks_fresh"]
+    c2, f2, _ = pe.process(p2)                 # radix-resumed at len(base)
+    assert de.admit(1, c2, f2, len(p2), cached_tokens=len(base), prompt=p2)
+    assert de.stats["blocks_shared"] == 2      # both full base blocks mapped
+    t1, t2 = de.pool.owned(0), de.pool.owned(1)
+    assert t2[:2] == t1[:2]                    # physically the same blocks
+    assert de.pool.refcount[t1[0]] == de.pool.refcount[t1[1]] == 2
+    assert de.stats["blocks_fresh"] - fresh0 == len(t2) - 2
+    de.pool.check_invariants()
+
+    outs = {1: [f2]}
+    for _ in range(3):
+        outs[1].append(de.step()[1])
+    de.release(0)                              # lender leaves mid-stream
+    assert de.pool.refcount[t1[0]] == 1        # borrower keeps the blocks
+    while len(outs[1]) < len(ref2):
+        outs[1].append(de.step()[1])
+    assert outs[1] == ref2
+    de.pool.check_invariants()
+
+
+def test_paged_decode_past_max_len_no_crash(small):
+    """A request decoding past max_len must not grow its block table past
+    the row width (that used to IndexError); capacity pins at max_len, the
+    overflow writes are dropped (null block — matching the dense path's OOB
+    scatter drop), and the token stream stays dense-identical throughout."""
+    cfg, lm, params = small
+    pe = PrefillEngine(lm, params, None, max_len=32)
+    outs = {}
+    for paged in (False, True):
+        de = DecodeEngine(lm, params, None, n_slots=2, max_len=32,
+                          paged=paged)
+        cache, first, _ = pe.process((1, 2, 3, 4, 5))
+        assert de.admit(0, cache, first, 5)
+        o = [first]
+        for _ in range(32):                # runs well past 32-token capacity
+            o.append(de.step()[0])
+        assert int(de.tokens_h[de.rid_slot[0]]) == 32
+        de.pool.check_invariants()
+        outs[paged] = o
+    assert outs[True] == outs[False]
+
+
+def test_server_preemption_token_continuity(small):
+    """Forced KV-exhaustion preemptions through the whole server must not
+    drop or replay any sampled token: outputs are greedy-identical to an
+    unconstrained run."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(23)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 14)), 8) for _ in range(2)]
+
+    def run(kv_blocks):
+        scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4,
+                            max_len=96, kv_blocks=kv_blocks,
+                            oas=OASConfig(defer_window=0.0))
+        srv = Server(cfg, scfg, pattern=[0, 0])
+        s = srv.run(reqs, max_wall_s=120)
+        outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+        return s, outs
+
+    s_free, outs_free = run(None)              # unconstrained pool
+    assert s_free["n_done"] == 2
+    assert s_free["decode_stats"][0]["preemptions"] == 0
+    s_tight, outs_tight = run(3)               # 3 blocks → forced preemption
+    assert s_tight["n_done"] == 2
+    assert s_tight["decode_stats"][0]["preemptions"] >= 1
+    assert outs_tight == outs_free
+    assert all(len(v) == 8 for v in outs_tight.values())
 
 
 def test_radix_payload_prefix_store(small):
