@@ -11,6 +11,9 @@ and paged-KV levers:
                   KV (isolates what physical paging adds on top)
   chunked+reuse   ServerConfig defaults: chunked prefill + radix resume +
                   physically paged decode KV with prefix-block sharing
+  sampled         chunked+reuse with per-request SamplingParams (temperature /
+                  top-k / top-p / seed) — records the overhead of the fused
+                  device-side sampling step vs the greedy `where` branch
 
 The workload is the paper's APC regime under closed-loop pressure: all
 requests land at t=0 and most prompts share a long system prefix. The dense
@@ -30,29 +33,34 @@ compute-skips non-resident blocks.
 copy) vs `blocks_fresh` allocated-and-written; a prefix-sharing admission
 copies only the partial tail block and the suffix.
 
-Greedy decode outputs are asserted identical across all variants (the
+Greedy decode outputs are asserted identical across all greedy variants (the
 chunked and paged paths are numerically exact; argmax at float32 must
-agree).
+agree). Every variant additionally asserts `host_fetches == steps` on the
+decode engine: sampling runs inside the batched jit step, so per-request
+decoding config adds ZERO per-token host syncs.
 """
 from __future__ import annotations
 
 import numpy as np
 
 
-def _workload(vocab: int, n: int):
+def _workload(vocab: int, n: int, sampled: bool = False):
     """Closed-loop shared-prefix pressure, all submitted at t=0: two of
     three prompts carry a 384-token system prefix (+64 distinct tokens,
     ~55 ms prefill at this config); the rest are short. Every request
     queues behind the aggregate prefill backlog, so the prefill compute the
     radix cache eliminates converts directly into mean-TTFT reduction."""
+    from repro.serving import SamplingParams
     rng = np.random.default_rng(7)
     base = tuple(rng.integers(0, vocab, 384))
     reqs = []
     for i in range(n):
+        spec = SamplingParams(temperature=0.9, top_k=64, top_p=0.95,
+                              seed=900 + i, max_tokens=4) if sampled else 4
         if i % 3 != 2:
-            reqs.append((base + tuple(rng.integers(0, vocab, 64)), 4))
+            reqs.append((base + tuple(rng.integers(0, vocab, 64)), spec))
         else:
-            reqs.append((tuple(rng.integers(0, vocab, 16)), 4))
+            reqs.append((tuple(rng.integers(0, vocab, 16)), spec))
     return reqs
 
 
@@ -77,11 +85,12 @@ def _build(chunked: bool, reuse: bool, paged: bool):
     srv.metrics = MetricsAggregator()
     for e in srv.prefills:
         e.stats.update(prefills=0, cache_hits=0, prefix_hits=0,
-                       reused_tokens=0, tokens=0, chunks=0, busy_s=0.0)
+                       reused_tokens=0, tokens=0, chunks=0, busy_s=0.0,
+                       host_fetches=0)
     for e in srv.decodes:
         e.stats.update(steps=0, tokens=0, busy_s=0.0, kv_transfer_bytes=0,
                        admits=0, preemptions=0, blocks_touched=0,
-                       blocks_shared=0, blocks_fresh=0)
+                       blocks_shared=0, blocks_fresh=0, host_fetches=0)
     return cfg, srv
 
 
@@ -91,12 +100,23 @@ def _warm(srv, cfg):
     and all pow2 admission-batch sizes. Warm prompts are mutually prefix-free
     and practically disjoint from the random workload, so the prefix store
     carries no usable entries into the measurement."""
+    import jax.numpy as jnp
+
+    from repro.serving import SamplingParams
+
     pe, de = srv.prefills[0], srv.decodes[0]
     recs = []
     for i, n in enumerate((5, 12, 24, 64, 320)):
         p = tuple((1000 + 131 * i + 7 * j) % cfg.vocab_size for j in range(n))
         cache, first, _ = pe.process(p)
         recs.append((cache, first, n))
+    # first-token sampler buckets: several prompts can finish in one engine
+    # round during the measurement (greedy and sampled rows share a trace —
+    # the params are data, not shape)
+    dummy = jnp.zeros((1, cfg.vocab_size), jnp.float32)
+    sp = SamplingParams(temperature=0.9, top_k=64, top_p=0.95, seed=0)
+    for k in (1, 2, 4, 8):
+        pe.sample_first([dummy] * k, [sp] * k, list(range(k)), [8] * k)
     rid = 9000
     for k in (1, 2, 4, 8):
         batch = []
@@ -112,22 +132,43 @@ def _warm(srv, cfg):
 
 
 def run(n_requests: int = 12):
-    """→ list of per-variant result dicts (also checks greedy equality)."""
+    """→ list of per-variant result dicts (also checks greedy equality and
+    the zero-new-host-sync property of device-side sampling)."""
     # one lever per step: dense→chunked isolates the interleave trade,
-    # chunked+reuse+dense→chunked+reuse isolates physical paging
-    variants = [("dense", False, False, False),
-                ("chunked", True, False, False),
-                ("chunked+reuse+dense", True, True, False),
-                ("chunked+reuse", True, True, True)]
+    # chunked+reuse+dense→chunked+reuse isolates physical paging, and
+    # sampled puts per-request temperature/top-k/top-p/seed on top of the
+    # server defaults to price the fused sampling step
+    variants = [("dense", False, False, False, False),
+                ("chunked", True, False, False, False),
+                ("chunked+reuse+dense", True, True, False, False),
+                ("chunked+reuse", True, True, True, False),
+                ("sampled", True, True, True, True)]
     results, outputs = [], {}
-    for name, chunked, reuse, paged in variants:
+    for name, chunked, reuse, paged, sampled in variants:
         cfg, srv = _build(chunked, reuse, paged)
-        reqs = _workload(cfg.vocab_size, n_requests)
+        reqs = _workload(cfg.vocab_size, n_requests, sampled=sampled)
         s = srv.run(reqs, max_wall_s=300)
         outputs[name] = {r.rid: tuple(r.output_tokens)
                          for r in srv.metrics.done}
         ps = s["prefill_stats"][0]
         ds = s["decode_stats"][0]
+        # host-fetch tripwires: host_fetches is incremented at every
+        # device→host fetch site in the engines, so a code path that adds a
+        # per-token or per-record sync must either bump the counter (and
+        # trip these) or show up in review as an uncounted np.asarray
+        assert ds["host_fetches"] == ds["steps"], \
+            f"{name}: decode host fetches {ds['host_fetches']} != steps"
+        n_finished = ps["prefills"] + ps["cache_hits"]
+        assert ps["host_fetches"] <= n_finished, \
+            f"{name}: prefill first-token fetches not batched"
+        if reuse:
+            # shared-prefix sharers complete in bursts after the snapshot
+            # boundary: first-token sampling MUST be batching multiple
+            # finishes per fused call (a per-record sync would equal
+            # n_finished and fail strictly)
+            assert ps["host_fetches"] < n_finished, \
+                f"{name}: first-token sampling not actually batched " \
+                f"({ps['host_fetches']} fetches / {n_finished} prompts)"
         results.append({
             "variant": name,
             "n_done": s["n_done"],
@@ -143,18 +184,24 @@ def run(n_requests: int = 12):
             "blocks_touched": ds["blocks_touched"],
             "blocks_shared": ds["blocks_shared"],
             "blocks_fresh": ds["blocks_fresh"],
+            "host_fetches": ds["host_fetches"],
+            "first_fetches": ps["host_fetches"],
         })
     ref = outputs["dense"]
-    for name, _, _, _ in variants[1:]:
+    for name, *_ in variants[1:]:
+        if name == "sampled":
+            continue                    # stochastic by design
         assert outputs[name] == ref, \
             f"greedy outputs diverged between dense and {name} paths"
+    assert outputs["sampled"] != ref, "sampled variant decoded greedily"
     return results
 
 
 def main(fast: bool = False):
     print("variant,n_done,qps,ttft_mean_s,ttft_p99_s,tpot_mean_ms,"
           "ott_tok_s,prefill_tokens,reused_tokens,prefix_hits,"
-          "tok_per_step,blocks_touched,blocks_shared,blocks_fresh")
+          "tok_per_step,blocks_touched,blocks_shared,blocks_fresh,"
+          "host_fetches,first_fetches")
     rows = run(8 if fast else 12)
     for r in rows:
         print(f"{r['variant']},{r['n_done']},{r['qps']:.2f},"
@@ -163,17 +210,22 @@ def main(fast: bool = False):
               f"{r['prefill_tokens']},{r['reused_tokens']},"
               f"{r['prefix_hits']},{r['tok_per_step']:.2f},"
               f"{r['blocks_touched']},{r['blocks_shared']},"
-              f"{r['blocks_fresh']}", flush=True)
+              f"{r['blocks_fresh']},{r['host_fetches']},"
+              f"{r['first_fetches']}", flush=True)
     full = next(r for r in rows if r["variant"] == "dense")
     chk = next(r for r in rows if r["variant"] == "chunked+reuse")
     dns = next(r for r in rows if r["variant"] == "chunked+reuse+dense")
-    print(f"# greedy outputs identical across variants; dense → server "
-          f"defaults: ttft_mean {full['ttft_mean_s']:.4f}s"
+    smp = next(r for r in rows if r["variant"] == "sampled")
+    print(f"# greedy outputs identical across greedy variants; dense → "
+          f"server defaults: ttft_mean {full['ttft_mean_s']:.4f}s"
           f" → {chk['ttft_mean_s']:.4f}s, tpot {full['tpot_mean_ms']:.1f}ms"
           f" → {chk['tpot_mean_ms']:.1f}ms; paged decode touches "
           f"{chk['blocks_touched']} KV blocks vs {dns['blocks_touched']} "
           f"slot-dense, {chk['blocks_shared']} prefix blocks mapped "
-          f"(not copied) at admission", flush=True)
+          f"(not copied) at admission; per-request sampling: "
+          f"tpot {chk['tpot_mean_ms']:.1f}ms → {smp['tpot_mean_ms']:.1f}ms "
+          f"with host_fetches == decode steps ({smp['host_fetches']}) — "
+          f"zero per-token syncs added", flush=True)
 
 
 if __name__ == "__main__":

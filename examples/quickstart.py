@@ -1,18 +1,25 @@
-"""Quickstart: build a reduced model, run the full OmniInfer serving stack
-(OmniProxy → prefill → KV transfer → batched decode with sink+recent
-compressed caches) on CPU, print serving metrics.
+"""Quickstart: build a reduced model, stream requests through the full
+OmniInfer serving stack (OmniProxy → chunked prefill → KV transfer → batched
+decode with per-request sampling) via the `generate()` iterator, print
+serving metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import time
+
 import numpy as np
 
 from repro.configs import reduced_config
 from repro.core.proxy import OASConfig
-from repro.serving import Server, ServerConfig
+from repro.serving import SamplingParams, Server, ServerConfig
 
 
 def main():
+    smoke = bool(os.environ.get("REPRO_SMOKE"))    # CI: tiny, fast config
     cfg = reduced_config("qwen2-1.5b")
+    if smoke:
+        cfg = cfg.with_updates(n_layers=2)
     print(f"arch={cfg.arch_id} (reduced: {cfg.n_layers}L d{cfg.d_model}) "
           f"compression pattern={cfg.default_compression_pattern()}")
 
@@ -21,21 +28,37 @@ def main():
                                    oas=OASConfig(defer_window=0.0)))
     rng = np.random.default_rng(0)
     shared = tuple(rng.integers(0, 500, 16).tolist())   # shared system prompt
-    requests = []
-    for i in range(6):
+    prompts, params = [], []
+    for i in range(3 if smoke else 6):
         prompt = shared + tuple(rng.integers(0, 500, 4 + 3 * i).tolist()) \
             if i % 2 == 0 else \
             tuple(rng.integers(0, 500, int(rng.integers(8, 24))).tolist())
-        requests.append((prompt, 6))
+        prompts.append(prompt)
+        # every request carries its own decoding config: even rids greedy,
+        # odd rids seeded temperature sampling
+        params.append(SamplingParams(max_tokens=6) if i % 2 == 0 else
+                      SamplingParams(temperature=0.8, top_k=40, top_p=0.95,
+                                     seed=i, max_tokens=6))
 
-    summary = srv.run(requests, max_wall_s=180)
-    print(f"\nserved {summary['n_done']} requests in {summary['wall_s']:.1f}s")
+    t0 = time.monotonic()
+    streamed: dict[int, list] = {}
+    for out in srv.generate(prompts, params, max_wall_s=180):
+        streamed.setdefault(out.rid, []).extend(out.new_tokens)
+        if out.finished:
+            print(f"  rid {out.rid}: {out.n_generated} tokens "
+                  f"({out.finish_reason})  {streamed[out.rid]}")
+    wall = time.monotonic() - t0
+
+    summary = srv.metrics.summary(wall)
+    print(f"\nserved {summary['n_done']} requests in {wall:.1f}s "
+          f"(stop={summary['n_stop']} length={summary['n_length']} "
+          f"aborted={summary['n_aborted']})")
     print(f"  QPM        {summary['qpm']:.1f}")
     print(f"  TTFT mean  {summary['ttft_mean']*1e3:.0f} ms")
     print(f"  TPOT mean  {summary['tpot_mean_ms']:.0f} ms")
-    hits = sum(e['cache_hits'] for e in summary['prefill_stats'])
+    hits = sum(e.stats['cache_hits'] for e in srv.prefills)
     print(f"  APC hits   {hits}")
-    kv = sum(e['kv_transfer_bytes'] for e in summary['decode_stats'])
+    kv = sum(e.stats['kv_transfer_bytes'] for e in srv.decodes)
     print(f"  P→D KV transferred {kv/1e6:.2f} MB")
 
 

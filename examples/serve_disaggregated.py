@@ -1,17 +1,15 @@
 """End-to-end driver (deliverable b): PD-disaggregated serving of a small MoE
-model with batched requests, live OmniPlacement monitoring, and a failure
-drill (one prefill instance dies mid-run; OmniProxy requeues its work).
+model with streaming `generate()`, a failure drill (one prefill instance dies
+mid-stream; OmniProxy requeues its work), and a mid-flight `abort()`.
 
     PYTHONPATH=src python examples/serve_disaggregated.py
 """
-import time
-
 import numpy as np
 
 from repro.configs import reduced_config
 from repro.core.placement import calculate_imbalance
 from repro.core.proxy import OASConfig
-from repro.serving import Server, ServerConfig
+from repro.serving import SamplingParams, Server, ServerConfig
 
 
 def main():
@@ -19,32 +17,47 @@ def main():
     print(f"arch={cfg.arch_id}: {cfg.moe.n_experts} experts top-{cfg.moe.top_k}"
           f" + {cfg.moe.n_shared_experts} shared")
 
+    # small per-tick prefill budget: first tokens stream out while later
+    # prompts are still queued, so the mid-stream failure has work to requeue
     srv = Server(cfg, ServerConfig(n_prefill=2, n_decode=1, decode_slots=4,
-                                   max_len=64,
+                                   max_len=64, chunk_tokens=8,
+                                   prefill_tick_budget=8,
                                    oas=OASConfig(defer_window=0.0)))
     se = np.asarray(srv.tables["slot_expert"])
     print(f"expert slots per EP rank: {se.shape[1]} (layout {se.tolist()})")
 
     rng = np.random.default_rng(1)
-    requests = [(tuple(rng.integers(0, 500, int(rng.integers(6, 20))).tolist()), 4)
-                for _ in range(8)]
+    prompts = [tuple(rng.integers(0, 500, int(rng.integers(6, 20))).tolist())
+               for _ in range(8)]
+    params = [SamplingParams(temperature=0.7, top_k=32, seed=i, max_tokens=4)
+              for i in range(len(prompts))]
 
-    # inject a prefill-instance failure after the first dispatches
-    t0 = time.monotonic()
-    for i, (p, m) in enumerate(requests):
-        srv.submit(i, p, m, t0)
-    srv._drain_actions(time.monotonic())
-    dead = 0
-    requeued = srv.proxy.mark_unhealthy("prefill", dead, time.monotonic())
-    print(f"\n!! failed prefill instance {dead}: {len(requeued)} requests "
-          f"requeued by OmniProxy")
-    while srv.proxy.inflight and time.monotonic() - t0 < 180:
-        srv._drain_actions(time.monotonic())
-        srv._prefill_round()           # chunked prefill is budgeted per tick
-        srv._decode_round()
-    s = srv.metrics.summary(time.monotonic() - t0)
-    print(f"completed {s['n_done']}/{len(requests)} despite the failure; "
-          f"qpm={s['qpm']:.1f} ttft={s['ttft_mean']:.2f}s")
+    # stream through generate(); after the first outputs arrive (some
+    # requests still queued / mid-prefill) fail a prefill instance, then
+    # abort one still-running request mid-flight
+    dead, drilled, abort_rid = 0, False, None
+    streamed: dict[int, int] = {}
+    for out in srv.generate(prompts, params, max_wall_s=180):
+        streamed[out.rid] = streamed.get(out.rid, 0) + len(out.new_tokens)
+        if not drilled and out.new_tokens:
+            requeued = srv.proxy.mark_unhealthy("prefill", dead, 0.0)
+            srv.proxy.mark_healthy("prefill", dead)
+            print(f"\n!! failed prefill instance {dead} mid-stream: "
+                  f"{len(requeued)} requests requeued by OmniProxy")
+            drilled = True
+        if drilled and abort_rid is None:
+            live = [r for r in srv.proxy.inflight if streamed.get(r, 0) == 0]
+            if live:
+                abort_rid = live[-1]
+                srv.abort(abort_rid)
+                print(f"!! aborted rid {abort_rid} mid-flight")
+        if out.finished:
+            print(f"  rid {out.rid}: {out.n_generated} tokens "
+                  f"({out.finish_reason})")
+
+    s = srv.metrics.summary(1.0)
+    print(f"\ncompleted {s['n_done']}/{len(prompts)} despite the failure "
+          f"({s['n_aborted']} aborted); ttft={s['ttft_mean']:.2f}s")
 
     # expert-load imbalance picture from this run's routing
     counts = np.ones(cfg.moe.n_experts)  # uniform placeholder at tiny scale

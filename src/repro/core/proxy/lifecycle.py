@@ -34,6 +34,8 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_retries: int = 0                 # straggler/failure re-dispatches
+    sampling: Optional[object] = None  # SamplingParams (None → greedy legacy)
+    finish_reason: Optional[str] = None   # "stop" | "length" | "abort"
 
     def advance(self, phase: Phase, now: float):
         self.phase = phase

@@ -12,14 +12,34 @@ from repro.core.proxy.lifecycle import Request
 @dataclass
 class MetricsAggregator:
     done: list = field(default_factory=list)
+    aborted: list = field(default_factory=list)
 
     def add(self, req: Request):
         if req.finish_time is not None:
             self.done.append(req)
 
+    def add_aborted(self, req: Request):
+        """Cancelled requests are tracked separately: they count in
+        `n_aborted` but never pollute the latency distributions."""
+        self.aborted.append(req)
+
+    def _reasons(self) -> dict:
+        n_stop = sum(1 for r in self.done if r.finish_reason == "stop")
+        n_length = sum(1 for r in self.done if r.finish_reason == "length")
+        return {"n_stop": n_stop, "n_length": n_length,
+                "n_aborted": len(self.aborted)}
+
     def summary(self, wall_time: float) -> dict:
         if not self.done:
-            return {"qpm": 0.0}
+            # zero-done is a normal state now (every request aborted, or the
+            # wall clock expired): keep the full key set so consumers that
+            # index n_done / latency columns unconditionally don't KeyError
+            nan = float("nan")
+            return {"n_done": 0, "qpm": 0.0, **self._reasons(),
+                    "ttft_mean": nan, "ttft_p99": nan,
+                    "tpot_mean_ms": nan, "tpot_p99_ms": nan,
+                    "e2e_mean": nan, "e2e_p99": nan,
+                    "ott_tok_s": 0.0, "ttt_tok_s": 0.0}
         ttft = np.array([r.ttft() for r in self.done if r.ttft() is not None])
         tpot = np.array([r.tpot() for r in self.done if r.tpot() is not None])
         e2e = np.array([r.e2e() for r in self.done])
@@ -29,6 +49,7 @@ class MetricsAggregator:
         pct = lambda a, p: float(np.percentile(a, p)) if len(a) else float("nan")
         return {
             "n_done": len(self.done),
+            **self._reasons(),
             "qpm": 60.0 * len(self.done) / wall,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
             "ttft_p99": pct(ttft, 99),

@@ -228,6 +228,55 @@ class OmniProxy:
         if req.first_token_time is None:
             req.first_token_time = now
 
+    def on_early_finish(self, req: Request, now: float):
+        """Request finished at its FIRST token (stop token hit, or
+        max_tokens == 1): it sits in decode_wait with no decode instance —
+        retire it without ever admitting to decode."""
+        self.decode_wait = [r for r in self.decode_wait if r.rid != req.rid]
+        req.finish_time = now
+        req.advance(Phase.DONE, now)
+        self.inflight.pop(req.rid, None)
+
+    def abort(self, rid: int, now: float) -> Optional[Request]:
+        """Cancel a request wherever it lives, undoing any instance
+        accounting its current phase holds. → the Request (finish_reason
+        set to "abort"), or None if the rid is not in flight. The caller
+        (server) releases engine-side state: prefill queue tasks,
+        pending-KV handoffs, decode slots + KVPool blocks."""
+        req = self.inflight.pop(rid, None)
+        if req is None:
+            return None
+        if any(r.rid == rid for r in self.pending):
+            self.pending = [r for r in self.pending if r.rid != rid]
+        elif any(r.rid == rid for r in self.decode_wait):
+            # prefill accounting already closed by on_prefill_done; decode
+            # accounting not yet opened (or undone by requeue/preempt)
+            self.decode_wait = [r for r in self.decode_wait if r.rid != rid]
+        elif req.phase == Phase.PREFILL_RUNNING and \
+                req.prefill_instance is not None:
+            inst = self.prefill[req.prefill_instance]
+            inst.running -= 1
+            inst.running_tokens -= req.prompt_len
+        elif req.phase == Phase.PREFILL_SCHEDULED and \
+                req.prefill_instance is not None:
+            inst = self.prefill[req.prefill_instance]
+            inst.queue_len -= 1
+            inst.queued_tokens -= req.prompt_len - req.prefix_match
+        elif req.phase == Phase.DECODE_RUNNING and \
+                req.decode_instance is not None:
+            inst = self.decode[req.decode_instance]
+            inst.running -= 1
+            inst.running_tokens -= req.effective_load
+        elif req.phase == Phase.DECODE_SCHEDULED and \
+                req.decode_instance is not None:
+            inst = self.decode[req.decode_instance]
+            inst.queue_len -= 1
+            inst.queued_tokens -= req.max_tokens
+        req.finish_reason = "abort"
+        req.finish_time = now
+        req.advance(Phase.DONE, now)
+        return req
+
     def on_decode_done(self, req: Request, now: float, batch_time: float = 0.0):
         inst = self.decode[req.decode_instance]
         inst.running -= 1

@@ -1,10 +1,12 @@
 """Serving launcher: --arch <id> through the full OmniInfer stack.
 
 CPU-runnable with --reduced (real model, real engines); the same Server
-object drives TPU-scale deployments with a production mesh.
+object drives TPU-scale deployments with a production mesh. Per-request
+decoding config rides on SamplingParams: --temperature > 0 switches the
+whole batch from greedy to seeded device-side sampling.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-moe-a2.7b \
-        --reduced --requests 8 --max-tokens 6
+        --reduced --requests 8 --max-tokens 6 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -14,7 +16,7 @@ import json
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core.proxy import OASConfig
+from repro.core.proxy import OASConfig, SamplingParams
 from repro.serving import Server, ServerConfig
 
 
@@ -31,6 +33,12 @@ def main(argv=None):
     ap.add_argument("--no-proxy", action="store_true",
                     help="round-robin baseline (ablation)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 → greedy (default); > 0 → seeded sampling")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--stop-token", type=int, default=-1,
+                    help="per-request stop token id (-1 → none)")
     args = ap.parse_args(argv)
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -42,13 +50,18 @@ def main(argv=None):
                                    max_len=args.max_len, oas=oas))
     rng = np.random.default_rng(args.seed)
     shared = tuple(rng.integers(0, min(cfg.vocab_size, 500), 16).tolist())
+    stop = (args.stop_token,) if args.stop_token >= 0 else ()
     reqs = []
     for i in range(args.requests):
         if i % 3 == 0:
             p = shared + tuple(rng.integers(0, 500, 4 + i).tolist())
         else:
             p = tuple(rng.integers(0, 500, int(rng.integers(8, 32))).tolist())
-        reqs.append((p, args.max_tokens))
+        reqs.append((p, SamplingParams(temperature=args.temperature,
+                                       top_k=args.top_k, top_p=args.top_p,
+                                       seed=args.seed + i,
+                                       stop_token_ids=stop,
+                                       max_tokens=args.max_tokens)))
     s = srv.run(reqs, max_wall_s=600)
     print(json.dumps({k: v for k, v in s.items()
                       if not isinstance(v, list)}, indent=1, default=float))

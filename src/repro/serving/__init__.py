@@ -1,4 +1,6 @@
+from repro.core.proxy.params import RequestOutput, SamplingParams
 from repro.serving.engine import DecodeEngine, PrefillEngine
 from repro.serving.server import Server, ServerConfig
 
-__all__ = ["DecodeEngine", "PrefillEngine", "Server", "ServerConfig"]
+__all__ = ["DecodeEngine", "PrefillEngine", "Server", "ServerConfig",
+           "SamplingParams", "RequestOutput"]

@@ -36,11 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.proxy.params import GREEDY, SamplingParams, device_row
 from repro.core.proxy.radix import RadixTree
 from repro.models.lm import LM
 from repro.models.stack import (alloc_cache, alloc_paged_cache, cache_window,
                                 ring_block_count)
 from repro.serving.kvpool import KVPool, PrefixKVStore
+from repro.serving.sampling import sample_tokens
 
 
 def _bucket(n: int, lo: int = 32) -> int:
@@ -89,6 +91,7 @@ class PrefillTask:
     cursor: int = 0                   # tokens resident (incl. reused prefix)
     reused: int = 0                   # prefix tokens resumed from the store
     snap: int = 0                     # snapshot boundary (shared-prefix hint)
+    params: SamplingParams = GREEDY   # first-token decoding config
     t_start: float = 0.0
     compute_s: float = 0.0            # pure prefill compute (excl. queue wait)
 
@@ -121,12 +124,13 @@ class PrefillEngine:
     tree: Optional[RadixTree] = None  # share the proxy's per-instance tree
     stats: dict = field(default_factory=lambda: {
         "prefills": 0, "cache_hits": 0, "prefix_hits": 0, "reused_tokens": 0,
-        "tokens": 0, "chunks": 0, "busy_s": 0.0})
+        "tokens": 0, "chunks": 0, "busy_s": 0.0, "host_fetches": 0})
 
     def __post_init__(self):
         self._fn = jax.jit(self._prefill)
         self._resume = jax.jit(self._resume_impl, donate_argnums=(2,),
                                static_argnums=(5,))
+        self._first = jax.jit(self._first_impl)
         self.store = PrefixKVStore(self.tree, self.cache_cap)
         self.queue: deque[PrefillTask] = deque()
         self._ready: list[PrefillResult] = []
@@ -148,8 +152,15 @@ class PrefillEngine:
             tables=tables, chunk_len=chunk_len, attend_limit=attend_limit)
         return cache, logits
 
+    def _first_impl(self, logits_tuple, temp, tk, tp, keys, fold):
+        """Fused first-token sampling over the stacked last-token logits of
+        a batch of finished prefills (pow2-padded)."""
+        logits = jnp.concatenate(logits_tuple, axis=0)
+        return sample_tokens(logits, temp, tk, tp, keys, fold)
+
     # ---- scheduling --------------------------------------------------
-    def start(self, rid: int, prompt: tuple, prefix_hint: int = 0) -> None:
+    def start(self, rid: int, prompt: tuple, prefix_hint: int = 0,
+              params: Optional[SamplingParams] = None) -> None:
         """Enqueue a prompt. Exact store hits complete immediately (drained
         by the next step()); partial hits resume at the stored boundary.
         prefix_hint (the proxy's Match_P, computed before self-insertion)
@@ -162,7 +173,8 @@ class PrefillEngine:
             if t.rid == rid:
                 self.queue.remove(t)
         self._ready = [r for r in self._ready if r.rid != rid]
-        task = PrefillTask(rid, tuple(prompt), t_start=time.monotonic())
+        task = PrefillTask(rid, tuple(prompt), params=params or GREEDY,
+                           t_start=time.monotonic())
         if (self.chunked and self.allow_partial_reuse
                 and 8 <= prefix_hint < len(task.prompt)):
             task.snap = prefix_hint
@@ -189,6 +201,20 @@ class PrefillEngine:
     def has_work(self) -> bool:
         return bool(self.queue or self._ready)
 
+    def abort(self, rid: int) -> bool:
+        """Drop a queued / in-flight / completed-but-undelivered prompt.
+        The task's partially-built cache (a private copy) is simply
+        released to the GC; store snapshots it already published stay —
+        they are shared cache, not request state."""
+        hit = False
+        for t in list(self.queue):
+            if t.rid == rid:
+                self.queue.remove(t)
+                hit = True
+        n0 = len(self._ready)
+        self._ready = [r for r in self._ready if r.rid != rid]
+        return hit or len(self._ready) != n0
+
     def step(self, token_budget: int = 1 << 30) -> list[PrefillResult]:
         """Run up to `token_budget` tokens of prefill work; → completed
         prompts. Chunked mode schedules shortest-remaining-first at chunk
@@ -197,6 +223,7 @@ class PrefillEngine:
         FIFO, one whole prompt per call."""
         done, budget = self._ready, token_budget
         self._ready = []
+        fresh: list[PrefillTask] = []
         t0 = time.monotonic()
         while budget > 0 and self.queue:
             task = (min(self.queue, key=lambda t: t.remaining)
@@ -210,7 +237,9 @@ class PrefillEngine:
                            if self.chunked else self._run_full(task))
             if task.remaining == 0:
                 self.queue.remove(task)
-                done.append(self._finish(task))
+                fresh.append(self._finish(task))
+        if fresh:
+            done.extend(self._emit(fresh))
         self.stats["busy_s"] += time.monotonic() - t0
         return done
 
@@ -253,15 +282,47 @@ class PrefillEngine:
         task.compute_s += time.monotonic() - t0
         return S
 
-    def _finish(self, task: PrefillTask) -> PrefillResult:
+    def _finish(self, task: PrefillTask) -> PrefillTask:
+        """Store bookkeeping for a completed prompt. The first token is NOT
+        sampled here: finished tasks of one engine round are sampled in a
+        single fused call (`_emit`) — the per-record `int(jnp.argmax(...))`
+        host sync is gone."""
         if task.reused == len(task.prompt):     # whole prompt adopted
             self.stats["cache_hits"] += 1
         else:
             self.stats["prefills"] += 1
             self.store.put(task.prompt, task.cache, task.logits)
-        first = int(jnp.argmax(task.logits[0]))
-        return PrefillResult(task.rid, task.cache, first, len(task.prompt),
-                             task.reused, task.compute_s, time.monotonic())
+        return task
+
+    def _emit(self, tasks: list) -> list[PrefillResult]:
+        toks = self.sample_first([t.logits for t in tasks],
+                                 [t.params for t in tasks],
+                                 [t.rid for t in tasks],
+                                 [len(t.prompt) for t in tasks])
+        t_done = time.monotonic()
+        return [PrefillResult(t.rid, t.cache, int(tok), len(t.prompt),
+                              t.reused, t.compute_s, t_done)
+                for t, tok in zip(tasks, toks)]
+
+    def sample_first(self, logits_list, params_list, rids, folds
+                     ) -> np.ndarray:
+        """Sample the first token for a batch of finished prompts under
+        each one's SamplingParams in ONE jit call + ONE host fetch
+        (pow2-padded to bound retraces). logits_list: [1, V] arrays;
+        folds: context lengths (= prompt lengths)."""
+        n = len(logits_list)
+        npad = _bucket(n, lo=1)
+        logits = tuple(logits_list) + (logits_list[-1],) * (npad - n)
+        rows = [device_row(p, r) for p, r in zip(params_list, rids)]
+        rows += [rows[-1]] * (npad - n)
+        temp = jnp.asarray([r[0] for r in rows], jnp.float32)
+        tk = jnp.asarray([r[1] for r in rows], jnp.int32)
+        tp = jnp.asarray([r[2] for r in rows], jnp.float32)
+        keys = jnp.asarray(np.stack([r[3] for r in rows]))
+        fold = jnp.asarray(list(folds) + [folds[-1]] * (npad - n), jnp.int32)
+        out = np.asarray(self._first(logits, temp, tk, tp, keys, fold))
+        self.stats["host_fetches"] += 1
+        return out[:n]
 
     # ---- blocking back-compat API ------------------------------------
     def process(self, prompt: tuple) -> tuple:
@@ -305,7 +366,8 @@ class DecodeEngine:
     stats: dict = field(default_factory=lambda: {
         "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
         "admits": 0, "preemptions": 0, "moe_counts": None,
-        "blocks_touched": 0, "blocks_shared": 0, "blocks_fresh": 0})
+        "blocks_touched": 0, "blocks_shared": 0, "blocks_fresh": 0,
+        "host_fetches": 0})
 
     def __post_init__(self):
         cfg = self.lm.cfg
@@ -340,10 +402,17 @@ class DecodeEngine:
         self.rid_slot: dict[int, int] = {}
         self._prompts: dict[int, tuple] = {}   # live rid → prompt (sharing)
         # device-resident slot state threaded (donated) through the step jit;
-        # host mirrors updated from values we already know — no device sync
+        # host mirrors updated from values we already know — no device sync.
+        # Per-slot sampling parameters + PRNG base keys live here too, so
+        # the fused step samples the whole batch without any host traffic
+        # (temp <= 0 rows take the greedy argmax branch).
         self.state = {"pos": jnp.zeros(self.n_slots, jnp.int32),
                       "tok": jnp.zeros(self.n_slots, jnp.int32),
-                      "active": jnp.zeros(self.n_slots, bool)}
+                      "active": jnp.zeros(self.n_slots, bool),
+                      "temp": jnp.zeros(self.n_slots, jnp.float32),
+                      "top_k": jnp.zeros(self.n_slots, jnp.int32),
+                      "top_p": jnp.ones(self.n_slots, jnp.float32),
+                      "key": jnp.zeros((self.n_slots, 2), jnp.uint32)}
         n_moe = sum(1 for sp in self.lm.plan.all_specs() if sp.use_moe)
         if n_moe and cfg.moe.n_experts:
             # expert activation counts accumulate device-side too — fetched
@@ -422,7 +491,20 @@ class DecodeEngine:
         return out
 
     # ---- jit bodies --------------------------------------------------
-    def _insert_impl(self, cache_all, state, caches, slots, toks, poss):
+    def _slot_state(self, state, slots, toks, poss, samp):
+        """Write the admitted slots' scalar state + sampling rows."""
+        temps, tks, tps, keys = samp
+        state = dict(state)
+        state.update(pos=state["pos"].at[slots].set(poss),
+                     tok=state["tok"].at[slots].set(toks),
+                     active=state["active"].at[slots].set(True),
+                     temp=state["temp"].at[slots].set(temps),
+                     top_k=state["top_k"].at[slots].set(tks),
+                     top_p=state["top_p"].at[slots].set(tps),
+                     key=state["key"].at[slots].set(keys))
+        return state
+
+    def _insert_impl(self, cache_all, state, caches, slots, toks, poss, samp):
         """Admit len(caches) B=1 caches into `slots` in one call."""
         per, rem = cache_all["period"], cache_all["rem"]
         for j in range(len(caches)):
@@ -431,14 +513,11 @@ class DecodeEngine:
                                per, caches[j]["period"])
             rem = jax.tree.map(lambda a, o, s=s: a.at[s].set(o[0]),
                                rem, caches[j]["rem"])
-        state = dict(state)
-        state.update(pos=state["pos"].at[slots].set(poss),
-                     tok=state["tok"].at[slots].set(toks),
-                     active=state["active"].at[slots].set(True))
+        state = self._slot_state(state, slots, toks, poss, samp)
         return {"period": per, "rem": rem, "pos": cache_all["pos"]}, state
 
     def _insert_paged_impl(self, cache_all, state, caches, slots, toks, poss,
-                           tbls, shns):
+                           samp, tbls, shns):
         """Paged admission: scatter each B=1 dense cache into arena blocks
         through its table row (tbls [n, max_blocks]); the first shns[j]
         entries are prefix blocks mapped from a lender and must not be
@@ -468,10 +547,7 @@ class DecodeEngine:
                 else:
                     rem[i] = jax.tree.map(
                         lambda a, o, s=s: a.at[s].set(o[0]), rem[i], one)
-        state = dict(state)
-        state.update(pos=state["pos"].at[slots].set(poss),
-                     tok=state["tok"].at[slots].set(toks),
-                     active=state["active"].at[slots].set(True))
+        state = self._slot_state(state, slots, toks, poss, samp)
         return {"period": tuple(per), "rem": tuple(rem),
                 "pos": cache_all["pos"]}, state
 
@@ -479,7 +555,13 @@ class DecodeEngine:
         new_cache, logits, aux = self.lm.decode(
             params, cache, state["tok"][:, None], state["pos"][:, None],
             tables=tables, token_mask=state["active"], block_tables=block_tbl)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # fused per-slot sampling: the token following pos sees pos+1 context
+        # tokens — folding that into the slot's base key makes the draw a
+        # pure function of (seed, position), so preempt/resume and paged vs
+        # dense layouts reproduce the same stream. Greedy slots (temp <= 0)
+        # reduce to the old argmax bit-exactly.
+        nxt = sample_tokens(logits, state["temp"], state["top_k"],
+                            state["top_p"], state["key"], state["pos"] + 1)
         act = state["active"]
         new_state = dict(state)
         new_state.update(pos=state["pos"] + act.astype(jnp.int32),
@@ -551,16 +633,19 @@ class DecodeEngine:
         return []
 
     def admit_batch(self, items: list[tuple]) -> dict[int, bool]:
-        """items: (rid, cache_one, next_token, pos, cached_tokens[, prompt]).
-        Inserts every admissible item in ONE donated jit call;
-        → {rid: admitted}. With paged KV, `prompt` enables prefix-sharing
-        admission: full blocks of the cached prefix are mapped from a live
-        lender instead of copied."""
+        """items: (rid, cache_one, next_token, pos, cached_tokens[, prompt
+        [, sampling_params]]). Inserts every admissible item in ONE donated
+        jit call; → {rid: admitted}. With paged KV, `prompt` enables
+        prefix-sharing admission: full blocks of the cached prefix are
+        mapped from a live lender instead of copied. `sampling_params`
+        (SamplingParams, None → greedy) lands in the slot's device-side
+        parameter tensors."""
         out: dict[int, bool] = {}
         batch = []
         for item in items:
             rid, cache_one, tok, pos, cached = item[:5]
             prompt = item[5] if len(item) > 5 else None
+            sparams = item[6] if len(item) > 6 else None
             if not self.free:
                 out[rid] = False
                 continue
@@ -592,7 +677,8 @@ class DecodeEngine:
             self.tokens_h[slot] = pos + 1
             self.stats["kv_transfer_bytes"] += kv_bytes(cache_one)
             self.stats["admits"] += 1
-            batch.append((slot, cache_one, tok, pos, row, shn))
+            batch.append((slot, cache_one, tok, pos, row, shn,
+                          device_row(sparams, rid)))
             out[rid] = True
         if batch:
             # pad to a pow2 batch by repeating the last insert (idempotent:
@@ -603,23 +689,28 @@ class DecodeEngine:
             toks = jnp.asarray([b[2] for b in batch], jnp.int32)
             poss = jnp.asarray([b[3] for b in batch], jnp.int32)
             caches = tuple(b[1] for b in batch)
+            samp = (jnp.asarray([b[6][0] for b in batch], jnp.float32),
+                    jnp.asarray([b[6][1] for b in batch], jnp.int32),
+                    jnp.asarray([b[6][2] for b in batch], jnp.float32),
+                    jnp.asarray(np.stack([b[6][3] for b in batch])))
             if self.paged:
                 tbls = jnp.asarray(np.stack([b[4] for b in batch]), jnp.int32)
                 shns = jnp.asarray([b[5] for b in batch], jnp.int32)
                 self.cache, self.state = self._insert(
                     self.cache, self.state, caches, slots, toks, poss,
-                    tbls, shns)
+                    samp, tbls, shns)
                 self._tbl_dev = jnp.asarray(self.tables_h)
                 self._tbl_dirty = False
             else:
                 self.cache, self.state = self._insert(
-                    self.cache, self.state, caches, slots, toks, poss)
+                    self.cache, self.state, caches, slots, toks, poss, samp)
         return out
 
     def admit(self, rid: int, cache_one, first_token: int, prompt_len: int,
-              cached_tokens: int = 0, prompt: Optional[tuple] = None) -> bool:
+              cached_tokens: int = 0, prompt: Optional[tuple] = None,
+              params: Optional[SamplingParams] = None) -> bool:
         return self.admit_batch([(rid, cache_one, first_token, prompt_len,
-                                  cached_tokens, prompt)])[rid]
+                                  cached_tokens, prompt, params)])[rid]
 
     # ------------------------------------------------------------------
     def step(self) -> dict[int, int]:
@@ -636,6 +727,7 @@ class DecodeEngine:
             self.params, self.cache, self.state, self.tables,
             self._tbl_dev if self.paged else None)
         next_np = np.asarray(nxt)          # the single per-step host fetch
+        self.stats["host_fetches"] += 1
         out = {}
         for slot, rid in list(self.slot_rid.items()):
             tok = int(next_np[slot])
@@ -703,6 +795,9 @@ class DecodeEngine:
         del self.rid_slot[rid]
         self._prompts.pop(rid, None)
         self.state["active"] = self.state["active"].at[slot].set(False)
+        # a stale temp > 0 on a freed slot would permanently defeat the
+        # all-greedy fast path in sample_tokens (jnp.all over every slot)
+        self.state["temp"] = self.state["temp"].at[slot].set(0.0)
         self.free.append(slot)
         self.pool.release(rid)
         if self.paged:

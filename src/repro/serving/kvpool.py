@@ -114,6 +114,15 @@ class KVPool:
     def owned(self, rid: int) -> List[int]:
         return list(self.per_request.get(rid, ()))
 
+    def __contains__(self, rid: int) -> bool:
+        """True while `rid` holds any block mapping — abort-hygiene tests
+        assert `rid not in pool` after a cancellation in any phase."""
+        return rid in self.per_request
+
+    @property
+    def live_rids(self) -> List[int]:
+        return list(self.per_request)
+
     # ---- admission ----------------------------------------------------
     def can_admit(self, n_tokens: int, cached_tokens: int = 0) -> bool:
         need = self.blocks_for(n_tokens) - self.shareable_blocks(cached_tokens)

@@ -1,0 +1,62 @@
+"""Device-side batched sampling: one fused temperature/top-k/top-p
+categorical draw for a whole decode batch (or a batch of finished prefills).
+
+The function is pure and trace-friendly: `DecodeEngine` calls it inside its
+donated step jit (per-slot parameter tensors + per-slot PRNG base keys live
+in the device-side slot state), and `PrefillEngine` jits it once over the
+stacked last-token logits of every prompt finished in an engine round — in
+both cases sampling adds zero host syncs beyond the single per-step token
+fetch the engines already pay.
+
+Greedy rows (temperature <= 0) take a `where` branch around the categorical
+machinery and return `argmax(logits)` computed exactly as the pre-sampling
+engines did, so greedy streams stay bit-identical.
+
+Per-row PRNG keys are folded with the row's context length
+(`fold_in(base_key, n_context)`), making each draw a pure function of
+(seed, position): the sampled stream is invariant to engine layout (paged
+vs slot-dense), admission batch composition, and preemption/resume.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, temperature, top_k, top_p, keys, fold):
+    """logits [n, V] (any float dtype; filtered/compared in float32),
+    temperature [n] f32, top_k [n] i32 (<= 0 disables), top_p [n] f32
+    (>= 1 disables), keys [n, 2] uint32 base PRNG keys, fold [n] i32 context
+    lengths at this sample point. → sampled token ids [n] i32.
+    """
+    logits = logits.astype(jnp.float32)
+    n, V = logits.shape
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    is_greedy = temperature <= 0.0
+
+    def _sampled():
+        scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+        # one descending sort serves both filters
+        order = jnp.argsort(-scaled, axis=-1)
+        ranked = jnp.take_along_axis(scaled, order, axis=-1)
+        # top-k: threshold at the k-th ranked logit (boundary ties are kept —
+        # standard top-k semantics, and the tie set is sampled proportionally)
+        k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V).astype(jnp.int32)
+        kth = jnp.take_along_axis(ranked, (k - 1)[:, None], axis=-1)
+        keep = scaled >= kth
+        # top-p: keep ranks whose EXCLUSIVE cumulative probability is < p, so
+        # the top-1 token always survives and the mass kept first crosses p
+        probs = jax.nn.softmax(ranked, axis=-1)
+        excl = jnp.cumsum(probs, axis=-1) - probs
+        keep_ranked = excl < top_p[:, None]
+        rows = jnp.arange(n)[:, None]
+        keep2 = keep & jnp.zeros_like(keep).at[rows, order].set(keep_ranked)
+        masked = jnp.where(keep2, scaled, -jnp.inf)
+        step_keys = jax.vmap(jax.random.fold_in)(keys, fold)
+        sampled = jax.vmap(jax.random.categorical)(step_keys,
+                                                   masked).astype(jnp.int32)
+        return jnp.where(is_greedy, greedy_tok, sampled)
+
+    # all-greedy batches (the serving default) skip the O(V log V) sort /
+    # softmax / categorical machinery entirely — argmax is the whole step
+    return jax.lax.cond(jnp.all(is_greedy), lambda: greedy_tok, _sampled)

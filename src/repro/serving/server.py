@@ -8,17 +8,28 @@ trade-off per tick), LPT decode scheduling with batched admission, deferred
 submission, sink+recent compressed caches, and (for MoE configs)
 OmniPlacement live expert-load monitoring with pipelined weight migration.
 
+Request-level API (vLLM-style): `add_request(prompt, SamplingParams) → rid`
+registers an open-loop request with its own temperature/top-k/top-p/seed/
+stop-token configuration; `step()` advances every engine one round and
+returns per-request `RequestOutput` deltas (new tokens + finish_reason in
+{stop, length, abort}); `abort(rid)` cancels a request wherever it lives
+(proxy pools, prefill queues, pending KV handoffs, decode slots + KVPool
+blocks); `generate(prompts, params)` is a streaming iterator over the same
+primitives. `run()` — the closed-batch entry the benchmarks use — is a thin
+loop over add_request/step, so greedy outputs are unchanged.
+
 Request lifecycle: proxy tick (eq. 8 dispatch) → chunked prefill (shortest-
 remaining-first across queued prompts, resumed at radix prefix boundaries) →
 KV handoff (batched donated insert) → continuous-batch decode (device-side
-slot state; KVPool-preempted requests re-enter decode_wait with their
-extracted cache). See docs/serving.md.
+slot state incl. per-slot sampling params + PRNG keys; KVPool-preempted
+requests re-enter decode_wait with their extracted cache). See
+docs/serving.md.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Iterator, Optional
 
 import jax
 import numpy as np
@@ -26,7 +37,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.placement import DynamicScheduler, SchedulerConfig
 from repro.core.placement.migration import tables_from_placement_from_slots
-from repro.core.proxy import MetricsAggregator, OASConfig, OmniProxy, Phase, Request
+from repro.core.proxy import (MetricsAggregator, OASConfig, OmniProxy,
+                              Request, RequestOutput, SamplingParams)
 from repro.distributed.ctx import MeshCtx, local_mesh_ctx
 from repro.models import moe as moe_mod
 from repro.models.lm import LM
@@ -51,7 +63,12 @@ class ServerConfig:
     kv_block_size: int = 16           # tokens per KV block
     enable_placement: bool = True     # OmniPlacement dynamic scheduler
     placement_interval: int = 16      # decode steps between monitor ticks
-    eos_token: int = -1               # -1 → run to max_tokens
+    eos_token: int = -1               # DEPRECATED: server-global stop token,
+                                      # used only when a request's
+                                      # SamplingParams.stop_token_ids is
+                                      # empty (-1 → run to max_tokens)
+    idle_sleep_s: float = 0.01        # max per-iteration sleep while run()
+                                      # waits for a future arrival
 
 
 class Server:
@@ -80,11 +97,20 @@ class Server:
                                      paged=scfg.paged_kv,
                                      block_size=scfg.kv_block_size)
                         for _ in range(scfg.n_decode)]
-        # rid → (cache B=1, next_token, pos, cached_tokens, prompt) awaiting
-        # admission (prompt drives prefix-block sharing in the paged pool)
+        # rid → (cache B=1, next_token, pos, cached_tokens, prompt, params)
+        # awaiting admission (prompt drives prefix-block sharing in the
+        # paged pool; params land in the slot's device-side sampling state)
         self._pending_kv: dict[int, tuple] = {}
         self._step_count = 0
         self.n_migrations = 0
+        # streaming-output plumbing: per-step token deltas, finish records,
+        # and out-of-band events (aborts), flushed by step()
+        self._next_rid = 0
+        self._fresh: dict[int, list[int]] = {}
+        self._emitted: dict[int, int] = {}          # rid → tokens delivered
+        self._finish_info: dict[int, tuple] = {}    # rid → (reason, total)
+        self._events: list[RequestOutput] = []
+        self._idle_slept_s = 0.0
         self.placement_sched = None
         if scfg.enable_placement and cfg.moe.n_experts:
             s = int(self.tables["slot_expert"].shape[1])
@@ -97,10 +123,133 @@ class Server:
                 cfg=SchedulerConfig(budget=0, max_slots=s),
                 placements=[placement])
 
-    # ------------------------------------------------------------------
+    # ---- request-level API -------------------------------------------
+    def add_request(self, prompt: tuple,
+                    params: Optional[SamplingParams] = None,
+                    now: Optional[float] = None) -> int:
+        """Register an open-loop request under its own SamplingParams;
+        → rid. Tokens stream back through step() / generate()."""
+        now = time.monotonic() if now is None else now
+        params = params if params is not None else SamplingParams()
+        rid = self._next_rid
+        while rid in self.proxy.inflight:       # never collide with a live
+            rid += 1                            # caller-chosen submit() rid
+        return self._submit(rid, tuple(prompt), params, now)
+
     def submit(self, rid: int, prompt: tuple, max_tokens: int, now: float):
-        self.proxy.submit(Request(rid, tuple(prompt), max_tokens, arrival=now),
-                          now)
+        """Legacy closed-batch entry: caller-chosen rid, greedy decoding,
+        server-global eos_token. Prefer add_request()."""
+        self._submit(rid, tuple(prompt),
+                     SamplingParams(max_tokens=max_tokens), now)
+
+    def _submit(self, rid: int, prompt: tuple, params: SamplingParams,
+                now: float) -> int:
+        self.proxy.submit(Request(rid, prompt, params.max_tokens,
+                                  arrival=now, sampling=params), now)
+        self._next_rid = max(self._next_rid, rid + 1)
+        return rid
+
+    def step(self, now: Optional[float] = None) -> list[RequestOutput]:
+        """Advance the whole server one round (proxy tick → prefill round →
+        decode round) and return per-request deltas: every token generated
+        this step, plus finish records (finish_reason in {stop, length})
+        and abort notifications."""
+        now = time.monotonic() if now is None else now
+        self._drain_actions(now)
+        self._prefill_round()
+        self._decode_round()
+        return self._flush_outputs()
+
+    def abort(self, rid: int, now: Optional[float] = None) -> bool:
+        """Cancel a request wherever it lives: proxy pools, prefill queues,
+        pending KV handoffs, decode slots + KVPool blocks. → True if the
+        rid was in flight. The next step() (or this call's generate()
+        consumer) sees a RequestOutput(finished, finish_reason="abort")."""
+        now = time.monotonic() if now is None else now
+        req = self.proxy.abort(rid, now)
+        if req is None:
+            return False
+        self._pending_kv.pop(rid, None)
+        for eng in self.prefills:
+            eng.abort(rid)
+        for eng in self.decodes:
+            eng.release(rid)                    # no-op where not resident
+        self._fresh.pop(rid, None)
+        self._finish_info.pop(rid, None)
+        n_out = max(len(req.output_tokens), self._emitted.pop(rid, 0))
+        self.metrics.add_aborted(req)
+        self._events.append(RequestOutput(rid, (), True, "abort", n_out))
+        return True
+
+    def generate(self, prompts, params=None,
+                 max_wall_s: float = 300.0) -> Iterator[RequestOutput]:
+        """Streaming front door: submit one prompt (tuple of ints) or a
+        list of prompts — `params` a single SamplingParams, a matching
+        list, or None (greedy) — then drive step() and yield every
+        RequestOutput as it materializes until all submitted requests
+        finish. Yields include any other in-flight requests' outputs (the
+        caller drives the shared engine loop)."""
+        single = bool(prompts) and isinstance(prompts[0], (int, np.integer))
+        plist = [tuple(prompts)] if single else [tuple(p) for p in prompts]
+        if params is None or isinstance(params, SamplingParams):
+            pparams = [params] * len(plist)
+        else:
+            pparams = list(params)
+            if len(pparams) != len(plist):
+                raise ValueError(f"{len(plist)} prompts but "
+                                 f"{len(pparams)} SamplingParams")
+        t0 = time.monotonic()
+        live = {self.add_request(p, sp, now=t0)
+                for p, sp in zip(plist, pparams)}
+        while live and time.monotonic() - t0 < max_wall_s:
+            for out in self.step():
+                if out.finished:
+                    live.discard(out.rid)
+                yield out
+
+    # ---- internals ---------------------------------------------------
+    def _stop_tokens(self, req: Request) -> tuple:
+        sp = req.sampling
+        if sp is not None and sp.stop_token_ids:
+            return sp.stop_token_ids
+        # deprecated server-global default
+        return (self.scfg.eos_token,) if self.scfg.eos_token >= 0 else ()
+
+    def _note_token(self, req: Request, tok: int) -> Optional[str]:
+        """Record one generated token; → finish reason or None. A request
+        rerouted through on_decode_kv_lost regenerates from scratch — the
+        draws are positional, so the replayed prefix is identical and the
+        per-rid delivered counter suppresses re-streaming it."""
+        req.output_tokens.append(tok)
+        n = len(req.output_tokens)
+        if n > self._emitted.get(req.rid, 0):
+            self._fresh.setdefault(req.rid, []).append(tok)
+            self._emitted[req.rid] = n
+        if tok in self._stop_tokens(req):
+            return "stop"
+        if n >= req.max_tokens:
+            return "length"
+        return None
+
+    def _record_finish(self, req: Request, reason: str):
+        req.finish_reason = reason
+        self._finish_info[req.rid] = (reason, len(req.output_tokens))
+        self._emitted.pop(req.rid, None)
+        self.metrics.add(req)
+
+    def _flush_outputs(self) -> list[RequestOutput]:
+        outs = []
+        for rid, toks in self._fresh.items():
+            reason, total = self._finish_info.pop(rid, (None, None))
+            if total is None:
+                total = self._emitted.get(rid, len(toks))
+            outs.append(RequestOutput(rid, tuple(toks), reason is not None,
+                                      reason, total))
+        self._fresh.clear()
+        self._finish_info.clear()
+        outs.extend(self._events)
+        self._events = []
+        return outs
 
     def _drain_actions(self, now: float):
         admissions: dict[int, list[Request]] = {}
@@ -108,7 +257,8 @@ class Server:
             if stage == "prefill":
                 self.proxy.on_prefill_start(req, time.monotonic())
                 self.prefills[inst.iid].start(req.rid, req.tokens,
-                                              prefix_hint=req.prefix_match)
+                                              prefix_hint=req.prefix_match,
+                                              params=req.sampling)
             else:
                 admissions.setdefault(inst.iid, []).append(req)
         for iid, reqs in admissions.items():
@@ -147,10 +297,16 @@ class Server:
                 # the first token materialized inside the engine round, not
                 # when this bookkeeping runs
                 self.proxy.on_first_token(req, rec.t_done or tnow)
-                req.output_tokens.append(rec.first_token)
-                self._pending_kv[req.rid] = (rec.cache, rec.first_token,
-                                             rec.prompt_len, rec.reused,
-                                             req.tokens)
+                reason = self._note_token(req, rec.first_token)
+                if reason:
+                    # stop token / max_tokens=1 at the FIRST token: retire
+                    # without ever admitting to decode
+                    self.proxy.on_early_finish(req, tnow)
+                    self._record_finish(req, reason)
+                else:
+                    self._pending_kv[req.rid] = (rec.cache, rec.first_token,
+                                                 rec.prompt_len, rec.reused,
+                                                 req.tokens, req.sampling)
 
     def _decode_round(self):
         for iid, eng in enumerate(self.decodes):
@@ -168,21 +324,20 @@ class Server:
                     eng.release(rid)             # done or re-routed elsewhere
                     finished.add(rid)
                     continue
-                req.output_tokens.append(tok)
-                done = (len(req.output_tokens) >= req.max_tokens or
-                        tok == self.scfg.eos_token)
-                if done:
+                reason = self._note_token(req, tok)
+                if reason:
                     finished.add(rid)
                     eng.release(rid)
                     self.proxy.on_decode_done(req, now,
                                               batch_time=eng.stats["busy_s"] /
                                               max(eng.stats["steps"], 1))
-                    self.metrics.add(req)
+                    self._record_finish(req, reason)
             for rid, cache_one, tok, pos in eng.preempted:
                 req = self.proxy.inflight.get(rid)
                 if rid in finished or req is None:
                     continue
-                self._pending_kv[rid] = (cache_one, tok, pos, 0, req.tokens)
+                self._pending_kv[rid] = (cache_one, tok, pos, 0, req.tokens,
+                                         req.sampling)
                 self.proxy.on_decode_preempt(req, now)
             eng.preempted.clear()
         self._step_count += 1
@@ -237,31 +392,44 @@ class Server:
         self.n_migrations += 1
 
     # ------------------------------------------------------------------
-    def run(self, requests: list[tuple[tuple, int]], max_wall_s: float = 300.0,
+    def run(self, requests: list, max_wall_s: float = 300.0,
             arrivals: Optional[list[float]] = None):
-        """requests: [(prompt_tokens, max_tokens)]; arrivals: per-request
-        offsets from t=0 (None → all at t=0, closed-loop pressure).
-        Returns metrics summary."""
+        """Closed-batch driver over the streaming primitives.
+        requests: [(prompt_tokens, max_tokens:int)] or
+        [(prompt_tokens, SamplingParams)]; arrivals: per-request offsets
+        from t=0 (None → all at t=0, closed-loop pressure). Returns the
+        metrics summary. Greedy int-budget items reproduce the pre-API
+        outputs bit-exactly."""
         t_start = time.monotonic()
         todo = sorted(
-            ((0.0 if arrivals is None else arrivals[i], i, p, mt)
-             for i, (p, mt) in enumerate(requests)))
+            ((0.0 if arrivals is None else arrivals[i], i, p, spec)
+             for i, (p, spec) in enumerate(requests)))
         k = 0
         while k < len(todo) or self.proxy.inflight:
             now = time.monotonic()
             if now - t_start >= max_wall_s:
                 break
             while k < len(todo) and now - t_start >= todo[k][0]:
-                _, i, prompt, mt = todo[k]
-                self.submit(i, prompt, mt, now)
+                _, i, prompt, spec = todo[k]
+                params = spec if isinstance(spec, SamplingParams) else \
+                    SamplingParams(max_tokens=int(spec))
+                self._submit(i, tuple(prompt), params, now)
                 k += 1
-            self._drain_actions(now)
-            self._prefill_round()
-            self._decode_round()
+            if not self.proxy.inflight and k < len(todo):
+                # nothing in flight and the next arrival is in the future:
+                # sleep instead of busy-spinning on time.monotonic()
+                wait = (t_start + todo[k][0]) - time.monotonic()
+                if wait > 0:
+                    nap = min(wait, self.scfg.idle_sleep_s)
+                    time.sleep(nap)
+                    self._idle_slept_s += nap
+                    continue
+            self.step(now)
         wall = time.monotonic() - t_start
         summary = self.metrics.summary(wall)
         summary["wall_s"] = wall
         summary["n_migrations"] = self.n_migrations
+        summary["idle_slept_s"] = self._idle_slept_s
         summary["prefill_stats"] = [e.stats for e in self.prefills]
         summary["decode_stats"] = [e.stats for e in self.decodes]
         return summary

@@ -1,0 +1,415 @@
+"""Request-level serving API: SamplingParams, device-side batched sampling,
+streaming step()/generate(), abort hygiene, and seeded determinism across
+engine layouts and preemption."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.proxy import (OASConfig, Phase, RequestOutput, SamplingParams,
+                              seed_key)
+from repro.distributed.ctx import local_mesh_ctx
+from repro.models import LM
+from repro.serving import Server, ServerConfig
+from repro.serving.sampling import sample_tokens
+
+
+@pytest.fixture(scope="module")
+def small():
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2)
+    lm = LM.build(cfg, mesh, pattern=[0, 0])
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+def make_server(cfg, **kw):
+    defaults = dict(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                    oas=OASConfig(defer_window=0.0))
+    defaults.update(kw)
+    return Server(cfg, ServerConfig(**defaults), pattern=[0, 0])
+
+
+def drain(srv, rids, max_wall_s=120.0):
+    """step() until every rid in `rids` finished; → {rid: output_tokens},
+    {rid: finish_reason}, [all RequestOutput records]."""
+    t0 = time.monotonic()
+    live = set(rids)
+    toks: dict[int, list] = {r: [] for r in rids}
+    reasons: dict[int, str] = {}
+    records = []
+    while live and time.monotonic() - t0 < max_wall_s:
+        for out in srv.step():
+            records.append(out)
+            if out.rid in toks:
+                toks[out.rid].extend(out.new_tokens)
+            if out.finished and out.rid in live:
+                reasons[out.rid] = out.finish_reason
+                live.discard(out.rid)
+    assert not live, f"requests {live} did not finish"
+    return {r: tuple(t) for r, t in toks.items()}, reasons, records
+
+
+# ======================================================================
+def test_sampling_params_validation():
+    p = SamplingParams()
+    assert p.greedy and p.temperature == 0.0 and p.stop_token_ids == ()
+    q = SamplingParams(temperature=0.8, top_k=5, stop_token_ids=[3, np.int64(7)])
+    assert not q.greedy and q.stop_token_ids == (3, 7)
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(max_tokens=0)
+
+
+def test_empty_summary_keeps_full_key_set():
+    """Zero completed requests (all aborted / wall expired) must still
+    return every column consumers index unconditionally."""
+    from repro.core.proxy import MetricsAggregator, Request
+    m = MetricsAggregator()
+    m.add_aborted(Request(0, (1, 2), 4, arrival=0.0))
+    s = m.summary(1.0)
+    assert s["n_done"] == 0 and s["n_aborted"] == 1
+    for k in ("qpm", "ttft_mean", "tpot_mean_ms", "e2e_p99", "ott_tok_s",
+              "n_stop", "n_length"):
+        assert k in s
+
+
+def test_seed_key_matches_prngkey():
+    for s in (0, 5, 12345, 2**31 - 1):
+        assert np.array_equal(seed_key(s), np.asarray(jax.random.PRNGKey(s)))
+
+
+def test_sample_tokens_unit():
+    """Pure-sampler semantics: greedy/top-k=1/tiny-top-p all reduce to
+    argmax; filtered rows stay inside their candidate sets; draws are a
+    pure function of (key, fold)."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(5, 64)).astype(np.float32))
+    temp = jnp.asarray([0.0, 1.0, 5.0, 0.9, 1.3], jnp.float32)
+    tk = jnp.asarray([0, 8, 1, 0, 0], jnp.int32)
+    tp = jnp.asarray([1.0, 1.0, 1.0, 1e-6, 0.7], jnp.float32)
+    keys = jnp.asarray(np.stack([seed_key(i) for i in range(5)]))
+    fold = jnp.full((5,), 17, jnp.int32)
+    out = np.asarray(sample_tokens(logits, temp, tk, tp, keys, fold))
+    am = np.argmax(np.asarray(logits), axis=-1)
+    assert out[0] == am[0]                      # temperature 0 → greedy
+    assert out[2] == am[2]                      # top_k=1 → greedy at any temp
+    assert out[3] == am[3]                      # top_p→0 keeps only top-1
+    assert out[1] in np.argsort(-np.asarray(logits)[1])[:8]   # top-k set
+    # reproducible for identical inputs; varies with the fold position
+    out2 = np.asarray(sample_tokens(logits, temp, tk, tp, keys, fold))
+    assert np.array_equal(out, out2)
+    seen = {tuple(np.asarray(sample_tokens(
+        logits, temp, tk, tp, keys, jnp.full((5,), f, jnp.int32))))
+        for f in range(18, 30)}
+    assert len(seen) > 1
+
+
+# ======================================================================
+def test_generate_streaming_and_stop_tokens(small):
+    """generate() streams per-step deltas whose concatenation is the full
+    output; stop_token_ids terminate with finish_reason='stop' and the
+    stream is a strict prefix of the unconstrained greedy stream."""
+    cfg, _, _ = small
+    srv = make_server(cfg)
+    rng = np.random.default_rng(31)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 11))
+
+    outs = list(srv.generate(prompt, SamplingParams(max_tokens=6)))
+    rid = outs[0].rid
+    full = tuple(t for o in outs for t in o.new_tokens)
+    assert len(full) == 6
+    assert outs[-1].finished and outs[-1].finish_reason == "length"
+    assert outs[-1].n_generated == 6
+
+    # stopping on a token of the greedy stream truncates at its first
+    # occurrence (inclusive), reason 'stop'
+    stop = full[2]
+    outs2 = list(srv.generate(prompt, SamplingParams(
+        max_tokens=6, stop_token_ids=(stop,))))
+    mine = [o for o in outs2 if o.rid != rid]
+    toks2 = tuple(t for o in mine for t in o.new_tokens)
+    assert toks2 == full[:full.index(stop) + 1]
+    assert mine[-1].finish_reason == "stop"
+    s = srv.metrics.summary(1.0)
+    assert s["n_stop"] == 1 and s["n_length"] == 1 and s["n_aborted"] == 0
+
+
+def test_eos_token_deprecated_default(small):
+    """ServerConfig.eos_token still terminates requests that carry no
+    stop_token_ids, and is overridden by per-request stop sets."""
+    cfg, _, _ = small
+    probe = make_server(cfg)
+    rng = np.random.default_rng(33)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 9))
+    base = list(probe.generate(prompt, SamplingParams(max_tokens=5)))
+    full = tuple(t for o in base for t in o.new_tokens)
+
+    eos = int(full[1])
+    srv = make_server(cfg, eos_token=eos)
+    rid_a = srv.add_request(prompt, SamplingParams(max_tokens=5))
+    # a per-request stop set that never fires overrides the global eos
+    rid_b = srv.add_request(prompt, SamplingParams(
+        max_tokens=5, stop_token_ids=(int(cfg.vocab_size) - 1,)))
+    toks, reasons, _ = drain(srv, [rid_a, rid_b])
+    assert toks[rid_a] == full[:full.index(eos) + 1]
+    assert reasons[rid_a] == "stop"
+    assert toks[rid_b] == full and reasons[rid_b] == "length"
+
+
+def test_seeded_sampling_deterministic_across_layouts(small):
+    """Same SamplingParams(seed=...) must yield identical token streams on
+    the paged and slot-dense decode engines (the draw is a pure function of
+    seed and position, and sampling runs in the fused device step)."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(41)
+    prompts = [tuple(rng.integers(0, cfg.vocab_size, n)) for n in (9, 14, 21)]
+    # temperature 2: the random-init model is extremely peaked (top-1 prob
+    # ≈ 0.99 at T=1), which would make "sampling" collapse to argmax
+    params = [SamplingParams(temperature=2.0, top_k=50, top_p=0.95,
+                             seed=100 + i, max_tokens=8)
+              for i in range(3)]
+
+    streams = {}
+    for paged in (False, True):
+        srv = make_server(cfg, paged_kv=paged)
+        rids = [srv.add_request(p, sp) for p, sp in zip(prompts, params)]
+        toks, reasons, _ = drain(srv, rids)
+        assert all(r == "length" for r in reasons.values())
+        streams[paged] = [toks[r] for r in rids]
+        # device-side sampling: exactly one host fetch per decode step
+        ds = srv.decodes[0].stats
+        assert ds["host_fetches"] == ds["steps"]
+        # released slots reset temp, so later all-greedy batches take the
+        # argmax-only lax.cond branch
+        assert np.all(np.asarray(srv.decodes[0].state["temp"]) == 0.0)
+    assert streams[True] == streams[False]
+    assert all(len(t) == 8 for t in streams[True])
+
+    # sanity: the sampled streams are actually sampled, not greedy
+    greedy_srv = make_server(cfg)
+    grids = [greedy_srv.add_request(p, SamplingParams(max_tokens=8))
+             for p in prompts]
+    gtoks, _, _ = drain(greedy_srv, grids)
+    assert [gtoks[r] for r in grids] != streams[True]
+
+
+def test_seeded_sampling_preemption_continuity(small):
+    """Forced KV-exhaustion preemption + resume must reproduce the exact
+    seeded sampled stream (extends the PR 2 greedy preempt regression to
+    stochastic decoding: the per-position fold makes the draw independent
+    of when the request was evicted and re-admitted)."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(43)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 14)),
+             SamplingParams(temperature=2.0, top_k=40, seed=7 + i,
+                            max_tokens=8)) for i in range(2)]
+
+    def run(kv_blocks):
+        srv = make_server(cfg, kv_blocks=kv_blocks)
+        s = srv.run(reqs, max_wall_s=120)
+        outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+        return s, outs
+
+    s_free, outs_free = run(None)
+    assert s_free["n_done"] == 2
+    assert s_free["decode_stats"][0]["preemptions"] == 0
+    s_tight, outs_tight = run(3)            # 3 blocks → forced preemption
+    assert s_tight["n_done"] == 2
+    assert s_tight["decode_stats"][0]["preemptions"] >= 1
+    assert outs_tight == outs_free
+    assert all(len(v) == 8 for v in outs_tight.values())
+
+
+# ======================================================================
+def _assert_clean(srv, rid):
+    """No trace of `rid` anywhere a request can hold state."""
+    assert rid not in srv.proxy.inflight
+    assert rid not in srv._pending_kv
+    assert all(r.rid != rid for r in srv.proxy.pending)
+    assert all(r.rid != rid for r in srv.proxy.decode_wait)
+    for eng in srv.prefills:
+        assert all(t.rid != rid for t in eng.queue)
+        assert all(r.rid != rid for r in eng._ready)
+    for eng in srv.decodes:
+        assert rid not in eng.rid_slot
+        assert rid not in eng.pool
+        eng.pool.check_invariants()
+
+
+def test_abort_all_phases_leaves_pool_clean(small):
+    """Aborting in every reachable phase (queued, mid-chunked-prefill,
+    pending-KV/decode-wait, decoding) releases all state and the surviving
+    requests still finish."""
+    cfg, _, _ = small
+    srv = make_server(cfg, chunk_tokens=8, prefill_tick_budget=8)
+    rng = np.random.default_rng(51)
+    mk = lambda n: tuple(rng.integers(0, cfg.vocab_size, n))
+    t0 = time.monotonic()
+
+    # -- queued: aborted before any step() ever runs
+    r_q = srv.add_request(mk(10), SamplingParams(max_tokens=4), now=t0)
+    keep = srv.add_request(mk(10), SamplingParams(max_tokens=4), now=t0)
+    assert srv.abort(r_q)
+    _assert_clean(srv, r_q)
+
+    # -- mid-chunked-prefill: 30-token prompt at 8 tokens/round needs
+    # several rounds; abort while the engine holds a half-done task
+    r_p = srv.add_request(mk(30), SamplingParams(max_tokens=4))
+    task = None
+    for _ in range(10):        # SRPT runs `keep`'s shorter prompt first
+        srv.step()
+        task = next((t for t in srv.prefills[0].queue if t.rid == r_p), None)
+        if task is not None and task.cursor > 0:
+            break
+    assert task is not None and 0 < task.cursor < 30
+    assert srv.abort(r_p)
+    _assert_clean(srv, r_p)
+
+    # -- pending-KV / decode-wait: step until the handoff exists
+    r_kv = srv.add_request(mk(12), SamplingParams(max_tokens=4))
+    for _ in range(40):
+        if r_kv in srv._pending_kv:
+            break
+        srv.step()
+    assert r_kv in srv._pending_kv
+    assert srv.abort(r_kv)
+    _assert_clean(srv, r_kv)
+
+    # -- decoding: slot + pool blocks held
+    r_d = srv.add_request(mk(12), SamplingParams(max_tokens=30))
+    for _ in range(40):
+        req = srv.proxy.inflight.get(r_d)
+        if req is not None and req.phase == Phase.DECODE_RUNNING:
+            break
+        srv.step()
+    assert srv.proxy.inflight[r_d].phase == Phase.DECODE_RUNNING
+    assert r_d in srv.decodes[0].rid_slot
+    assert srv.abort(r_d)
+    _assert_clean(srv, r_d)
+    outs = srv.step()
+    assert any(o.rid == r_d and o.finished and o.finish_reason == "abort"
+               for o in outs)
+
+    # survivors unaffected (keep may have finished during the staging
+    # loops above); all accounting returns to zero
+    t0 = time.monotonic()
+    while keep in srv.proxy.inflight and time.monotonic() - t0 < 60:
+        srv.step()
+    done = next(r for r in srv.metrics.done if r.rid == keep)
+    assert len(done.output_tokens) == 4 and done.finish_reason == "length"
+    assert srv.metrics.summary(1.0)["n_aborted"] == 4
+    assert not srv._pending_kv
+    for eng in srv.decodes:
+        assert not eng.rid_slot
+        assert eng.pool.free_blocks == eng.pool.n_blocks
+        eng.pool.check_invariants()
+    assert srv.proxy.prefill[0].running == 0
+    assert srv.proxy.prefill[0].queue_len == 0
+    assert srv.proxy.decode[0].running == 0
+    assert not srv.abort(99999)            # unknown rid → False, no crash
+
+
+def test_abort_preempted_request(small):
+    """Aborting a request parked in decode_wait with an extracted cache
+    (KV-exhaustion preemption) releases everything; the survivor finishes
+    and the pool returns to fully free."""
+    cfg, _, _ = small
+    srv = make_server(cfg, kv_blocks=3)     # block_size=16 → 48 tokens total
+    rng = np.random.default_rng(53)
+    prompts = [tuple(rng.integers(0, cfg.vocab_size, 14)) for _ in range(2)]
+    rids = [srv.add_request(p, SamplingParams(max_tokens=12))
+            for p in prompts]
+    victim = None
+    for _ in range(60):
+        srv.step()
+        if srv.decodes[0].stats["preemptions"] >= 1:
+            pre = [r for r in rids if r in srv._pending_kv
+                   and srv.proxy.inflight.get(r) is not None
+                   and srv.proxy.inflight[r].phase == Phase.DECODE_WAIT]
+            if pre:
+                victim = pre[0]
+                break
+    assert victim is not None, "no preemption materialized"
+    assert srv.abort(victim)
+    _assert_clean(srv, victim)
+    survivor = [r for r in rids if r != victim]
+    _, reasons, _ = drain(srv, survivor)
+    assert reasons[survivor[0]] == "length"
+    done = next(r for r in srv.metrics.done if r.rid == survivor[0])
+    assert len(done.output_tokens) == 12
+    pool = srv.decodes[0].pool
+    assert pool.free_blocks == pool.n_blocks
+    s = srv.metrics.summary(1.0)
+    assert s["n_aborted"] == 1 and s["n_done"] == 1
+
+
+def test_kv_lost_restart_does_not_replay_deltas(small):
+    """A decode-instance death reroutes its requests through prefill from
+    scratch (output_tokens cleared); the regenerated prefix is identical
+    (draws are positional) and must NOT be re-streamed: each request's
+    concatenated RequestOutput deltas contain every token exactly once."""
+    cfg, _, _ = small
+    srv = make_server(cfg)
+    rng = np.random.default_rng(59)
+    rids = [srv.add_request(tuple(rng.integers(0, cfg.vocab_size, 8)),
+                            SamplingParams(max_tokens=6)) for _ in range(3)]
+    t0 = time.monotonic()
+    deltas: dict[int, list] = {r: [] for r in rids}
+    live = set(rids)
+    killed = False
+    while live and time.monotonic() - t0 < 120:
+        for out in srv.step():
+            deltas[out.rid].extend(out.new_tokens)
+            if out.finished:
+                live.discard(out.rid)
+        if not killed and any(r in srv.decodes[0].rid_slot for r in rids):
+            srv.proxy.mark_unhealthy("decode", 0, time.monotonic())
+            srv.proxy.mark_healthy("decode", 0)
+            killed = True
+    assert killed and not live
+    for r in rids:
+        done = next(q for q in srv.metrics.done if q.rid == r)
+        assert deltas[r] == done.output_tokens    # no replay, no gap
+        assert len(deltas[r]) == 6
+
+
+def test_run_sleeps_until_future_arrival(small):
+    """With nothing in flight and a future arrival, run() must sleep
+    instead of busy-spinning on time.monotonic()."""
+    cfg, _, _ = small
+    srv = make_server(cfg)
+    rng = np.random.default_rng(55)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 8)), 3)]
+    s = srv.run(reqs, max_wall_s=30, arrivals=[0.25])
+    assert s["n_done"] == 1
+    assert s["idle_slept_s"] >= 0.2
+
+
+def test_first_token_stop_never_admits_to_decode(small):
+    """A request whose FIRST token is a stop token (or max_tokens=1) must
+    retire at prefill — no decode admission, no KV handoff leak."""
+    cfg, _, _ = small
+    probe = make_server(cfg)
+    rng = np.random.default_rng(57)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 9))
+    first = list(probe.generate(prompt, SamplingParams(max_tokens=1)))
+    assert sum(len(o.new_tokens) for o in first) == 1
+    assert first[-1].finish_reason == "length"
+
+    srv = make_server(cfg)
+    tok0 = first[-1].new_tokens[-1] if first[-1].new_tokens else \
+        [t for o in first for t in o.new_tokens][0]
+    rid = srv.add_request(prompt, SamplingParams(
+        max_tokens=5, stop_token_ids=(int(tok0),)))
+    toks, reasons, _ = drain(srv, [rid])
+    assert toks[rid] == (tok0,) and reasons[rid] == "stop"
+    assert srv.decodes[0].stats["admits"] == 0
+    assert not srv._pending_kv
