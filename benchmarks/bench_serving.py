@@ -32,6 +32,12 @@ compute-skips non-resident blocks.
 `blocks_shared` counts prefix blocks MAPPED at admission (refcounted, zero
 copy) vs `blocks_fresh` allocated-and-written; a prefix-sharing admission
 copies only the partial tail block and the suffix.
+`prefill_kv_peak_blocks` is the peak KV blocks pinned by prefill-side state:
+paged prefill allocates per chunk (∝ prompt length) and is asserted strictly
+below the dense engines, which pin blocks_for(max_len) per live task.
+`handoff_copy_bytes` is the full-attention KV physically copied at
+admission: asserted ZERO on the paged path (block-table transfer) and equal
+to the max_len dense scatter on the compat paths.
 
 Greedy decode outputs are asserted identical across all greedy variants (the
 chunked and paged paths are numerically exact; argmax at float32 must
@@ -79,16 +85,23 @@ def _build(chunked: bool, reuse: bool, paged: bool):
     scfg = ServerConfig(
         n_prefill=1, n_decode=1, decode_slots=6, max_len=512,
         chunked_prefill=chunked, chunk_tokens=128, prefill_tick_budget=512,
-        prefix_reuse=reuse, paged_kv=paged, oas=OASConfig(defer_window=0.0))
+        prefix_reuse=reuse, paged_kv=paged, kv_blocks=320,
+        oas=OASConfig(defer_window=0.0))
     srv = Server(cfg, scfg, pattern=[0] * cfg.n_layers)
     _warm(srv, cfg)
     srv.metrics = MetricsAggregator()
     for e in srv.prefills:
+        # warm prompts parked in the prefix store would pin arena blocks
+        # into the measured run — drop them (they are prefix-free vs the
+        # workload anyway)
+        e.store.clear()
         e.stats.update(prefills=0, cache_hits=0, prefix_hits=0,
                        reused_tokens=0, tokens=0, chunks=0, busy_s=0.0,
-                       host_fetches=0)
+                       host_fetches=0, blocks_mapped=0,
+                       prefill_kv_peak_blocks=0, defers=0)
     for e in srv.decodes:
         e.stats.update(steps=0, tokens=0, busy_s=0.0, kv_transfer_bytes=0,
+                       kv_transfer_bytes_padded=0, handoff_copy_bytes=0,
                        admits=0, preemptions=0, blocks_touched=0,
                        blocks_shared=0, blocks_fresh=0, host_fetches=0)
     return cfg, srv
@@ -99,17 +112,18 @@ def _warm(srv, cfg):
     buckets (budget slicing and snapshot boundaries can produce any of them)
     and all pow2 admission-batch sizes. Warm prompts are mutually prefix-free
     and practically disjoint from the random workload, so the prefix store
-    carries no usable entries into the measurement."""
+    carries no usable entries into the measurement (and _build drops them
+    afterwards so they don't pin arena blocks).
+
+    On the paged path every admission consumes its own BlockHandoff (pool
+    ownership transfers exactly once), so each warm admission prefills a
+    fresh prompt instead of re-admitting one record under many rids."""
     import jax.numpy as jnp
 
-    from repro.serving import SamplingParams
+    from repro.serving import BlockHandoff, SamplingParams
 
     pe, de = srv.prefills[0], srv.decodes[0]
-    recs = []
-    for i, n in enumerate((5, 12, 24, 64, 320)):
-        p = tuple((1000 + 131 * i + 7 * j) % cfg.vocab_size for j in range(n))
-        cache, first, _ = pe.process(p)
-        recs.append((cache, first, n))
+    lens = (5, 12, 24, 64, 320)
     # first-token sampler buckets: several prompts can finish in one engine
     # round during the measurement (greedy and sampled rows share a trace —
     # the params are data, not shape)
@@ -121,14 +135,23 @@ def _warm(srv, cfg):
     for k in (1, 2, 4, 8):
         batch = []
         for j in range(k):
-            c, f, n = recs[j % len(recs)]
-            batch.append((rid, c, f, n, 0))
+            n = lens[(rid - 9000) % len(lens)]
+            p = tuple((1000 + 131 * rid + 7 * j2) % cfg.vocab_size
+                      for j2 in range(n))
+            cache, first, _ = pe.process(p)
+            batch.append((rid, cache, first, n, 0))
             rid += 1
         granted = de.admit_batch(batch)
         de.step()
         for r, ok in granted.items():
             if ok:
                 de.release(r)
+        for r, c, *_ in batch:
+            # a denied admission (k=8 exceeds decode_slots) hands its
+            # BlockHandoff back — release it or its arena blocks stay
+            # pinned through the measured run
+            if not granted.get(r, False) and isinstance(c, BlockHandoff):
+                de.pool.release(c.key)
 
 
 def run(n_requests: int = 12):
@@ -169,6 +192,16 @@ def run(n_requests: int = 12):
             assert ps["host_fetches"] < n_finished, \
                 f"{name}: first-token sampling not actually batched " \
                 f"({ps['host_fetches']} fetches / {n_finished} prompts)"
+        # zero-copy gate: the paged path must never copy full-attention KV
+        # at admission, and prefill must pin blocks ∝ prompt length — the
+        # dense engines pin blocks_for(max_len) per live task
+        if paged:
+            assert ds["handoff_copy_bytes"] == 0, \
+                f"{name}: paged handoff copied {ds['handoff_copy_bytes']}B"
+        else:
+            assert ds["handoff_copy_bytes"] > 0
+        assert s["kv_transfer_true_bytes"] < s["kv_transfer_padded_bytes"], \
+            f"{name}: transfer meter still charges max_len padding"
         results.append({
             "variant": name,
             "n_done": s["n_done"],
@@ -182,10 +215,12 @@ def run(n_requests: int = 12):
             "prefix_hits": ps["prefix_hits"],
             "tok_per_step": ds["tokens"] / max(ds["steps"], 1),
             "blocks_touched": ds["blocks_touched"],
-            "blocks_shared": ds["blocks_shared"],
+            "blocks_shared": ds["blocks_shared"] + ps["blocks_mapped"],
             "blocks_fresh": ds["blocks_fresh"],
             "host_fetches": ds["host_fetches"],
             "first_fetches": ps["host_fetches"],
+            "prefill_kv_peak_blocks": ps["prefill_kv_peak_blocks"],
+            "handoff_copy_bytes": ds["handoff_copy_bytes"],
         })
     ref = outputs["dense"]
     for name, *_ in variants[1:]:
@@ -194,6 +229,15 @@ def run(n_requests: int = 12):
         assert outputs[name] == ref, \
             f"greedy outputs diverged between dense and {name} paths"
     assert outputs["sampled"] != ref, "sampled variant decoded greedily"
+    # prefill-phase memory gate: paged prefill's peak block footprint must
+    # sit strictly below the dense engines' per-task max_len pinning
+    dense_peak = min(r["prefill_kv_peak_blocks"] for r in results
+                     if r["variant"] in ("dense", "chunked",
+                                         "chunked+reuse+dense"))
+    paged_peak = max(r["prefill_kv_peak_blocks"] for r in results
+                     if r["variant"] in ("chunked+reuse", "sampled"))
+    assert paged_peak < dense_peak, \
+        f"paged prefill peak {paged_peak} blocks !< dense {dense_peak}"
     return results
 
 
@@ -201,7 +245,8 @@ def main(fast: bool = False):
     print("variant,n_done,qps,ttft_mean_s,ttft_p99_s,tpot_mean_ms,"
           "ott_tok_s,prefill_tokens,reused_tokens,prefix_hits,"
           "tok_per_step,blocks_touched,blocks_shared,blocks_fresh,"
-          "host_fetches,first_fetches")
+          "host_fetches,first_fetches,prefill_kv_peak_blocks,"
+          "handoff_copy_bytes")
     rows = run(8 if fast else 12)
     for r in rows:
         print(f"{r['variant']},{r['n_done']},{r['qps']:.2f},"
@@ -211,7 +256,8 @@ def main(fast: bool = False):
               f"{r['prefix_hits']},{r['tok_per_step']:.2f},"
               f"{r['blocks_touched']},{r['blocks_shared']},"
               f"{r['blocks_fresh']},{r['host_fetches']},"
-              f"{r['first_fetches']}", flush=True)
+              f"{r['first_fetches']},{r['prefill_kv_peak_blocks']},"
+              f"{r['handoff_copy_bytes']}", flush=True)
     full = next(r for r in rows if r["variant"] == "dense")
     chk = next(r for r in rows if r["variant"] == "chunked+reuse")
     dns = next(r for r in rows if r["variant"] == "chunked+reuse+dense")
@@ -222,7 +268,11 @@ def main(fast: bool = False):
           f" → {chk['tpot_mean_ms']:.1f}ms; paged decode touches "
           f"{chk['blocks_touched']} KV blocks vs {dns['blocks_touched']} "
           f"slot-dense, {chk['blocks_shared']} prefix blocks mapped "
-          f"(not copied) at admission; per-request sampling: "
+          f"(not copied); paged prefill peaks at "
+          f"{chk['prefill_kv_peak_blocks']} KV blocks vs "
+          f"{dns['prefill_kv_peak_blocks']} dense (∝ prompt, not max_len) "
+          f"with handoff_copy_bytes={chk['handoff_copy_bytes']} (dense "
+          f"scatter: {dns['handoff_copy_bytes']}); per-request sampling: "
           f"tpot {chk['tpot_mean_ms']:.1f}ms → {smp['tpot_mean_ms']:.1f}ms "
           f"with host_fetches == decode steps ({smp['host_fetches']}) — "
           f"zero per-token syncs added", flush=True)

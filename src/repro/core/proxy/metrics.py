@@ -13,6 +13,12 @@ from repro.core.proxy.lifecycle import Request
 class MetricsAggregator:
     done: list = field(default_factory=list)
     aborted: list = field(default_factory=list)
+    # PD transfer-cost model: true bytes = the KV payload actually resident
+    # (prompt tokens), padded bytes = what a dense max_len handoff pytree
+    # would meter. The old model reported only the padded figure — a
+    # 64-token prompt in a max_len=2048 cache charged 32× its real bytes.
+    kv_transfer_true_bytes: int = 0
+    kv_transfer_padded_bytes: int = 0
 
     def add(self, req: Request):
         if req.finish_time is not None:
@@ -22,6 +28,12 @@ class MetricsAggregator:
         """Cancelled requests are tracked separately: they count in
         `n_aborted` but never pollute the latency distributions."""
         self.aborted.append(req)
+
+    def note_kv_transfer(self, true_bytes: int, padded_bytes: int):
+        """Record one admission round's KV handoff payload (both figures,
+        so the padding distortion stays visible in summaries)."""
+        self.kv_transfer_true_bytes += true_bytes
+        self.kv_transfer_padded_bytes += padded_bytes
 
     def _reasons(self) -> dict:
         n_stop = sum(1 for r in self.done if r.finish_reason == "stop")
@@ -39,7 +51,9 @@ class MetricsAggregator:
                     "ttft_mean": nan, "ttft_p99": nan,
                     "tpot_mean_ms": nan, "tpot_p99_ms": nan,
                     "e2e_mean": nan, "e2e_p99": nan,
-                    "ott_tok_s": 0.0, "ttt_tok_s": 0.0}
+                    "ott_tok_s": 0.0, "ttt_tok_s": 0.0,
+                    "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
+                    "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes}
         ttft = np.array([r.ttft() for r in self.done if r.ttft() is not None])
         tpot = np.array([r.tpot() for r in self.done if r.tpot() is not None])
         e2e = np.array([r.e2e() for r in self.done])
@@ -59,4 +73,6 @@ class MetricsAggregator:
             "e2e_p99": pct(e2e, 99),
             "ott_tok_s": out_toks / wall,
             "ttt_tok_s": tot_toks / wall,
+            "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
+            "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes,
         }

@@ -116,6 +116,29 @@ class RadixTree:
         node.payload = payload
         return True
 
+    def detach(self, tokens, payload=None) -> bool:
+        """Clear the payload handle at exactly the `tokens` boundary; when
+        `payload` is given, clear only if it still matches (a superseding
+        attach may have replaced it). → True if a handle was cleared.
+        Dropped store entries call this so stale handles don't linger on
+        the matched path until eviction."""
+        tokens = tuple(tokens)
+        node, matched = self.root, 0
+        while matched < len(tokens):
+            child = node.children.get(tokens[matched])
+            if child is None:
+                return False
+            cp = _common_prefix(child.edge, tokens[matched:])
+            if cp < len(child.edge):
+                return False
+            node = child
+            matched += cp
+        if node.payload is None or \
+                (payload is not None and node.payload != payload):
+            return False
+        node.payload = None
+        return True
+
     def payload_prefixes(self, tokens, now: Optional[float] = None) -> list:
         """All (depth, payload) pairs on the matched path of `tokens`,
         shallow → deep. Handles may be stale (evicted store entries):

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode import paged_decode
+from repro.kernels.paged_prefill import paged_prefill
 from repro.kernels.sink_decode import sink_decode
 
 
@@ -56,6 +57,25 @@ def attention_paged_decode_op(q, k_pages, v_pages, tables, lens):
     o = paged_decode(q.reshape(B, K, G, h), k_pages, v_pages, tables, lens,
                      interpret=_interpret())
     return o.reshape(B, H, h)
+
+
+def attention_paged_prefill_op(q, k_new, v_new, k_pages, v_pages, tables,
+                               off, chunk_len, *, window=0, sink=0):
+    """Chunked prefill over paged history. q [B,S,H,h]; k_new/v_new
+    [B,S,K,h]; arenas [N,K,bs,h]; tables [B,nb]; off/chunk_len scalars or
+    [B] → [B,S,H,h]. Rows are regrouped per kv head (row r = chunk token
+    r//G, the kernel's GQA layout)."""
+    B, S, H, h = q.shape
+    K = k_new.shape[2]
+    G = H // K
+    qf = q.reshape(B, S, K, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, S * G, h)
+    kf = k_new.transpose(0, 2, 1, 3)
+    vf = v_new.transpose(0, 2, 1, 3)
+    o = paged_prefill(qf, kf, vf, k_pages, v_pages, tables, off, chunk_len,
+                      window=window, sink=sink, interpret=_interpret())
+    return o.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, h)
 
 
 def moe_gmm_op(x, w, n_valid, **kw):

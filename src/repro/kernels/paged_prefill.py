@@ -1,0 +1,166 @@
+"""Chunked-prefill attention over physically paged history KV (TPU Pallas).
+
+The prefill-side sibling of ``paged_decode``: one query *chunk* of a prompt
+(S tokens at absolute positions ``off .. off+S``, of which only the first
+``cl`` rows are real) attends to
+
+  1. the prompt's **resident history** — tokens ``< off`` living in
+     non-contiguous fixed-size blocks of the global per-layer arena
+     ``[n_blocks, K, block_size, h]`` (kv-head-major), reached through the
+     task's scalar-prefetched block table so the BlockSpec index map drives
+     the DMA gather directly, and
+  2. the chunk's own keys, under the causal in-chunk mask.
+
+Online softmax accumulates across history blocks and the in-chunk step in
+VMEM scratch, so the kernel never materializes the full score row. The
+OmniAttn sink+window sparse mask (eq. 6's token subset) is fused into both
+score blocks: a key at absolute position t is visible to the query at
+position p iff ``t <= p`` and (when ``window > 0``)
+``p - t < window or t < sink`` — full-attention layers pass window=sink=0.
+
+Chunk K/V is *not* written here: the engine scatters it into the arena
+blocks in the same jit (``models/attention.py::paged_prefill_write``), the
+same split as the decode path (kernel reads, jnp scatter writes).
+
+Grid: (B, K, n_hist_blocks + 1) with the last dimension sequential; block
+j < nb is history block j (compute skipped entirely once ``j*bs >= off`` —
+table entries past the resident region point at the reserved null block 0,
+whose DMA fetch is masked out), and j == nb is the in-chunk step. GQA is
+native: the q block carries all G = H/K query rows of one kv group per
+chunk token (row r of the [S*G, h] q tile is chunk token r // G).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax>=0.7 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, block_size: int,
+            n_blocks: int, S: int, G: int, window: int, sink: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    off = meta_ref[b, 0]
+    cl = meta_ref[b, 1]
+    SG = S * G
+    # query row r is chunk token r // G at absolute position off + r // G
+    p_row = off + jax.lax.broadcasted_iota(jnp.int32, (SG, 1), 0)[:, 0] // G
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _allowed(p, t):
+        ok = t <= p
+        if window > 0:
+            win = (p - t) < window
+            if sink > 0:
+                win |= t < sink
+            ok &= win
+        return ok
+
+    def _accumulate(s, mask):
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        return p, corr
+
+    # history block j: logical slots [j*bs, (j+1)*bs) hold tokens at those
+    # absolute positions; skip compute once the block starts past the
+    # resident region (its tabled entry is the null block)
+    @pl.when(jnp.logical_and(j < n_blocks, j * block_size < off))
+    def _history():
+        q = q_ref[...].astype(jnp.float32)              # [SG, h]
+        k = kp_ref[...].astype(jnp.float32)             # [bs, h]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        tok = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (tok < off) & _allowed(p_row[:, None], tok)
+        p, corr = _accumulate(s, mask)
+        v = vp_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+
+    # in-chunk step: causal attention over the chunk's own (real) keys
+    @pl.when(j == n_blocks)
+    def _chunk():
+        q = q_ref[...].astype(jnp.float32)              # [SG, h]
+        k = kn_ref[...].astype(jnp.float32)             # [S, h]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        u = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        t = off + u
+        mask = (u < cl) & _allowed(p_row[:, None], t)
+        p, corr = _accumulate(s, mask)
+        v = vn_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "sink", "interpret"))
+def paged_prefill(q, k_new, v_new, k_pages, v_pages, tables, off, chunk_len,
+                  *, window: int = 0, sink: int = 0, interpret: bool = False):
+    """q [B, K, S*G, h] (row r = chunk token r//G); k_new/v_new [B, K, S, h];
+    arenas [N, K, bs, h]; tables [B, nb] physical block ids; off/chunk_len
+    [B] (history length, real chunk rows) → o [B, K, S*G, h]."""
+    B, K, SG, h = q.shape
+    S = k_new.shape[2]
+    G = SG // S
+    bs = k_pages.shape[2]
+    nb = tables.shape[1]
+    scale = h ** -0.5
+    meta = jnp.stack([jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,)),
+                      jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32),
+                                       (B,))], axis=1)
+    kernel = functools.partial(_kernel, scale=scale, block_size=bs,
+                               n_blocks=nb, S=S, G=G, window=window, sink=sink)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # tables, meta
+        grid=(B, K, nb + 1),
+        in_specs=[
+            pl.BlockSpec((None, None, SG, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, S, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, S, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            # the j == nb (in-chunk) step still fetches a tabled block; the
+            # clamped entry is never read by compute
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, meta:
+                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, meta:
+                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, SG, h),
+                               lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((SG, h), jnp.float32),
+            pltpu.VMEM((SG,), jnp.float32),
+            pltpu.VMEM((SG,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, SG, h), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), meta, q, k_new, v_new, k_pages, v_pages)

@@ -52,6 +52,45 @@ def paged_decode_ref(q, k_pages, v_pages, tables, lens):
     return sink_decode_ref(q, k_lin, v_lin, lens)
 
 
+def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
+                      chunk_len, *, window=0, sink=0):
+    """q [B,K,S*G,h] (row r = chunk token r//G); k_new/v_new [B,K,S,h];
+    pages [N,K,bs,h]; tables [B,nb]; off/chunk_len [B] → [B,K,S*G,h].
+    Dense reference: gather the tabled history blocks into a linear cache,
+    concatenate the chunk keys, and run one masked softmax — resident
+    history (slot < off), valid chunk rows (< chunk_len), causal, and the
+    optional sink+window sparse mask."""
+    B, K, SG, h = q.shape
+    S = k_new.shape[2]
+    G = SG // S
+    nb = tables.shape[1]
+    bs = k_pages.shape[2]
+    off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,))
+    cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (B,))
+    k_hist = jnp.moveaxis(k_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    v_hist = jnp.moveaxis(v_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    k_all = jnp.concatenate([k_hist, k_new], axis=2).astype(jnp.float32)
+    v_all = jnp.concatenate([v_hist, v_new], axis=2).astype(jnp.float32)
+    tok_h = jnp.broadcast_to(jnp.arange(nb * bs)[None], (B, nb * bs))
+    tok_c = off[:, None] + jnp.arange(S)[None]
+    tok = jnp.concatenate([tok_h, tok_c], axis=1)            # [B, L+S]
+    res = jnp.concatenate([tok_h < off[:, None],
+                           jnp.arange(S)[None] < cl[:, None]], axis=1)
+    p_row = off[:, None] + (jnp.arange(SG) // G)[None]       # [B, SG]
+    ok = tok[:, None, :] <= p_row[:, :, None]
+    if window > 0:
+        win = (p_row[:, :, None] - tok[:, None, :]) < window
+        if sink > 0:
+            win |= (tok < sink)[:, None, :]
+        ok &= win
+    mask = res[:, None, :] & ok                              # [B, SG, L+S]
+    s = jnp.einsum("bkrh,bkth->bkrt", q.astype(jnp.float32),
+                   k_all) * (h ** -0.5)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkrt,bkth->bkrh", p, v_all).astype(q.dtype)
+
+
 def moe_gmm_ref(x, w, n_valid):
     """x [s,C,D] @ w [s,D,F] with valid-row masking → [s,C,F]."""
     C = x.shape[1]

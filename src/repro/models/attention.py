@@ -222,6 +222,80 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lens):
     return decode_attention(q, k_lin, v_lin, lens)
 
 
+def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, tables, off,
+                            chunk_len, *, mask_window: int = 0,
+                            mask_sink: int = 0):
+    """Chunked-prefill attention over paged history (pure-jnp path).
+
+    q [B,S,H,h] is one prompt chunk at absolute positions off + arange(S)
+    (only the first chunk_len rows real); k_new/v_new [B,S,K,h] are its
+    keys; the prompt's history (tokens < off) lives in arena blocks
+    [N,K,bs,h] mapped by tables [B,nb]. Queries attend resident history
+    slots plus causal in-chunk keys, optionally under the sink+window
+    sparse mask (mask_window=0 → dense causal). Non-resident table entries
+    alias the null block and are masked by off. The Pallas kernel
+    (kernels/paged_prefill.py) additionally skips compute for blocks past
+    the residency — this fallback pays the full gather.
+    """
+    B, S, H, h = q.shape
+    K = k_new.shape[2]
+    G = H // K
+    nb = tables.shape[1]
+    bs = k_pages.shape[2]
+    L = nb * bs
+    f32 = jnp.float32
+    off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,))
+    cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (B,))
+    k_hist = k_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
+    v_hist = v_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
+    pos = off[:, None] + jnp.arange(S)[None]                 # [B, S] q pos
+    tok = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(L)[None], (B, L)), pos], axis=1)
+    res = jnp.concatenate([jnp.arange(L)[None] < off[:, None],
+                           jnp.arange(S)[None] < cl[:, None]], axis=1)
+
+    ok = tok[:, None, :] <= pos[:, :, None]
+    if mask_window > 0:
+        win = (pos[:, :, None] - tok[:, None, :]) < mask_window
+        if mask_sink > 0:
+            win |= (tok < mask_sink)[:, None, :]
+        ok &= win
+    mask = res[:, None, :] & ok                              # [B, S, L+S]
+
+    qg = q.reshape(B, S, K, G, h).astype(f32)
+    k_all = jnp.concatenate([k_hist, k_new], axis=1).astype(f32)
+    v_all = jnp.concatenate([v_hist, v_new], axis=1).astype(f32)
+    s = jnp.einsum("bskgh,btkh->bskgt", qg, k_all) * (h ** -0.5)
+    s = jnp.where(mask[:, :, None, None, :], s, jnp.asarray(NEG_INF, f32))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bskgt,btkh->bskgh", p, v_all)
+    return out.reshape(B, S, H, h).astype(q.dtype)
+
+
+def paged_prefill_write(k_pages, v_pages, k_new, v_new, tables, off,
+                        chunk_len):
+    """Scatter one chunk's K/V [B,S,K,h] (B == 1) into arena blocks.
+
+    Chunk token i lands at absolute position off + i → physical block
+    tables[0, (off+i)//bs] at in-block offset (off+i) % bs; padded tail
+    rows (i >= chunk_len) are redirected to the null block 0, where
+    clobbering is harmless (null contents are masked everywhere).
+    """
+    B, S, K, h = k_new.shape
+    bs = k_pages.shape[2]
+    nb = tables.shape[1]
+    pos = jnp.asarray(off, jnp.int32) + jnp.arange(S)
+    valid = jnp.arange(S) < jnp.asarray(chunk_len, jnp.int32)
+    blk = jnp.where(valid, tables[0, jnp.clip(pos // bs, 0, nb - 1)], 0)
+    offi = pos % bs
+    ki = jnp.arange(K)[None, :]
+    k_pages = k_pages.at[blk[:, None], ki, offi[:, None]].set(
+        k_new[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[blk[:, None], ki, offi[:, None]].set(
+        v_new[0].astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
 def paged_cache_write(k_pages, v_pages, k_new, v_new, blk, off):
     """Write one token's K/V per sequence into arena blocks.
 

@@ -147,13 +147,17 @@ class LM:
         return cache, logits, aux
 
     def prefill_resume(self, params, batch, cache, *, max_len: int,
-                       tables=None, chunk_len=None, attend_limit: int = 0):
+                       tables=None, chunk_len=None, attend_limit: int = 0,
+                       block_tables=None):
         """Continue prefill from an existing cache (chunked prefill / radix
         prefix-KV reuse). batch['tokens'] [B,S] is the next chunk, occupying
         absolute positions cache['pos'] + arange(S); chunk_len (traced scalar)
         marks the real rows of a right-padded final chunk. Returns
         (cache, logits-of-last-real-token [B,V], aux). A prefill from scratch
-        is the degenerate case: a zero cache with pos=0 (alloc_cache)."""
+        is the degenerate case: a zero cache with pos=0 (alloc_cache).
+        block_tables [1, nb] (optional) selects the physically paged prefill
+        path: full-attention cache leaves are block arenas, the chunk's KV
+        is written straight into the tabled blocks."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -168,7 +172,7 @@ class LM:
             cfg, self.mesh, self.plan, params["stack"], x, mode="prefill",
             positions=positions, caches=cache, max_len=max_len,
             batch_part=bp, tables=tables, true_len=cl,
-            attend_limit=attend_limit)
+            attend_limit=attend_limit, block_tables=block_tables)
         last = jax.lax.dynamic_index_in_dim(x, cl - 1, axis=1, keepdims=False)
         logits = self._logits(params, last)
         new_cache["pos"] = off + cl

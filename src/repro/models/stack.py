@@ -277,6 +277,89 @@ def alloc_paged_cache(cfg, mesh, plan, n_slots, max_len, n_arena_blocks,
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
 
 
+# ----------------------------------------------------------------------
+# Arena/private cache split: with paged *prefill*, the pool-managed
+# full-attention block arenas are SHARED between the prefill and decode
+# engines (zero-copy admission is a block-table transfer), while everything
+# bounded — ring KV, mamba state, per-slot scalars — stays engine-private.
+# A cache pytree handed to a jit is composed as (private ∪ arena) and split
+# back after the (donated) call; positions with no entry hold None.
+def full_attn_layer(cfg: ModelConfig, spec: LayerSpec) -> bool:
+    """True for attention layers whose KV grows with context (full cache:
+    no ring) — exactly the layers whose KV lives in pool-backed arenas."""
+    return spec.kind == "attn" and cache_window(cfg, spec) == (0, 0)
+
+
+def _drop_entries(cfg, plan, tree, drop_full: bool):
+    """None out period/rem entries on one side of the full-attn split."""
+    per = tuple(None if full_attn_layer(cfg, s) == drop_full else
+                tree["period"][i] for i, s in enumerate(plan.period))
+    rem = tuple(None if full_attn_layer(cfg, s) == drop_full else
+                tree["rem"][i] for i, s in enumerate(plan.rem))
+    out = {"period": per, "rem": rem}
+    if "pos" in tree:
+        out["pos"] = tree["pos"]
+    return out
+
+
+def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
+    """Allocate only the shared full-attention arenas:
+    {"period": (entry|None, ...), "rem": (...)} with entry {"k","v"} of
+    shape [n_rep?, n_arena_blocks, K, bs, h] (`n_arena_blocks` includes the
+    reserved null block 0)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    K, h = cfg.n_kv_heads, cfg.head_dim
+
+    def one(spec, stacked):
+        if not full_attn_layer(cfg, spec):
+            return None
+        shp = (n_arena_blocks, K, block_size, h)
+        if stacked:
+            shp = (plan.n_rep,) + shp
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+    return {"period": tuple(one(s, True) for s in plan.period),
+            "rem": tuple(one(s, False) for s in plan.rem)}
+
+
+def alloc_prefill_private_cache(cfg, mesh, plan, max_len, dtype=None):
+    """B=1 dense task cache WITHOUT full-attention layers (their KV lives
+    in the shared arena): ring KV (bounded by sink+recent), mamba state,
+    and the position scalar. This is what a paged prefill task pins per
+    layer instead of a [1, max_len, K, h] dense cache."""
+    return _drop_entries(cfg, plan,
+                         alloc_cache(cfg, mesh, plan, 1, max_len, dtype),
+                         drop_full=True)
+
+
+def alloc_paged_private_cache(cfg, mesh, plan, n_slots, max_len, block_size,
+                              dtype=None):
+    """Decode-engine private side of the paged cache: per-slot ring arenas
+    and non-attention state; full-attention entries are None (shared
+    arena). n_arena_blocks=1 below is a placeholder — those entries are
+    dropped."""
+    return _drop_entries(cfg, plan,
+                         alloc_paged_cache(cfg, mesh, plan, n_slots, max_len,
+                                           1, block_size, dtype),
+                         drop_full=True)
+
+
+def merge_arena_cache(cfg, plan, private, arena_kv):
+    """(private ∪ arena) → the full cache pytree a jit body expects."""
+    per = tuple(arena_kv["period"][i] if full_attn_layer(cfg, s)
+                else private["period"][i] for i, s in enumerate(plan.period))
+    rem = tuple(arena_kv["rem"][i] if full_attn_layer(cfg, s)
+                else private["rem"][i] for i, s in enumerate(plan.rem))
+    return {"period": per, "rem": rem, "pos": private["pos"]}
+
+
+def split_arena_cache(cfg, plan, cache):
+    """Inverse of merge_arena_cache → (private, arena_kv)."""
+    return (_drop_entries(cfg, plan, cache, drop_full=True),
+            _drop_entries(cfg, plan, {k: cache[k] for k in ("period", "rem")},
+                          drop_full=False))
+
+
 # ======================================================================
 def unstack_params(plan: StackPlan, params: dict) -> list[dict]:
     """Stack params → flat per-layer list (layer order)."""
@@ -337,7 +420,29 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
 
     use_pallas = cfg.use_pallas and mesh.tp == 1
     new_cache = None
-    if mode == "prefill" and cache is not None:
+    if (mode == "prefill" and cache is not None and block_tables is not None
+            and not (sink or recent)):
+        # paged chunked prefill (B=1 task): the prompt's resident history
+        # lives in pool-allocated arena blocks reached through the task's
+        # block table (cache leaves ARE the arenas); the chunk's K/V is
+        # scattered straight into its own blocks — no dense [1, max_len]
+        # cache ever exists for this layer. Ring layers (sink or recent)
+        # stay on the dense per-task path below: their capacity is bounded
+        # by the window, not max_len.
+        cl = S if true_len is None else true_len
+        pos0 = jnp.asarray(positions, jnp.int32)[0]
+        if use_pallas:
+            from repro.kernels import ops as kops
+            out = kops.attention_paged_prefill_op(
+                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl)
+        else:
+            out = attn_mod.paged_prefill_attention(
+                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl)
+        kc, vc = attn_mod.paged_prefill_write(cache["k"], cache["v"], k, v,
+                                              block_tables, pos0, cl)
+        y = out.reshape(B, S, H * h)
+        new_cache = {"k": kc, "v": vc}
+    elif mode == "prefill" and cache is not None:
         # continuation chunk (chunked prefill / radix prefix-KV resume):
         # attend resident cache tokens + causal in-chunk keys, then scatter
         # the chunk into the cache. true_len here is chunk-local.

@@ -1,6 +1,7 @@
 from repro.core.proxy.params import RequestOutput, SamplingParams
-from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
+                                  PrefillEngine)
 from repro.serving.server import Server, ServerConfig
 
-__all__ = ["DecodeEngine", "PrefillEngine", "Server", "ServerConfig",
-           "SamplingParams", "RequestOutput"]
+__all__ = ["BlockHandoff", "DecodeEngine", "KVArena", "PrefillEngine",
+           "Server", "ServerConfig", "SamplingParams", "RequestOutput"]

@@ -18,39 +18,96 @@ another request still mapped.
 
 The pool also serves accounting-only admission control for the slot-dense
 decode path (`cached_tokens` credit without physical sharing).
+
+With paged prefill the pool is SHARED between the prefill and decode
+engines (one arena): decode requests map blocks under their integer rid;
+prefill tasks under ("prefill", rid); finished-but-unadmitted handoffs
+under ("handoff", i); prefix-store snapshots under ("store", handle). Any
+hashable key works — `rid` below is a mapping key, not necessarily an int.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.proxy.radix import RadixTree
+
+
+def _pytree_bytes(tree) -> int:
+    """Device bytes of a pytree snapshot (non-array leaves count 0)."""
+    if tree is None:
+        return 0
+    import jax
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+               if hasattr(x, "dtype"))
+
+
+@dataclass
+class StoreEntry:
+    """One stored prefix: `n` tokens of KV as either a dense snapshot
+    (`cache` holds the full-attention KV too) or — under paged prefill —
+    a refcounted arena block list (`blocks`, held in the pool under this
+    entry's key) plus the bounded private leaves (ring KV / mamba state) in
+    `cache`. `nbytes` is the REAL resident size (prefix-length KV, not a
+    max_len allocation) — what byte-capped LRU eviction weighs."""
+    n: int
+    tokens: tuple
+    cache: object
+    logits: object
+    blocks: Optional[Tuple[int, ...]] = None
+    nbytes: int = 0
 
 
 class PrefixKVStore:
     """Radix-backed prefix → KV-cache store for the prefill engine.
 
-    Entries are (cache, logits) snapshots keyed by full stored prompts.
-    `lookup` returns the deepest stored prompt that is a prefix of the query,
-    so prefill resumes at that boundary (resuming mid-entry is unsound for
+    Entries are prefix-KV snapshots keyed by full stored prompts. `lookup`
+    returns the deepest stored prompt that is a prefix of the query, so
+    prefill resumes at that boundary (resuming mid-entry is unsound for
     ring caches — the ring beyond the cut holds later tokens). When
     constructed over the proxy's per-instance RadixTree, eq. 8 Match_P
     scoring and the engine agree on what is actually resident.
 
-    LRU-capped on entry count; evicted handles left in the tree are treated
-    as stale and skipped at lookup. Re-storing a prompt supersedes the old
-    entry: its handle is dropped immediately (not left pinning dead KV until
-    LRU capacity happens to evict it).
+    Dense entries hold prefix-LENGTH caches (the engine trims the dense
+    max_len allocation before storing); paged entries hold refcounted arena
+    block lists adopted in the shared KVPool under ("store", handle) —
+    dropping an entry (supersede, LRU, byte-cap, reclaim) releases its
+    blocks and detaches its radix handle. Eviction is LRU over BOTH an
+    entry-count cap and a real-byte cap, so a 16-token prefix no longer
+    weighs the same as a 2048-token one.
     """
 
-    def __init__(self, tree: Optional[RadixTree] = None, capacity: int = 32):
+    def __init__(self, tree: Optional[RadixTree] = None, capacity: int = 32,
+                 pool: Optional["KVPool"] = None,
+                 capacity_bytes: Optional[int] = None):
         self.tree = tree if tree is not None else RadixTree()
         self.capacity = capacity
-        self.entries: OrderedDict[int, tuple] = OrderedDict()
+        self.capacity_bytes = capacity_bytes
+        self.pool = pool
+        self.entries: OrderedDict[int, StoreEntry] = OrderedDict()
         self._next_id = 0
 
-    def put(self, tokens, cache, logits, now: Optional[float] = None):
+    @property
+    def size_bytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+    def _drop(self, handle: int):
+        ent = self.entries.pop(handle, None)
+        if ent is None:
+            return
+        if ent.blocks is not None and self.pool is not None:
+            self.pool.release(("store", handle))
+        self.tree.detach(ent.tokens, handle)
+
+    def put(self, tokens, cache, logits, now: Optional[float] = None, *,
+            blocks: Optional[Sequence[int]] = None,
+            nbytes: Optional[int] = None):
+        """Store a prefix snapshot. `blocks` (paged mode): arena block ids
+        covering the prefix — adopted in the pool under this entry's key so
+        a later release by the writing request cannot free them. `nbytes`:
+        real resident bytes (computed from the pytree when omitted — pass
+        it for paged entries, whose arena bytes live outside `cache`)."""
         if self.capacity <= 0:
             return
         tokens = tuple(tokens)
@@ -66,20 +123,60 @@ class PrefixKVStore:
             return       # tree evicted the path (prompt > tree capacity):
                          # an unreachable entry would only pin memory
         if old is not None:
-            self.entries.pop(old, None)
-        self.entries[handle] = (len(tokens), cache, logits)
-        while len(self.entries) > self.capacity:
-            self.entries.popitem(last=False)      # stale handle stays in tree
+            self._drop(old)
+        if blocks is not None and self.pool is not None:
+            self.pool.adopt(("store", handle), blocks)
+        if nbytes is None:
+            nbytes = _pytree_bytes(cache) + _pytree_bytes(logits)
+        self.entries[handle] = StoreEntry(len(tokens), tokens, cache, logits,
+                                          tuple(blocks) if blocks is not None
+                                          else None, nbytes)
+        self._enforce_caps()
+
+    def _enforce_caps(self):
+        while len(self.entries) > self.capacity or (
+                self.capacity_bytes is not None
+                and self.size_bytes > self.capacity_bytes
+                and len(self.entries) > 1):
+            self._drop(next(iter(self.entries)))
+
+    def lookup_entry(self, tokens, now: Optional[float] = None
+                     ) -> Optional[StoreEntry]:
+        """Deepest resident stored prefix of `tokens` (LRU-touched)."""
+        for depth, handle in reversed(self.tree.payload_prefixes(tokens, now)):
+            hit = self.entries.get(handle)
+            if hit is not None and hit.n == depth:
+                self.entries.move_to_end(handle)
+                return hit
+        return None
 
     def lookup(self, tokens, now: Optional[float] = None):
         """→ (n_matched, cache, logits) for the deepest resident stored
         prefix of `tokens`, or (0, None, None)."""
-        for depth, handle in reversed(self.tree.payload_prefixes(tokens, now)):
-            hit = self.entries.get(handle)
-            if hit is not None and hit[0] == depth:
-                self.entries.move_to_end(handle)
-                return depth, hit[1], hit[2]
-        return 0, None, None
+        hit = self.lookup_entry(tokens, now)
+        if hit is None:
+            return 0, None, None
+        return hit.n, hit.cache, hit.logits
+
+    def clear(self):
+        """Drop every entry (benchmarks reset between warmup and the
+        measured run; paged entries release their pool blocks)."""
+        for handle in list(self.entries):
+            self._drop(handle)
+
+    def evict_for_blocks(self, n_blocks: int) -> int:
+        """Backpressure reclaim: drop LRU paged entries until `n_blocks`
+        pool blocks came free (an entry only frees blocks whose last mapper
+        it was) or no paged entries remain. → blocks actually freed."""
+        if self.pool is None:
+            return 0
+        start = self.pool.free_blocks
+        for handle in list(self.entries):
+            if self.pool.free_blocks - start >= n_blocks:
+                break
+            if self.entries[handle].blocks is not None:
+                self._drop(handle)
+        return self.pool.free_blocks - start
 
 
 @dataclass
@@ -143,6 +240,12 @@ class KVPool:
         total = self.blocks_for(n_tokens)
         if shared is not None:
             shared = list(shared[:total])
+            for b in shared:
+                # a shared block must be mapped by SOMEONE (lender, store
+                # entry, or pin) — silently refcounting a free-listed id
+                # would let the pool hand the same block out twice
+                if b not in self.refcount:
+                    raise ValueError(f"sharing unmapped block {b}")
             fresh_n = total - len(shared)
         else:
             shared = []
@@ -154,6 +257,33 @@ class KVPool:
         for b in table:
             self.refcount[b] = self.refcount.get(b, 0) + 1
         self.per_request[rid] = table
+        return table
+
+    def adopt(self, rid, blocks: Sequence[int]) -> List[int]:
+        """Map an EXISTING block list under `rid` (refcount++ each; no
+        allocation). Prefix-store snapshots and resume borrowers use this:
+        the blocks stay alive until every mapper — writer, store entry,
+        borrowers — has released."""
+        if rid in self.per_request:
+            raise ValueError(f"rid {rid} already admitted")
+        table = list(blocks)
+        for b in table:
+            if b not in self.refcount:
+                raise ValueError(f"adopting unmapped block {b}")
+            self.refcount[b] += 1
+        self.per_request[rid] = table
+        return table
+
+    def transfer(self, old_rid, new_rid) -> List[int]:
+        """Rename a block mapping (zero refcount churn) — the zero-copy
+        admission handoff: a finished prefill's blocks move from the
+        handoff handle to the decode rid without touching a single byte."""
+        if new_rid in self.per_request:
+            raise ValueError(f"rid {new_rid} already admitted")
+        if old_rid not in self.per_request:
+            raise KeyError(f"rid {old_rid} holds no blocks")
+        table = self.per_request.pop(old_rid)
+        self.per_request[new_rid] = table
         return table
 
     def extend(self, rid: int, old_tokens: int, new_tokens: int

@@ -42,7 +42,8 @@ from repro.core.proxy import (MetricsAggregator, OASConfig, OmniProxy,
 from repro.distributed.ctx import MeshCtx, local_mesh_ctx
 from repro.models import moe as moe_mod
 from repro.models.lm import LM
-from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
+                                  PrefillEngine)
 
 
 @dataclass
@@ -58,6 +59,7 @@ class ServerConfig:
                                       # ↓TPOT-biased (the paper's P/D knob)
     prefix_reuse: bool = True         # radix partial-prefix KV resume
     prefix_cache_cap: int = 32        # stored prefixes per prefill instance
+    prefix_cache_cap_bytes: Optional[int] = None   # byte cap (real sizes)
     kv_blocks: Optional[int] = None   # decode KVPool size override
     paged_kv: bool = True             # physically paged decode KV arenas
     kv_block_size: int = 16           # tokens per KV block
@@ -83,19 +85,36 @@ class Server:
         self.tables = self.lm.default_tables()
         self.proxy = OmniProxy(scfg.n_prefill, scfg.n_decode, scfg.oas)
         self.metrics = MetricsAggregator()
+        # one shared paged-KV runtime for every co-located engine: prefill
+        # writes chunk KV straight into its arenas, decode extends them, and
+        # admission hands over block tables — zero-copy. The default pool
+        # grants every decode slot max_len capacity plus one prompt of
+        # prefill headroom per prefill instance; prefix-store snapshots
+        # share the pool and are reclaimed (LRU) under pressure.
+        self.kv_arena = None
+        if scfg.paged_kv:
+            max_blocks = -(-scfg.max_len // scfg.kv_block_size)
+            n_blocks = scfg.kv_blocks if scfg.kv_blocks is not None else \
+                (scfg.n_decode * scfg.decode_slots + scfg.n_prefill) \
+                * max_blocks
+            self.kv_arena = KVArena.build(self.lm, n_blocks,
+                                          scfg.kv_block_size)
         self.prefills = [
             PrefillEngine(self.lm, self.params, self.tables, scfg.max_len,
                           chunk_tokens=scfg.chunk_tokens,
                           enable_chunked=scfg.chunked_prefill,
                           allow_partial_reuse=scfg.prefix_reuse,
                           cache_cap=scfg.prefix_cache_cap,
-                          tree=self.proxy.trees[i])
+                          cache_cap_bytes=scfg.prefix_cache_cap_bytes,
+                          tree=self.proxy.trees[i],
+                          arena=self.kv_arena)
             for i in range(scfg.n_prefill)]
         self.decodes = [DecodeEngine(self.lm, self.params, self.tables,
                                      scfg.decode_slots, scfg.max_len,
                                      kv_blocks=scfg.kv_blocks,
                                      paged=scfg.paged_kv,
-                                     block_size=scfg.kv_block_size)
+                                     block_size=scfg.kv_block_size,
+                                     arena=self.kv_arena)
                         for _ in range(scfg.n_decode)]
         # rid → (cache B=1, next_token, pos, cached_tokens, prompt, params)
         # awaiting admission (prompt drives prefix-block sharing in the
@@ -169,7 +188,9 @@ class Server:
         req = self.proxy.abort(rid, now)
         if req is None:
             return False
-        self._pending_kv.pop(rid, None)
+        kv = self._pending_kv.pop(rid, None)
+        if kv is not None:
+            self._release_handoff(kv[0])
         for eng in self.prefills:
             eng.abort(rid)
         for eng in self.decodes:
@@ -208,6 +229,15 @@ class Server:
                 yield out
 
     # ---- internals ---------------------------------------------------
+    def _release_handoff(self, cache) -> None:
+        """Free the arena blocks a zero-copy handoff still owns. Every
+        request exit path that drops a cache-bearing record before decode
+        admission (abort, early finish, stale re-dispatch result, drained
+        _pending_kv) MUST route through here — a missed release leaks
+        shared-arena blocks permanently."""
+        if isinstance(cache, BlockHandoff):
+            self.kv_arena.pool.release(cache.key)
+
     def _stop_tokens(self, req: Request) -> tuple:
         sp = req.sampling
         if sp is not None and sp.stop_token_ids:
@@ -272,7 +302,12 @@ class Server:
                     continue
                 items.append((r.rid,) + kv)
                 live.append(r)
+            t0 = eng.stats["kv_transfer_bytes"]
+            p0 = eng.stats["kv_transfer_bytes_padded"]
             granted = eng.admit_batch(items)
+            self.metrics.note_kv_transfer(
+                eng.stats["kv_transfer_bytes"] - t0,
+                eng.stats["kv_transfer_bytes_padded"] - p0)
             for req, item in zip(live, items):
                 if granted[req.rid]:
                     self.proxy.on_decode_start(req, tnow)
@@ -284,7 +319,11 @@ class Server:
         budget = self.scfg.prefill_tick_budget
         for iid, eng in enumerate(self.prefills):
             if not self.proxy.prefill[iid].healthy:
-                eng.queue.clear()      # died mid-queue: proxy re-dispatches
+                # died mid-queue: proxy re-dispatches; abort() also frees
+                # the tasks' pool blocks (a bare queue.clear would leak
+                # prefill-phase block reservations)
+                for t in list(eng.queue):
+                    eng.abort(t.rid)
                 continue
             if not eng.has_work():
                 continue
@@ -292,7 +331,9 @@ class Server:
                 req = self.proxy.inflight.get(rec.rid)
                 tnow = time.monotonic()
                 if req is None or req.prefill_instance != iid:
-                    continue           # stale result for a re-dispatched rid
+                    # stale result for a re-dispatched rid
+                    self._release_handoff(rec.cache)
+                    continue
                 self.proxy.on_prefill_done(req, tnow, batch_time=rec.elapsed_s)
                 # the first token materialized inside the engine round, not
                 # when this bookkeeping runs
@@ -300,7 +341,9 @@ class Server:
                 reason = self._note_token(req, rec.first_token)
                 if reason:
                     # stop token / max_tokens=1 at the FIRST token: retire
-                    # without ever admitting to decode
+                    # without ever admitting to decode (the never-admitted
+                    # handoff's arena blocks are released here)
+                    self._release_handoff(rec.cache)
                     self.proxy.on_early_finish(req, tnow)
                     self._record_finish(req, reason)
                 else:

@@ -1,0 +1,387 @@
+"""Paged prefill: chunk KV written straight into shared block arenas.
+
+Covers the prefill-side completion of the paging subsystem: greedy
+bit-equivalence of the paged path against the dense engines across chunk
+sizes × block sizes × layer classes, zero-copy admission handoff, store
+snapshots as refcounted block lists (with partial-tail copy-on-write),
+pool backpressure (defer instead of over-commit), abort hygiene, and the
+satellite accounting fixes (true-byte transfer metering, prefix-sized
+store entries, unified pad-bucket floor)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.configs.base import OmniAttnConfig
+from repro.distributed.ctx import local_mesh_ctx
+from repro.models import LM
+from repro.serving import (BlockHandoff, DecodeEngine, KVArena,
+                           PrefillEngine)
+
+
+@pytest.fixture(scope="module")
+def full_stack():
+    """Two full-attention layers (every KV block pool-managed)."""
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2)
+    lm = LM.build(cfg, mesh, pattern=[0, 0])
+    return cfg, lm, lm.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def mixed_stack():
+    """Full + sliding-window + sink+recent-compressed attention layers:
+    paged arenas for the full layers, dense per-task rings for the rest
+    (prefill_sparse so chunked/compressed prefill is exact)."""
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=4,
+        local_per_global=1, local_window=16, prefill_sparse=True,
+        omniattn=OmniAttnConfig(sink_tokens=8, recent_tokens=24))
+    lm = LM.build(cfg, mesh, pattern=[0, 0, 0, 1])
+    specs = lm.plan.all_specs()
+    assert any(s.window > 0 and not s.compressed for s in specs)
+    assert any(s.compressed for s in specs)
+    assert any(s.kind == "attn" and s.window == 0 and not s.compressed
+               for s in specs)
+    return cfg, lm, lm.init(jax.random.PRNGKey(1))
+
+
+def _greedy_ref(lm, params, prompt, n, max_len=96):
+    toks = jnp.asarray([list(prompt)], jnp.int32)
+    cache, logits, _ = lm.prefill(params, {"tokens": toks}, max_len=max_len)
+    out, pos = [], len(prompt)
+    for i in range(n):
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        if i == n - 1:
+            break
+        cache, logits, _ = lm.decode(params, cache, jnp.asarray([[nxt]]),
+                                     jnp.int32(pos))
+        pos += 1
+    return out
+
+
+def _drive(pe, de, prompts, hints, n_decode):
+    """start+step every prompt through prefill (with snapshot hints), admit
+    every handoff, decode n steps → {rid: [tokens]}."""
+    outs = {}
+    for rid, (p, hint) in enumerate(zip(prompts, hints)):
+        pe.start(rid, p, prefix_hint=hint)
+        recs = []
+        while len(recs) == 0:
+            recs = pe.step()
+        (rec,) = recs
+        assert rec.rid == rid
+        assert de.admit(rid, rec.cache, rec.first_token, rec.prompt_len,
+                        cached_tokens=rec.reused, prompt=p)
+        outs[rid] = [rec.first_token]
+    for _ in range(n_decode):
+        for rid, t in de.step().items():
+            outs[rid].append(t)
+    return outs
+
+
+@pytest.mark.parametrize("chunk", [8, 64])
+@pytest.mark.parametrize("block_size", [8, 16])
+@pytest.mark.parametrize("stack", ["full", "mixed"])
+def test_paged_vs_dense_prefill_equivalence(chunk, block_size, stack,
+                                            full_stack, mixed_stack):
+    """Greedy bit-equivalence: paged prefill (chunk KV into shared arenas,
+    zero-copy handoff, store snapshots as block lists) against the dense
+    engines, over shared-prefix prompts that exercise snapshot-at-boundary
+    AND store resume, across the chunk × block × layer-class matrix."""
+    cfg, lm, params = full_stack if stack == "full" else mixed_stack
+    rng = np.random.default_rng(7 + chunk + block_size)
+    base = tuple(rng.integers(0, cfg.vocab_size, 24))
+    prompts = [base + tuple(rng.integers(0, cfg.vocab_size, 9)),
+               base + tuple(rng.integers(0, cfg.vocab_size, 14)),
+               tuple(rng.integers(0, cfg.vocab_size, 11))]
+    hints = [24, 24, 0]
+    refs = [_greedy_ref(lm, params, p, 7) for p in prompts]
+
+    pe_d = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=chunk)
+    de_d = DecodeEngine(lm, params, None, n_slots=4, max_len=96, paged=False)
+    dense = _drive(pe_d, de_d, prompts, hints, 6)
+
+    arena = KVArena.build(lm, n_blocks=64, block_size=block_size)
+    pe_p = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=chunk,
+                         arena=arena)
+    de_p = DecodeEngine(lm, params, None, n_slots=4, max_len=96,
+                        block_size=block_size, arena=arena)
+    assert pe_p.paged
+    paged = _drive(pe_p, de_p, prompts, hints, 6)
+
+    for rid in range(len(prompts)):
+        assert paged[rid] == dense[rid] == refs[rid], f"request {rid}"
+    # the sharers resumed at the snapshot boundary, mapping its full blocks
+    assert pe_p.stats["prefix_hits"] >= 1
+    assert pe_p.stats["blocks_mapped"] >= 24 // block_size
+    # zero-copy handoff: no full-attention KV byte was copied at admission
+    assert de_p.stats["handoff_copy_bytes"] == 0
+    assert de_d.stats["handoff_copy_bytes"] > 0
+    arena.pool.check_invariants()
+
+
+def test_store_snapshot_blocks_and_tail_cow(full_stack):
+    """A paged store entry holds REFCOUNTED blocks (zero-copy snapshot); a
+    resume borrower maps the full prefix blocks and privately copies the
+    partial tail block, so the original's later appends never leak into
+    the borrower (and vice versa)."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(11)
+    base = tuple(rng.integers(0, cfg.vocab_size, 20))     # 2.5 blocks @ bs=8
+    p1 = base + tuple(rng.integers(0, cfg.vocab_size, 10))
+    p2 = base + tuple(rng.integers(0, cfg.vocab_size, 13))
+    ref2 = _greedy_ref(lm, params, p2, 6)
+
+    arena = KVArena.build(lm, n_blocks=48, block_size=8)
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=8,
+                       arena=arena)
+    de = DecodeEngine(lm, params, None, n_slots=4, max_len=96, arena=arena)
+    pe.start(0, p1, prefix_hint=20)
+    (r1,) = pe.step()
+    assert isinstance(r1.cache, BlockHandoff)
+    ent = pe.store.lookup_entry(base)
+    assert ent is not None and ent.blocks is not None
+    assert len(ent.blocks) == arena.pool.blocks_for(20)   # 3 (tail partial)
+    # snapshot blocks are the task's own blocks, refcounted — not copies
+    assert set(ent.blocks) <= set(r1.cache.blocks)
+    assert de.admit(0, r1.cache, r1.first_token, len(p1), prompt=p1)
+
+    pe.start(1, p2, prefix_hint=20)
+    (r2,) = pe.step()
+    assert pe.stats["prefix_hits"] == 1 and pe.stats["reused_tokens"] == 20
+    # borrower maps the 2 FULL prefix blocks, owns a private tail copy
+    assert r2.cache.blocks[:2] == ent.blocks[:2]
+    assert r2.cache.blocks[2] != ent.blocks[2]
+    for b in ent.blocks[:2]:
+        assert arena.pool.refcount[b] >= 3    # store + p1 + p2
+    assert de.admit(1, r2.cache, r2.first_token, len(p2), prompt=p2)
+    outs = {1: [r2.first_token]}
+    de.release(0)                             # original leaves mid-stream
+    while len(outs[1]) < len(ref2):
+        outs[1].append(de.step()[1])
+    assert outs[1] == ref2
+    arena.pool.check_invariants()
+
+
+def test_backpressure_defers_instead_of_failing(full_stack):
+    """Pool exhaustion must DEFER prefill (stats.defers, task stays queued)
+    rather than raising or over-committing; freed blocks let it finish."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(13)
+    p0 = tuple(rng.integers(0, cfg.vocab_size, 24))       # 3 blocks @ bs=8
+    p1 = tuple(rng.integers(0, cfg.vocab_size, 24))
+    arena = KVArena.build(lm, n_blocks=4, block_size=8)   # 32 tokens total
+    pe = PrefillEngine(lm, params, None, max_len=64, chunk_tokens=8,
+                      arena=arena)
+    pe.start(0, p0)
+    pe.start(1, p1)
+    recs = pe.step()
+    # p0 finished (its handoff + store snapshot pin 3 blocks); p1 cannot
+    # grow past its first block and defers
+    assert [r.rid for r in recs] == [0]
+    assert pe.stats["defers"] >= 1
+    assert any(t.rid == 1 for t in pe.queue)
+    assert pe.step() == []                    # still parked, still no error
+    arena.pool.check_invariants()
+    # consumer releases the handoff (as decode would at request finish) —
+    # the deferred task resumes and completes
+    arena.pool.release(recs[0].cache.key)
+    recs2 = pe.step()
+    assert [r.rid for r in recs2] == [1]
+    arena.pool.release(recs2[0].cache.key)
+    arena.pool.check_invariants()
+
+
+def test_resume_reclaim_cannot_free_entry_in_use(full_stack):
+    """Regression: when a resume's block allocation triggers store reclaim,
+    the LRU victim can be the very entry being resumed — its blocks must be
+    pinned for the duration, or the retry maps freshly freed ids as
+    'shared' and the pool hands the same block out twice (block both free
+    and mapped). The resume falls back to scratch prefill instead."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(29)
+    base = tuple(rng.integers(0, cfg.vocab_size, 20))     # 3 blocks @ bs=8
+    sharer = base + tuple(rng.integers(0, cfg.vocab_size, 8))
+    ref = _greedy_ref(lm, params, sharer, 4, max_len=64)
+    arena = KVArena.build(lm, n_blocks=6, block_size=8)
+    pe = PrefillEngine(lm, params, None, max_len=64, chunk_tokens=8,
+                       arena=arena)
+    pe.start(0, base)
+    (r0,) = pe.step()
+    arena.pool.release(r0.cache.key)          # only the store entry remains
+    assert pe.store.lookup_entry(base) is not None
+    blocker = arena.pool.allocate("blocker", 24)          # free_blocks → 0
+    assert blocker is not None and arena.pool.free_blocks == 0
+    pe.start(1, sharer)
+    assert pe.step() == []                    # resume + scratch both defer
+    arena.pool.check_invariants()             # ← corrupted before the fix
+    # the entry was sacrificed to reclaim, but nothing was double-mapped
+    assert pe.store.lookup_entry(base) is None
+    arena.pool.release("blocker")
+    recs = []
+    while not recs:
+        recs = pe.step()
+    assert [r.rid for r in recs] == [1]
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=64, arena=arena)
+    assert de.admit(1, recs[0].cache, recs[0].first_token, len(sharer))
+    outs = [recs[0].first_token]
+    for _ in range(3):
+        outs.append(de.step()[1])
+    assert outs == ref
+    arena.pool.check_invariants()
+
+
+def test_abort_paged_prefill_releases_blocks(full_stack):
+    """Abort mid-chunked-prefill and of a superseded task must release
+    every prefill-phase block reservation (zero leaks)."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(17)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 30))
+    arena = KVArena.build(lm, n_blocks=32, block_size=8)
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=8,
+                       arena=arena)
+    pe.start(0, prompt)
+    assert pe.step(token_budget=8) == []      # one chunk: task half done
+    assert ("prefill", 0) in arena.pool
+    assert pe.abort(0)
+    assert ("prefill", 0) not in arena.pool
+    assert arena.pool.free_blocks == arena.pool.n_blocks
+    arena.pool.check_invariants()
+
+    # re-dispatch supersede: the old task's blocks must not leak either
+    pe.start(1, prompt)
+    pe.step(token_budget=8)
+    pe.start(1, prompt)                       # instance fail/recover path
+    recs = []
+    while not recs:
+        recs = pe.step()
+    assert [r.rid for r in recs] == [1]
+    held = [k for k in arena.pool.per_request
+            if isinstance(k, tuple) and k[0] == "prefill"]
+    assert held == []
+    arena.pool.check_invariants()
+
+
+def test_pending_handoff_abort_releases_blocks(full_stack):
+    """A BlockHandoff parked outside the engines (the server's _pending_kv)
+    owns its blocks under the handoff key; releasing it returns every
+    non-store block to the pool."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(19)
+    arena = KVArena.build(lm, n_blocks=32, block_size=8)
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=8,
+                       arena=arena)
+    pe.start(0, tuple(rng.integers(0, cfg.vocab_size, 22)))
+    (rec,) = pe.step()
+    hb = rec.cache
+    assert isinstance(hb, BlockHandoff) and hb.key in arena.pool
+    arena.pool.release(hb.key)                # what Server.abort does
+    assert hb.key not in arena.pool
+    held = {k for k in arena.pool.per_request
+            if not (isinstance(k, tuple) and k[0] == "store")}
+    assert not held
+    arena.pool.check_invariants()
+
+
+def test_prefill_peak_blocks_proportional_to_prompt(full_stack):
+    """The paged engine pins blocks ∝ prompt length; the dense engine pins
+    blocks_for(max_len) per live task regardless (the over-commit the
+    tentpole removes) — the bench column's contrast, asserted."""
+    cfg, lm, params = full_stack
+    rng = np.random.default_rng(23)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 16))
+    arena = KVArena.build(lm, n_blocks=64, block_size=8)
+    pe_p = PrefillEngine(lm, params, None, max_len=256, chunk_tokens=8,
+                         arena=arena)
+    pe_p.start(0, prompt)
+    (rec,) = pe_p.step()
+    arena.pool.release(rec.cache.key)
+    pe_d = PrefillEngine(lm, params, None, max_len=256, chunk_tokens=8,
+                         block_size=8)
+    pe_d.process(prompt)
+    assert pe_p.stats["prefill_kv_peak_blocks"] == \
+        arena.pool.blocks_for(len(prompt))                # 2 blocks
+    assert pe_d.stats["prefill_kv_peak_blocks"] == \
+        arena.pool.blocks_for(256)                        # 32 blocks
+    assert pe_p.stats["prefill_kv_peak_blocks"] < \
+        pe_d.stats["prefill_kv_peak_blocks"]
+
+
+def test_kv_transfer_true_vs_padded_metering(full_stack):
+    """Satellite: the PD transfer meter charges TRUE resident bytes, with
+    the old padded figure reported alongside — a short prompt in a large
+    dense cache no longer meters the padding."""
+    cfg, lm, params = full_stack
+    pe = PrefillEngine(lm, params, None, max_len=96, enable_chunked=False)
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96, paged=False)
+    prompt = (5, 6, 7, 8, 9, 10, 11, 12)                  # 8 of 96 tokens
+    cache, first, _ = pe.process(prompt)
+    assert de.admit(0, cache, first, len(prompt))
+    true_b = de.stats["kv_transfer_bytes"]
+    padded_b = de.stats["kv_transfer_bytes_padded"]
+    assert padded_b == de._dense_kv_nbytes
+    # all-full-attention stack: true bytes are the 8 resident tokens' worth
+    # (plus the bounded non-KV leaves — here just the position scalar) —
+    # ~1/12th of the padded figure, not 1×
+    bounded = padded_b - de._full_tok_nbytes * 96
+    assert true_b == de._full_tok_nbytes * len(prompt) + bounded
+    assert true_b * 10 < padded_b
+
+
+def test_run_full_pad_bucket_floor(full_stack):
+    """Satellite: the unchunked path buckets with the same lo=8 floor as
+    the chunked path — a 9-token prompt pads to 16, not 32."""
+    cfg, lm, params = full_stack
+    pe = PrefillEngine(lm, params, None, max_len=96, enable_chunked=False)
+    shapes = []
+    orig = pe._fn
+    pe._fn = lambda p, toks, tl, tb: (shapes.append(toks.shape),
+                                      orig(p, toks, tl, tb))[1]
+    pe.process(tuple(range(1, 10)))
+    assert shapes == [(1, 16)]
+
+
+def test_dense_store_entries_prefix_sized(full_stack):
+    """Satellite: dense store entries hold prefix-length KV and weigh their
+    REAL bytes — LRU under a byte cap can tell a short prefix from a long
+    one (uniform max_len sizing could not)."""
+    cfg, lm, params = full_stack
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    short = tuple(np.random.default_rng(3).integers(0, cfg.vocab_size, 9))
+    long_ = tuple(np.random.default_rng(4).integers(0, cfg.vocab_size, 64))
+    pe.process(short)
+    pe.process(long_)
+    ents = {e.n: e for e in pe.store.entries.values()}
+    assert set(ents) == {9, 64}
+    assert 0 < ents[9].nbytes < ents[64].nbytes
+    # full-attn KV is trimmed to the pow2 bucket of the prefix, so the
+    # short entry weighs ~16/64ths of the long one, not 96/96
+    assert ents[9].nbytes * 3 < ents[64].nbytes
+    # resume from a trimmed entry still reproduces the reference stream
+    ref = _greedy_ref(lm, params, long_ + (7, 8), 4)
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96, paged=False)
+    cache, first, _ = pe.process(long_ + (7, 8))
+    assert pe.stats["prefix_hits"] == 1
+    assert de.admit(0, cache, first, len(long_) + 2)
+    outs = [first]
+    for _ in range(3):
+        outs.append(de.step()[0])
+    assert outs == ref
+
+
+def test_store_byte_cap_evicts_lru(full_stack):
+    """capacity_bytes caps the store by real resident bytes."""
+    cfg, lm, params = full_stack
+    pe = PrefillEngine(lm, params, None, max_len=96, chunk_tokens=16)
+    pe.process(tuple(range(30, 94)))          # 64-token entry
+    big = next(iter(pe.store.entries.values())).nbytes
+    pe.store.capacity_bytes = int(big * 1.5)
+    pe.process(tuple(range(200, 264)))        # second big entry → evict LRU
+    assert len(pe.store.entries) == 1
+    assert next(iter(pe.store.entries.values())).n == 64
+    assert pe.store.size_bytes <= pe.store.capacity_bytes
