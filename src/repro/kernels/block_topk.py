@@ -1,0 +1,102 @@
+"""Quest-style per-block upper-bound scoring for online KV sparsity (TPU
+Pallas).
+
+The scoring half of OmniAttn's dynamic sparsity: every resident KV block of
+a paged full-attention layer carries per-kv-head channel bounds of its keys
+(``kmin``/``kmax`` ``[N, K, h]`` side arrays maintained next to the
+``[N, K, bs, h]`` arenas by the same jits that write KV). For a decode query
+``q`` the score of block ``n`` is the channel-wise upper bound on any key
+dot-product inside the block,
+
+    score(n) = max_{k-head, q-head} Σ_c max(q_c · kmin[n]_c, q_c · kmax[n]_c)
+
+— an upper bound on ``max_t q · key_t`` for every key resident in the block
+(unwritten slots hold zeros, which only widen the [kmin, kmax] interval, so
+the bound stays valid for partially filled blocks). The per-slot block table
+is a scalar-prefetch operand so the BlockSpec index map DMAs exactly the
+summaries of tabled blocks — one [K, h] tile per block, a ``1/block_size``
+fraction of the KV bytes the full attention read would move.
+
+Blocks whose logical slot range starts at or beyond ``lens[b]`` (the
+resident occupancy, same convention as ``paged_decode``) score ``NEG_INF``
+so downstream top-k selection never picks a non-resident (null-aliased)
+table entry.
+
+Grid: (B, nb) with the block dimension sequential; scores accumulate in a
+VMEM scratch row written out on the last block step. Selection itself
+(top-k + forced sink/recent keeps + table compaction) is cheap [B, nb]
+index arithmetic and stays in jnp — see
+``models/attention.py::select_kv_blocks``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax>=0.7 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, lens_ref, q_ref, kmin_ref, kmax_ref, o_ref, s_ref, *,
+            block_size: int, n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_ref[...] = jnp.full_like(s_ref, NEG_INF)
+
+    # resident blocks only: block j covers logical slots [j*bs, (j+1)*bs);
+    # entries past the occupancy alias the null block and must never outrank
+    # a real one
+    @pl.when(j * block_size < lens_ref[b])
+    def _score():
+        q = q_ref[...].astype(jnp.float32)              # [K, G, h]
+        lo = kmin_ref[...].astype(jnp.float32)          # [K, h]
+        hi = kmax_ref[...].astype(jnp.float32)
+        ub = jnp.maximum(q * lo[:, None, :], q * hi[:, None, :]).sum(-1)
+        s_ref[j] = jnp.max(ub)                          # max over (K, G)
+
+    @pl.when(j == n_blocks - 1)
+    def _final():
+        o_ref[...] = s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def block_topk_scores(q, kmin, kmax, tables, lens, *, block_size: int,
+                      interpret: bool = False):
+    """q [B, K, G, h]; kmin/kmax [N, K, h]; tables [B, nb]; lens [B] resident
+    logical slots (block j resident iff j*block_size < lens[b]) →
+    scores [B, nb] float32."""
+    B, K, G, h = q.shape
+    nb = tables.shape[1]
+    kernel = functools.partial(_kernel, block_size=block_size, n_blocks=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # tables, lens
+        grid=(B, nb),
+        in_specs=[
+            pl.BlockSpec((None, K, G, h),
+                         lambda b, j, tbl, lens: (b, 0, 0, 0)),
+            pl.BlockSpec((None, K, h),
+                         lambda b, j, tbl, lens: (tbl[b, j], 0, 0)),
+            pl.BlockSpec((None, K, h),
+                         lambda b, j, tbl, lens: (tbl[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, nb), lambda b, j, tbl, lens: (b, 0)),
+        scratch_shapes=[pltpu.VMEM((nb,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, nb), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lens.astype(jnp.int32), q, kmin, kmax)

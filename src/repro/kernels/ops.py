@@ -6,6 +6,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_topk import block_topk_scores
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode import paged_decode
@@ -57,6 +58,17 @@ def attention_paged_decode_op(q, k_pages, v_pages, tables, lens):
     o = paged_decode(q.reshape(B, K, G, h), k_pages, v_pages, tables, lens,
                      interpret=_interpret())
     return o.reshape(B, H, h)
+
+
+def block_topk_scores_op(q, kmin, kmax, tables, lens, *, block_size):
+    """q [B,H,h]; kmin/kmax [N,K,h] per-block key channel bounds; tables
+    [B,nb]; lens [B] resident logical slots → upper-bound block scores
+    [B,nb] f32 (NEG_INF past the residency)."""
+    B, H, h = q.shape
+    K = kmin.shape[1]
+    G = H // K
+    return block_topk_scores(q.reshape(B, K, G, h), kmin, kmax, tables, lens,
+                             block_size=block_size, interpret=_interpret())
 
 
 def attention_paged_prefill_op(q, k_new, v_new, k_pages, v_pages, tables,

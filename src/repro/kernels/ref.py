@@ -91,6 +91,24 @@ def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
     return jnp.einsum("bkrt,bkth->bkrh", p, v_all).astype(q.dtype)
 
 
+def block_topk_scores_ref(q, kmin, kmax, tables, lens, *, block_size):
+    """q [B,K,G,h]; kmin/kmax [N,K,h] per-block key channel bounds;
+    tables [B,nb]; lens [B] resident logical slots → scores [B,nb] f32.
+    Quest-style upper bound: score(b,j) = max over (K,G) heads of
+    Σ_c max(q_c·kmin_c, q_c·kmax_c) for the tabled block; NEG_INF once the
+    block's logical slot range starts at or past lens."""
+    B, K, G, h = q.shape
+    nb = tables.shape[1]
+    lo = kmin[tables].astype(jnp.float32)                # [B, nb, K, h]
+    hi = kmax[tables].astype(jnp.float32)
+    qg = q.astype(jnp.float32)[:, None]                  # [B, 1, K, G, h]
+    ub = jnp.maximum(qg * lo[:, :, :, None, :],
+                     qg * hi[:, :, :, None, :]).sum(-1)  # [B, nb, K, G]
+    s = ub.max(axis=(2, 3))
+    resident = (jnp.arange(nb)[None] * block_size) < lens[:, None]
+    return jnp.where(resident, s, NEG_INF)
+
+
 def moe_gmm_ref(x, w, n_valid):
     """x [s,C,D] @ w [s,D,F] with valid-row masking → [s,C,F]."""
     C = x.shape[1]

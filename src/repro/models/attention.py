@@ -296,6 +296,136 @@ def paged_prefill_write(k_pages, v_pages, k_new, v_new, tables, off,
     return k_pages, v_pages
 
 
+def update_block_summaries(kmin, kmax, kmean, k_pages, blocks, *,
+                           stacked=False):
+    """Recompute the per-block key summaries for the (just-written) blocks.
+
+    kmin/kmax/kmean [N, K, h] float32 side arrays of a [N, K, bs, h] key
+    arena (with a leading n_rep axis on both when `stacked` — the scan-
+    stacked period arenas); blocks [M] physical block ids — duplicates are
+    fine (every duplicate recomputes the same value from the same updated
+    arena content, so scatter order does not matter). Summaries are exact
+    whole-block reductions: unwritten slots hold zeros, which only widen
+    the [kmin, kmax] interval, so the Quest upper bound stays valid for
+    partially filled blocks (and the null block 0, a frequent redirect
+    target, is harmlessly re-summarized). This is the ONLY reduction
+    implementing the summary semantics — every write site (prefill chunk,
+    decode append, dense-scatter admission) must go through it so the
+    zero-stale-summary invariant cannot diverge between paths.
+    """
+    blocks = jnp.asarray(blocks, jnp.int32)
+    if stacked:
+        k = k_pages[:, blocks].astype(jnp.float32)       # [R, M, K, bs, h]
+        ix = (slice(None), blocks)
+    else:
+        k = k_pages[blocks].astype(jnp.float32)          # [M, K, bs, h]
+        ix = blocks
+    return (kmin.at[ix].set(k.min(axis=-2)),
+            kmax.at[ix].set(k.max(axis=-2)),
+            kmean.at[ix].set(k.mean(axis=-2)))
+
+
+def block_topk_scores(q, kmin, kmax, tables, lens, *, block_size):
+    """Quest-style upper-bound block scores (pure-jnp path).
+
+    q [B, H, h]; kmin/kmax [N, K, h]; tables [B, nb] physical block ids;
+    lens [B] resident logical slots → scores [B, nb] f32: the channel-wise
+    upper bound on any key dot-product inside the block, maxed over (kv
+    head, query head); NEG_INF for blocks whose logical slot range starts
+    at or past lens (their table entries alias the null block). The Pallas
+    kernel (kernels/block_topk.py) DMAs only the tabled [K, h] summary
+    tiles — this fallback pays the full gather.
+    """
+    B, H, h = q.shape
+    K = kmin.shape[1]
+    G = H // K
+    nb = tables.shape[1]
+    lo = kmin[tables].astype(jnp.float32)                # [B, nb, K, h]
+    hi = kmax[tables].astype(jnp.float32)
+    qg = q.reshape(B, K, G, h).astype(jnp.float32)[:, None]
+    ub = jnp.maximum(qg * lo[:, :, :, None, :],
+                     qg * hi[:, :, :, None, :]).sum(-1)  # [B, nb, K, G]
+    s = ub.max(axis=(2, 3))
+    resident = (jnp.arange(nb)[None] * block_size) < lens[:, None]
+    return jnp.where(resident, s, NEG_INF)
+
+
+def select_kv_blocks(scores, tables, lens, *, block_size, k_static,
+                     frac=0.0, sink_blocks=1, recent_blocks=2):
+    """Per-slot top-k block selection → a COMPACTED block table.
+
+    scores [B, nb] upper-bound block scores (NEG_INF past residency);
+    tables [B, nb]; lens [B] resident logical slots. Selects up to
+    `k_static` resident blocks per slot — sink blocks (logical j <
+    sink_blocks) and the most recent `recent_blocks` (always including the
+    partial tail) are force-kept, the rest ranked by score. With `frac > 0`
+    the per-slot budget is ceil(frac · resident_blocks) (floored at the
+    keeps), so the budget tracks each slot's own context; `frac == 0` uses
+    the absolute `k_static`. Budgets ≥ the resident count degrade to exact
+    attention: every resident block is kept in logical order and the
+    output equals the input table bit-for-bit.
+
+    Selected blocks land in the compacted table in LOGICAL ORDER (ascending
+    sort), so all entries but the last are full blocks and the tail keeps
+    its partial fill — `new_lens = (m-1)·bs + tail_fill` makes the
+    unmodified ``paged_decode`` occupancy masking correct on the compacted
+    view. Unused entries point at the null block 0.
+
+    Returns (new_tables [B, k_static], new_lens [B], m [B] selected block
+    counts, selected [B, nb] bool mask over the ORIGINAL logical blocks).
+    """
+    B, nb = tables.shape
+    lens = jnp.asarray(lens, jnp.int32)
+    n_res = (lens + block_size - 1) // block_size        # [B] ≥ 1 in decode
+    j = jnp.arange(nb)
+    resident = j[None] < n_res[:, None]
+    keep = resident & ((j[None] < sink_blocks)
+                       | (j[None] >= (n_res - recent_blocks)[:, None]))
+    adj = jnp.where(keep, jnp.inf, jnp.where(resident, scores, -jnp.inf))
+    _, idx = jax.lax.top_k(adj, k_static)                # [B, k_static]
+    if frac > 0:
+        k_b = jnp.ceil(frac * n_res).astype(jnp.int32)
+        k_b = jnp.maximum(k_b, sink_blocks + recent_blocks)
+    else:
+        k_b = jnp.full_like(n_res, k_static)
+    k_b = jnp.minimum(k_b, n_res)                        # degrade: keep all
+    sel = (jnp.arange(k_static)[None] < k_b[:, None]) \
+        & jnp.take_along_axis(resident, idx, 1)
+    sidx = jnp.sort(jnp.where(sel, idx, nb), axis=1)     # ascending, pad→nb
+    gat = jnp.take_along_axis(tables, jnp.minimum(sidx, nb - 1), 1)
+    new_tables = jnp.where(sidx < nb, gat, 0)
+    m = sel.sum(axis=1)
+    tail_fill = lens - (n_res - 1) * block_size
+    new_lens = jnp.maximum(m - 1, 0) * block_size + tail_fill
+    selected = jnp.zeros((B, nb), bool) \
+        .at[jnp.arange(B)[:, None], idx].set(sel)        # idx rows distinct
+    return new_tables, new_lens, m, selected
+
+
+def selected_attention_mass(q, k_pages, tables, lens, selected):
+    """Exact attention mass the selected blocks capture, per slot.
+
+    q [B, H, h]; k_pages [N, K, bs, h]; tables/selected [B, nb] over the
+    ORIGINAL logical blocks; lens [B] resident slots. Computes the full
+    resident softmax (the dense-fallback gather — this is a diagnostics
+    pass, gated by `omniattn.topk_measure_mass`) and sums the probability
+    landing in selected blocks, averaged over heads → [B] in [0, 1].
+    """
+    B, H, h = q.shape
+    K, bs = k_pages.shape[1], k_pages.shape[2]
+    G = H // K
+    nb = tables.shape[1]
+    k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4) \
+        .reshape(B, nb * bs, K, h).astype(jnp.float32)
+    qg = q.reshape(B, K, G, h).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_lin) * (h ** -0.5)
+    valid = jnp.arange(nb * bs)[None] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    slot_sel = jnp.repeat(selected, bs, axis=1)          # [B, nb*bs]
+    return (p * slot_sel[:, None, None, :]).sum(-1).mean(axis=(1, 2))
+
+
 def paged_cache_write(k_pages, v_pages, k_new, v_new, blk, off):
     """Write one token's K/V per sequence into arena blocks.
 

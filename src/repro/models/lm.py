@@ -204,11 +204,14 @@ class LM:
     def decode(self, params, cache, token, positions, tables=None,
                token_mask=None, block_tables=None):
         """token [B,1] int32; positions scalar or [B,1]. → (cache, logits [B,V]).
-        token_mask [B] (optional) marks live rows — it only weights the MoE
-        activation counts (inactive slots in a slot-dense batch would
-        otherwise pollute the placement signal). block_tables [B, nb]
-        (optional) selects the physically paged decode path: attention cache
-        leaves are block arenas and reads gather only resident blocks."""
+        token_mask [B] (optional) marks live rows — it weights the MoE
+        activation counts AND the online-sparsity stats (inactive slots in
+        a slot-dense batch would otherwise pollute both signals).
+        block_tables [B, nb] (optional) selects the physically paged decode
+        path: attention cache leaves are block arenas and reads gather only
+        resident blocks — and, with cfg.omniattn.topk_* set, only the
+        query-selected top-k of them (aux carries the per-layer
+        period_sparsity/rem_sparsity stat vectors; see serving/sparsity.py)."""
         cfg = self.cfg
         B = token.shape[0]
         bp = self.mesh.batch_part(B)

@@ -11,6 +11,7 @@ Caches mirror the same structure plus a scalar position.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -304,9 +305,18 @@ def _drop_entries(cfg, plan, tree, drop_full: bool):
 
 def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
     """Allocate only the shared full-attention arenas:
-    {"period": (entry|None, ...), "rem": (...)} with entry {"k","v"} of
-    shape [n_rep?, n_arena_blocks, K, bs, h] (`n_arena_blocks` includes the
-    reserved null block 0)."""
+    {"period": (entry|None, ...), "rem": (...)} with entry
+    {"k","v": [n_rep?, n_arena_blocks, K, bs, h],
+     "kmin","kmax","kmean": [n_rep?, n_arena_blocks, K, h] float32}
+    (`n_arena_blocks` includes the reserved null block 0). The summary
+    leaves are the per-block key metadata plane for online top-k block
+    selection, maintained by the same donated jits that write KV — every
+    arena K write recomputes the touched blocks' summaries, so a quiescent
+    arena never holds a stale summary (KVArena.check_summaries asserts
+    exactly that). kmin/kmax feed the Quest-style upper-bound score
+    (kernels/block_topk.py); kmean is the block-center estimate (the
+    mean-score ablation in bench_accuracy and diagnostics — not on the
+    decode scoring path)."""
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     K, h = cfg.n_kv_heads, cfg.head_dim
 
@@ -314,12 +324,33 @@ def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
         if not full_attn_layer(cfg, spec):
             return None
         shp = (n_arena_blocks, K, block_size, h)
+        sshp = (n_arena_blocks, K, h)
         if stacked:
             shp = (plan.n_rep,) + shp
-        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+            sshp = (plan.n_rep,) + sshp
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+                "kmin": jnp.zeros(sshp, jnp.float32),
+                "kmax": jnp.zeros(sshp, jnp.float32),
+                "kmean": jnp.zeros(sshp, jnp.float32)}
 
     return {"period": tuple(one(s, True) for s in plan.period),
             "rem": tuple(one(s, False) for s in plan.rem)}
+
+
+def topk_block_budget(oa, nb: int) -> Optional[int]:
+    """Static (per-trace) top-k block budget against a width-`nb` block
+    table, or None when online sparsity is off (both budget knobs 0).
+    Absolute `topk_blocks` wins over `topk_frac` (which resolves per slot
+    in-trace against the RESIDENT block count — this static figure is its
+    ceiling, ceil(frac·nb)). Floored at the forced keeps and capped at nb;
+    a budget == nb means the (bucketed) table already fits the budget and
+    the caller skips selection entirely — exact attention."""
+    if oa.topk_blocks <= 0 and oa.topk_frac <= 0:
+        return None
+    k = oa.topk_blocks if oa.topk_blocks > 0 else \
+        int(math.ceil(oa.topk_frac * nb))
+    k = max(k, max(oa.topk_sink_blocks, 0) + max(oa.topk_recent_blocks, 1), 1)
+    return min(k, nb)
 
 
 def alloc_prefill_private_cache(cfg, mesh, plan, max_len, dtype=None):
@@ -397,7 +428,13 @@ def regroup_params(params: dict, plan_from: StackPlan, plan_to: StackPlan) -> di
 # Layer application
 def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec,
                   mode: str, positions, cache, max_len: int, batch_part,
-                  true_len=None, attend_limit: int = 0, block_tables=None):
+                  true_len=None, attend_limit: int = 0, block_tables=None,
+                  token_mask=None):
+    """→ (x, new_cache | None, sparsity_aux | None). sparsity_aux is a [4]
+    f32 vector [blocks_scored, blocks_attended, mass_sum, mass_n] emitted
+    by paged-decode full-attention layers when online top-k selection is
+    configured (cfg.omniattn.topk_*), weighted by `token_mask` (live
+    slots)."""
     B = x.shape[0]
     H, K, h = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     cd = jnp.dtype(cfg.compute_dtype)
@@ -420,6 +457,7 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
 
     use_pallas = cfg.use_pallas and mesh.tp == 1
     new_cache = None
+    sp_aux = None
     if (mode == "prefill" and cache is not None and block_tables is not None
             and not (sink or recent)):
         # paged chunked prefill (B=1 task): the prompt's resident history
@@ -442,6 +480,20 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                                               block_tables, pos0, cl)
         y = out.reshape(B, S, H * h)
         new_cache = {"k": kc, "v": vc}
+        if "kmin" in cache:
+            # block-summary metadata plane: the chunk's writes touched the
+            # blocks its token positions map to (padded tail rows alias the
+            # null block, whose re-summary is harmless) — recompute those
+            # blocks' summaries from the updated arena in the same jit
+            bs_a = cache["k"].shape[-2]
+            nb_t = block_tables.shape[1]
+            ppos = pos0 + jnp.arange(S)
+            wblk = jnp.where(jnp.arange(S) < jnp.asarray(cl, jnp.int32),
+                             block_tables[0, jnp.clip(ppos // bs_a, 0,
+                                                      nb_t - 1)], 0)
+            kmn, kmx, kme = attn_mod.update_block_summaries(
+                cache["kmin"], cache["kmax"], cache["kmean"], kc, wblk)
+            new_cache.update(kmin=kmn, kmax=kmx, kmean=kme)
     elif mode == "prefill" and cache is not None:
         # continuation chunk (chunked prefill / radix prefix-KV resume):
         # attend resident cache tokens + causal in-chunk keys, then scatter
@@ -488,13 +540,57 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
             lens = jnp.minimum(t + 1, nb * bs)
         kc, vc = attn_mod.paged_cache_write(cache["k"], cache["v"],
                                             k[:, 0], v[:, 0], blk, off)
+        new_cache = {"k": kc, "v": vc}
+        if not (sink or recent) and "kmin" in cache:
+            # summaries ride the same write: the appended token lands in
+            # `blk` (freed slots alias the null block) — recompute those
+            # blocks BEFORE scoring so the tail bound covers the new key
+            kmn, kmx, kme = attn_mod.update_block_summaries(
+                cache["kmin"], cache["kmax"], cache["kmean"], kc, blk)
+            new_cache.update(kmin=kmn, kmax=kmx, kmean=kme)
+            oa = cfg.omniattn
+            k_static = topk_block_budget(oa, tbl.shape[1])
+            if k_static is not None:
+                act = (token_mask.astype(jnp.float32) if token_mask
+                       is not None else jnp.ones((B,), jnp.float32))
+                n_res = (lens + bs - 1) // bs
+                scored = (act * n_res).sum()
+                if k_static < tbl.shape[1]:
+                    # online top-k: score resident blocks with the Quest
+                    # upper bound and attend a compacted table — blocks
+                    # outside the budget are never gathered downstream
+                    if use_pallas:
+                        from repro.kernels import ops as kops
+                        scores = kops.block_topk_scores_op(
+                            q[:, 0], kmn, kmx, tbl, lens, block_size=bs)
+                    else:
+                        scores = attn_mod.block_topk_scores(
+                            q[:, 0], kmn, kmx, tbl, lens, block_size=bs)
+                    tbl_s, lens_s, m, selected = attn_mod.select_kv_blocks(
+                        scores, tbl, lens, block_size=bs, k_static=k_static,
+                        frac=0.0 if oa.topk_blocks > 0 else oa.topk_frac,
+                        sink_blocks=max(oa.topk_sink_blocks, 0),
+                        recent_blocks=max(oa.topk_recent_blocks, 1))
+                    if oa.topk_measure_mass:
+                        mass = attn_mod.selected_attention_mass(
+                            q[:, 0], kc, tbl, lens, selected)
+                        mass_sum, mass_n = (act * mass).sum(), act.sum()
+                    else:
+                        mass_sum = mass_n = jnp.float32(0)
+                    sp_aux = jnp.stack([scored, (act * m).sum(),
+                                        mass_sum, mass_n])
+                    tbl, lens = tbl_s, lens_s
+                else:
+                    # budget covers the whole (bucketed) table: exact
+                    # attention; still report so the stats stay comparable
+                    mn = act.sum() if oa.topk_measure_mass else jnp.float32(0)
+                    sp_aux = jnp.stack([scored, scored, mn, mn])
         if use_pallas:
             from repro.kernels import ops as kops
             out = kops.attention_paged_decode_op(q[:, 0], kc, vc, tbl, lens)
         else:
             out = attn_mod.paged_decode_attention(q[:, 0], kc, vc, tbl, lens)
         y = out.reshape(B, 1, H * h)
-        new_cache = {"k": kc, "v": vc}
     elif mode == "decode":
         pos = jnp.asarray(positions)
         t = pos[:, 0] if pos.ndim == 2 else (pos[0] if pos.ndim == 1 else pos)
@@ -553,7 +649,7 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                 vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
             new_cache = {"k": kc, "v": vc}
     y = (y @ p["wo"]).astype(x.dtype)
-    return x + y, new_cache
+    return x + y, new_cache, sp_aux
 
 
 def mamba_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, mode: str,
@@ -652,19 +748,22 @@ def ffn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpec
 def apply_layer(cfg, mesh, spec: LayerSpec, p: dict, x, *, mode, positions,
                 cache, max_len, batch_part, true_len=None, attend_limit=0,
                 token_mask=None, block_tables=None):
+    sp = None
     if spec.kind == "attn":
-        x, nc = attn_sublayer(cfg, mesh, p, x, spec=spec, mode=mode,
-                              positions=positions, cache=cache, max_len=max_len,
-                              batch_part=batch_part, true_len=true_len,
-                              attend_limit=attend_limit,
-                              block_tables=block_tables)
+        x, nc, sp = attn_sublayer(cfg, mesh, p, x, spec=spec, mode=mode,
+                                  positions=positions, cache=cache,
+                                  max_len=max_len, batch_part=batch_part,
+                                  true_len=true_len,
+                                  attend_limit=attend_limit,
+                                  block_tables=block_tables,
+                                  token_mask=token_mask)
     else:
         x, nc = mamba_sublayer(cfg, mesh, p, x, mode=mode, cache=cache,
                                batch_part=batch_part, true_len=true_len)
     x, counts = ffn_sublayer(cfg, mesh, p, x, spec=spec, batch_part=batch_part,
                              token_mask=token_mask)
     x = mesh.constrain(x, P(batch_part, None, None))
-    return x, nc, counts
+    return x, nc, counts, sp
 
 
 # ======================================================================
@@ -692,20 +791,24 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
         h = carry
         p_slices = xs[0]
         c_slices = xs[1] if has_cache else tuple(None for _ in plan.period)
-        new_cs, counts = [], []
+        new_cs, counts, sps = [], [], []
         for i, spec in enumerate(plan.period):
-            h, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(p_slices[i]), h,
-                                     mode=mode, positions=positions,
-                                     cache=c_slices[i], max_len=max_len,
-                                     batch_part=batch_part, true_len=true_len,
-                                     attend_limit=attend_limit,
-                                     token_mask=token_mask,
-                                     block_tables=block_tables)
+            h, nc, cnt, sp = apply_layer(cfg, mesh, spec,
+                                         with_tables(p_slices[i]), h,
+                                         mode=mode, positions=positions,
+                                         cache=c_slices[i], max_len=max_len,
+                                         batch_part=batch_part,
+                                         true_len=true_len,
+                                         attend_limit=attend_limit,
+                                         token_mask=token_mask,
+                                         block_tables=block_tables)
             if nc is not None:
                 new_cs.append(nc)
             if cnt is not None:
                 counts.append(cnt)
-        return h, (tuple(new_cs), tuple(counts))
+            if sp is not None:
+                sps.append(sp)
+        return h, (tuple(new_cs), tuple(counts), tuple(sps))
 
     if cfg.remat and mode == "train":
         policy = (jax.checkpoint_policies.dots_saveable
@@ -715,29 +818,38 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
 
     xs = (params["period"], period_caches) if has_cache else (params["period"],)
     if plan.n_rep > 0 and plan.period:
-        x, (new_period_caches, period_counts) = jax.lax.scan(body, x, xs)
+        x, (new_period_caches, period_counts, period_sparsity) = \
+            jax.lax.scan(body, x, xs)
     else:
-        new_period_caches, period_counts = (), ()
+        new_period_caches, period_counts, period_sparsity = (), (), ()
 
-    new_rem_caches, rem_counts = [], []
+    new_rem_caches, rem_counts, rem_sparsity = [], [], []
     rem_caches = caches["rem"] if has_cache else tuple(None for _ in plan.rem)
     for i, spec in enumerate(plan.rem):
-        x, nc, cnt = apply_layer(cfg, mesh, spec, with_tables(params["rem"][i]), x,
-                                 mode=mode, positions=positions,
-                                 cache=rem_caches[i], max_len=max_len,
-                                 batch_part=batch_part, true_len=true_len,
-                                 attend_limit=attend_limit,
-                                 token_mask=token_mask,
-                                 block_tables=block_tables)
+        x, nc, cnt, sp = apply_layer(cfg, mesh, spec,
+                                     with_tables(params["rem"][i]), x,
+                                     mode=mode, positions=positions,
+                                     cache=rem_caches[i], max_len=max_len,
+                                     batch_part=batch_part, true_len=true_len,
+                                     attend_limit=attend_limit,
+                                     token_mask=token_mask,
+                                     block_tables=block_tables)
         if nc is not None:
             new_rem_caches.append(nc)
         if cnt is not None:
             rem_counts.append(cnt)
+        if sp is not None:
+            rem_sparsity.append(sp)
 
     new_caches = None
     if mode in ("prefill", "decode"):
         new_pos = jnp.max(jnp.asarray(positions)) + 1
         new_caches = {"period": new_period_caches, "rem": tuple(new_rem_caches),
                       "pos": jnp.asarray(new_pos, jnp.int32)}
-    aux = {"period_counts": period_counts, "rem_counts": tuple(rem_counts)}
+    aux = {"period_counts": period_counts, "rem_counts": tuple(rem_counts),
+           # per-layer online-sparsity vectors [blocks_scored,
+           # blocks_attended, mass_sum, mass_n] — period entries arrive
+           # scan-stacked [n_rep, 4]; empty tuples when sparsity is off
+           "period_sparsity": period_sparsity,
+           "rem_sparsity": tuple(rem_sparsity)}
     return x, new_caches, aux

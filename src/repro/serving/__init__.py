@@ -2,6 +2,8 @@ from repro.core.proxy.params import RequestOutput, SamplingParams
 from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
                                   PrefillEngine)
 from repro.serving.server import Server, ServerConfig
+from repro.serving.sparsity import SparsityController, SparsityPlan
 
 __all__ = ["BlockHandoff", "DecodeEngine", "KVArena", "PrefillEngine",
-           "Server", "ServerConfig", "SamplingParams", "RequestOutput"]
+           "Server", "ServerConfig", "SamplingParams", "RequestOutput",
+           "SparsityController", "SparsityPlan"]

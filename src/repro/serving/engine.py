@@ -46,6 +46,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.proxy.params import GREEDY, SamplingParams, device_row
 from repro.core.proxy.radix import RadixTree
+from repro.models import attention as attn_mod
 from repro.models.lm import LM
 from repro.models.stack import (alloc_arena_kv, alloc_cache,
                                 alloc_paged_private_cache,
@@ -55,6 +56,7 @@ from repro.models.stack import (alloc_arena_kv, alloc_cache,
                                 split_arena_cache)
 from repro.serving.kvpool import KVPool, PrefixKVStore, _pytree_bytes
 from repro.serving.sampling import sample_tokens
+from repro.serving.sparsity import SparsityController
 
 
 def _bucket(n: int, lo: int = 32) -> int:
@@ -131,17 +133,57 @@ class KVArena:
         self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
 
     def _copy_impl(self, kv, src, dst):
-        def one(x):
-            if x.ndim == 5:                    # stacked period arena
+        # every arena leaf — KV [n_rep?, N, K, bs, h] AND the block-summary
+        # plane [n_rep?, N, K, h] — carries the block axis at position 1
+        # (stacked period entries) or 0 (rem), so the copy is structural,
+        # not ndim-dispatched
+        def blk(x, stacked):
+            if stacked:
                 return x.at[:, dst].set(x[:, src])
             return x.at[dst].set(x[src])
-        return jax.tree.map(one, kv)
+        per = tuple(None if e is None else
+                    {k: blk(v, True) for k, v in e.items()}
+                    for e in kv["period"])
+        rem = tuple(None if e is None else
+                    {k: blk(v, False) for k, v in e.items()}
+                    for e in kv["rem"])
+        return {"period": per, "rem": rem}
 
     def copy_block(self, src: int, dst: int):
         """Device-copy one physical block across every layer arena (the
-        partial-tail copy-on-write for prefix-store resume borrowers)."""
+        partial-tail copy-on-write for prefix-store resume borrowers).
+        The block-summary plane rides along: a copied block's content is
+        bit-identical to its source, so copying the summary IS the
+        invalidate-and-recompute — the zero-stale-summary invariant holds
+        through CoW without touching the keys."""
         if jax.tree.leaves(self.kv):
             self.kv = self._copy(self.kv, jnp.int32(src), jnp.int32(dst))
+
+    def check_summaries(self):
+        """Zero-stale-summary invariant: for EVERY arena block of every
+        full-attention layer, the stored per-block key summaries equal a
+        fresh reduction of the block's key content. Holds at any quiescent
+        point because every path that writes arena K recomputes the touched
+        blocks' summaries in the same jit (prefill chunk writes, decode
+        appends, dense-scatter admission) and copy_block copies content and
+        summary together. Test/diagnostic helper — fetches the arenas."""
+        def one(entry):
+            if entry is None or "kmin" not in entry:
+                return
+            k = np.asarray(entry["k"], np.float32)
+            np.testing.assert_array_equal(np.asarray(entry["kmin"]),
+                                          k.min(axis=-2),
+                                          err_msg="stale kmin summary")
+            np.testing.assert_array_equal(np.asarray(entry["kmax"]),
+                                          k.max(axis=-2),
+                                          err_msg="stale kmax summary")
+            np.testing.assert_allclose(np.asarray(entry["kmean"]),
+                                       k.mean(axis=-2), rtol=1e-5, atol=1e-6,
+                                       err_msg="stale kmean summary")
+        for e in self.kv["period"]:
+            one(e)
+        for e in self.kv["rem"]:
+            one(e)
 
     def reclaim(self, n_blocks: int) -> int:
         """Free up to `n_blocks` pool blocks by evicting shared cache
@@ -729,6 +771,7 @@ class DecodeEngine:
             self.block_size = self.arena.block_size
             self.kv_blocks = self.arena.pool.n_blocks
         self.max_blocks = -(-self.max_len // self.block_size)
+        self.sparsity = None
         if self.paged:
             # engine-private side only: per-slot ring arenas + non-attention
             # state; the full-attention arenas live in the (possibly shared)
@@ -738,7 +781,15 @@ class DecodeEngine:
                 self.block_size)
             self.tables_h = np.zeros((self.n_slots, self.max_blocks), np.int32)
             self._tbl_dev = jnp.asarray(self.tables_h)
+            self._tbl_bucket = self.max_blocks
             self._tbl_dirty = False
+            # online top-k block selection (OmniAttn dynamic sparsity):
+            # resolved once from cfg.omniattn — the step jit reads the same
+            # config, so controller and trace always agree
+            self.sparsity = SparsityController.from_model(
+                cfg, self.lm.plan, self.block_size, self.max_blocks)
+            if self.sparsity is not None:
+                self.stats.update(SparsityController.stats_keys())
         else:
             self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan,
                                      self.n_slots, self.max_len)
@@ -787,6 +838,11 @@ class DecodeEngine:
             # (and reset) only at placement ticks via take_moe_counts()
             self.state["moe_counts"] = jnp.zeros((n_moe, cfg.moe.n_experts),
                                                  jnp.float32)
+        if self.sparsity is not None:
+            # online-sparsity window [blocks_scored, blocks_attended,
+            # mass_sum, mass_n], layer-summed — accumulates device-side in
+            # the step jit, drained only via take_sparsity_stats()
+            self.state["sparsity"] = jnp.zeros(4, jnp.float32)
         self.pos_h = np.zeros(self.n_slots, np.int64)      # next write position
         self.tok_h = np.zeros(self.n_slots, np.int64)      # current input token
         self.tokens_h = np.zeros(self.n_slots, np.int64)   # pool-accounted tokens
@@ -840,7 +896,10 @@ class DecodeEngine:
         """Scatter one request's dense per-layer KV into arena blocks.
         Full layers write through `wtbl` (shared prefix entries redirected to
         the null block — mapped, not copied); ring layers overwrite the
-        slot's statically owned block run."""
+        slot's statically owned block run. Full-layer writes recompute the
+        written blocks' key summaries in the same jit, so dense→paged
+        (re-)admission never leaves a stale summary (shared prefix entries
+        redirect to the null block — the lender's summaries stand)."""
         sink, recent = win
         bs = self.block_size
         out = dict(entry)
@@ -859,6 +918,11 @@ class DecodeEngine:
                 a = a.at[:, wtbl].set(blocks) if stacked else \
                     a.at[wtbl].set(blocks)
             out[name] = a
+        if wtbl is not None and "kmin" in entry:
+            out["kmin"], out["kmax"], out["kmean"] = \
+                attn_mod.update_block_summaries(
+                    entry["kmin"], entry["kmax"], entry["kmean"], out["k"],
+                    wtbl, stacked=stacked)
         return out
 
     def _extract_attn_paged(self, win, entry, slot, tbl, stacked):
@@ -1004,6 +1068,12 @@ class DecodeEngine:
                     + [c[None] for c in aux["rem_counts"]])
             new_state["moe_counts"] = (state["moe_counts"] +
                                        jnp.concatenate(cnts, axis=0))
+        if "sparsity" in state:
+            # per-layer [4] vectors (period entries scan-stacked [n_rep, 4])
+            vecs = [a.sum(0) for a in aux.get("period_sparsity", ())] \
+                + list(aux.get("rem_sparsity", ()))
+            if vecs:
+                new_state["sparsity"] = state["sparsity"] + sum(vecs)
         return new_cache, new_state, nxt
 
     def _extract_impl(self, cache_all, slot):
@@ -1043,6 +1113,39 @@ class DecodeEngine:
                 "pos": cache_all["pos"]}
 
     # ------------------------------------------------------------------
+    def _refresh_tables(self):
+        """Device block-table refresh, with the resident-block count fed to
+        the step jit pow2-BUCKETED (lo=8 floor, the prefill chunk-bucket
+        convention): the jit traces once per bucket instead of once per
+        block-boundary crossing as contexts grow, and short-context steps
+        hand the kernels a narrow table — the paged_decode grid (and its
+        per-block DMAs) scales with the bucket, not max_len. Every live
+        slot's resident blocks fit the bucket by construction; stale rows
+        of freed slots are clamped to the null block by the write guard."""
+        cur = 1
+        for slot in self.slot_rid:
+            cur = max(cur, self.pool.blocks_for(int(self.tokens_h[slot])))
+        nb = min(_bucket(cur, lo=8), self.max_blocks)
+        if self._tbl_dirty or nb != self._tbl_bucket:
+            self._tbl_dev = jnp.asarray(self.tables_h[:, :nb])
+            self._tbl_bucket = nb
+            self._tbl_dirty = False
+
+    def take_sparsity_stats(self):
+        """Fetch + reset the device-side online-sparsity window and fold it
+        into stats (blocks_scored / blocks_attended / attn_mass_*, layer-
+        averaged — see serving/sparsity.py). → the layer-averaged [4] np
+        vector, or None when online sparsity is off. The only host sync for
+        these counters — call at monitor ticks / run end, not per step."""
+        acc = self.state.get("sparsity")
+        if acc is None:
+            return None
+        v = np.asarray(acc, np.float64)
+        self.state["sparsity"] = jnp.zeros_like(acc)
+        self.sparsity.note(self.stats, v)
+        L = max(self.sparsity.plan.n_sparse_layers, 1)
+        return v / L
+
     def has_capacity(self) -> bool:
         return len(self.free) > 0
 
@@ -1195,8 +1298,7 @@ class DecodeEngine:
                 samp)
             self._store_cache(cache)
         if self.paged and (batch or hbatch):
-            self._tbl_dev = jnp.asarray(self.tables_h)
-            self._tbl_dirty = False
+            self._tbl_dirty = True       # next step() re-buckets + uploads
         return out
 
     def admit(self, rid: int, cache_one, first_token: int, prompt_len: int,
@@ -1213,9 +1315,8 @@ class DecodeEngine:
         if not self.slot_rid:
             return {}
         t0 = time.monotonic()
-        if self.paged and self._tbl_dirty:
-            self._tbl_dev = jnp.asarray(self.tables_h)
-            self._tbl_dirty = False
+        if self.paged:
+            self._refresh_tables()
         cache, self.state, nxt = self._step(
             self.params, self._full_cache(), self.state, self.tables,
             self._tbl_dev if self.paged else None)

@@ -316,9 +316,16 @@ class KVPool:
                 self.refcount[b] = n
 
     # ---- invariants (property tests) ---------------------------------
-    def check_invariants(self):
+    def check_invariants(self, arena=None):
         """No block is both free and mapped; refcounts match mapper counts;
-        block population is conserved."""
+        block population is conserved. With `arena` (the KVArena whose
+        blocks this pool hands out) additionally asserts the zero-stale-
+        summary invariant: every arena block's stored key summaries equal a
+        fresh reduction of its content — admission handoff, preemption/
+        resume re-admission, and copy_block tail CoW must all leave the
+        block-summary metadata plane coherent."""
+        if arena is not None:
+            arena.check_summaries()
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate ids in free list"
         assert not (free & set(self.refcount)), "block both free and mapped"

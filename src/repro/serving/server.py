@@ -385,6 +385,22 @@ class Server:
             eng.preempted.clear()
         self._step_count += 1
         self._maybe_placement_tick()
+        self._maybe_sparsity_tick()
+
+    def _maybe_sparsity_tick(self):
+        """Drain the decode engines' device-side online-sparsity windows
+        into the metrics at the monitor cadence (like the MoE activation
+        window), so the STREAMING entry points (add_request/step/generate)
+        report blocks_scored / blocks_attended / attn_mass_kept too — not
+        just the closed-batch run() epilogue. One host sync per interval
+        per sparse engine; no-op when online sparsity is off."""
+        if self._step_count % max(self.scfg.placement_interval, 1) != 0:
+            return
+        for eng in self.decodes:
+            if eng.sparsity is not None:
+                sp = eng.take_sparsity_stats()
+                if sp is not None:
+                    self.metrics.note_sparsity(*sp)
 
     # ---- OmniPlacement closed loop -----------------------------------
     def _maybe_placement_tick(self):
@@ -469,6 +485,13 @@ class Server:
                     continue
             self.step(now)
         wall = time.monotonic() - t_start
+        for eng in self.decodes:
+            # drain the device-side online-sparsity window (no-op when off)
+            # so the summary reports blocks_scored / blocks_attended /
+            # attn_mass_kept next to the wall-clock columns
+            sp = eng.take_sparsity_stats()
+            if sp is not None:
+                self.metrics.note_sparsity(*sp)
         summary = self.metrics.summary(wall)
         summary["wall_s"] = wall
         summary["n_migrations"] = self.n_migrations

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.block_topk import block_topk_scores
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode import paged_decode
@@ -188,6 +189,64 @@ def test_paged_prefill_fallback_matches_ref():
         .reshape(B, S, H, h)
     np.testing.assert_allclose(np.asarray(out[:, :6]),
                                np.asarray(want[:, :6]), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bs,nb", [(8, 4), (16, 3), (8, 8)])
+@pytest.mark.parametrize("G", [1, 3])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_topk_sweep(bs, nb, G, dtype):
+    """block_topk scoring vs the jnp oracle across block sizes, GQA group
+    widths and dtypes, with per-sequence lens covering a single block, a
+    mid-block tail, and full residency."""
+    rng = jax.random.PRNGKey(3 * bs + nb + G)
+    r = jax.random.split(rng, 4)
+    B, K, h, N = 3, 2, 32, 10
+    q = jax.random.normal(r[0], (B, K, G, h), dtype)
+    kmin = jax.random.normal(r[1], (N, K, h), jnp.float32)
+    kmax = kmin + jax.nn.relu(jax.random.normal(r[2], (N, K, h)))
+    tables = jax.random.randint(r[3], (B, nb), 1, N)
+    lens = jnp.array([1, nb * bs - bs // 2, nb * bs])
+    out = block_topk_scores(q, kmin, kmax, tables, lens, block_size=bs,
+                            interpret=True)
+    want = ref.block_topk_scores_ref(q, kmin, kmax, tables, lens,
+                                     block_size=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **TOL[jnp.float32 if dtype == jnp.float32
+                                     else jnp.bfloat16])
+
+
+def test_block_topk_non_resident_masked():
+    """A poisoned summary behind a non-resident table entry (the null-block
+    alias) must never outrank a real block: its score is NEG_INF."""
+    B, K, G, h, N, bs, nb = 1, 1, 1, 16, 6, 8, 3
+    q = jnp.ones((B, K, G, h))
+    kmin = jnp.zeros((N, K, h)).at[0].set(1e4)      # poisoned null block
+    kmax = jnp.ones((N, K, h)).at[0].set(1e4)
+    tables = jnp.array([[3, 0, 0]])                 # 1 resident block
+    lens = jnp.array([5])
+    out = np.asarray(block_topk_scores(q, kmin, kmax, tables, lens,
+                                       block_size=bs, interpret=True))
+    assert out[0, 0] == pytest.approx(h, rel=1e-5)  # Σ_c max(1·0, 1·1)
+    assert (out[0, 1:] <= -1e29).all()
+
+
+def test_block_topk_adapter_matches_fallback():
+    """ops layout adapter (model [B,H,h] layout) ≡ the models/attention.py
+    jnp fallback, GQA case."""
+    from repro.models.attention import block_topk_scores as fb
+    rng = jax.random.PRNGKey(17)
+    r = jax.random.split(rng, 4)
+    B, K, G, h, N, bs, nb = 2, 2, 2, 32, 8, 8, 4
+    q = jax.random.normal(r[0], (B, K * G, h))
+    kmin = jax.random.normal(r[1], (N, K, h))
+    kmax = kmin + jax.nn.relu(jax.random.normal(r[2], (N, K, h)))
+    tables = jax.random.randint(r[3], (B, nb), 1, N)
+    lens = jnp.array([9, nb * bs])
+    got = ops.block_topk_scores_op(q, kmin, kmax, tables, lens,
+                                   block_size=bs)
+    want = fb(q, kmin, kmax, tables, lens, block_size=bs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("s,C,D,F", [(2, 32, 64, 48), (4, 64, 128, 96),
