@@ -58,6 +58,19 @@ def main():
     s = srv.metrics.summary(1.0)
     print(f"\ncompleted {s['n_done']}/{len(prompts)} despite the failure "
           f"({s['n_aborted']} aborted); ttft={s['ttft_mean']:.2f}s")
+    print(f"robustness: n_retries={s['n_retries']} n_errors={s['n_errors']} "
+          f"n_timeouts={s['n_timeouts']} n_shed={s['n_shed']} "
+          f"blocks_quarantined={s['blocks_quarantined']}")
+
+    # quiescent-point hygiene: the failure drill + abort must leak nothing —
+    # pool invariants hold and only prefix-store snapshots remain mapped
+    # (this drill is also a tier-1 test: tests/test_faults.py)
+    if srv.kv_arena is not None:
+        srv.kv_arena.pool.check_invariants(arena=srv.kv_arena)
+        assert all(isinstance(k, tuple) and k[0] == "store"
+                   for k in srv.kv_arena.pool.per_request), "leaked blocks"
+        print("KV pool invariants OK: zero leaked blocks, "
+              "zero stale summaries")
 
     # expert-load imbalance picture from this run's routing
     counts = np.ones(cfg.moe.n_experts)  # uniform placeholder at tiny scale

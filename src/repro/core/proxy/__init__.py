@@ -2,9 +2,10 @@ from repro.core.proxy.radix import RadixTree
 from repro.core.proxy.lifecycle import Phase, Request
 from repro.core.proxy.oas import InstanceStats, OASConfig, OmniProxy
 from repro.core.proxy.metrics import MetricsAggregator
-from repro.core.proxy.params import (GREEDY, RequestOutput, SamplingParams,
-                                     device_row, seed_key)
+from repro.core.proxy.params import (GREEDY, BackpressureError, RequestOutput,
+                                     SamplingParams, device_row, seed_key)
 
 __all__ = ["RadixTree", "Phase", "Request", "InstanceStats", "OASConfig",
            "OmniProxy", "MetricsAggregator", "SamplingParams",
-           "RequestOutput", "GREEDY", "device_row", "seed_key"]
+           "RequestOutput", "BackpressureError", "GREEDY", "device_row",
+           "seed_key"]

@@ -34,8 +34,10 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     n_retries: int = 0                 # straggler/failure re-dispatches
+    not_before: float = 0.0            # retry backoff: earliest re-dispatch
     sampling: Optional[object] = None  # SamplingParams (None → greedy legacy)
-    finish_reason: Optional[str] = None   # "stop" | "length" | "abort"
+    finish_reason: Optional[str] = None   # "stop" | "length" | "abort" |
+                                          # "error" | "timeout"
 
     def advance(self, phase: Phase, now: float):
         self.phase = phase

@@ -13,6 +13,16 @@ from repro.core.proxy.lifecycle import Request
 class MetricsAggregator:
     done: list = field(default_factory=list)
     aborted: list = field(default_factory=list)
+    # robustness plane (FaultPlane recovery machinery): requests retired
+    # with finish_reason="error" (retries exhausted) / "timeout" (watchdog),
+    # admissions shed at the door (BackpressureError), arena blocks pulled
+    # from circulation by the summary-plane corruption scan, and the total
+    # re-dispatch count — the columns that make robustness regressions
+    # visible next to the latency figures.
+    errors: list = field(default_factory=list)
+    timeouts: list = field(default_factory=list)
+    n_shed: int = 0
+    blocks_quarantined: int = 0
     # PD transfer-cost model: true bytes = the KV payload actually resident
     # (prompt tokens), padded bytes = what a dense max_len handoff pytree
     # would meter. The old model reported only the padded figure — a
@@ -36,6 +46,23 @@ class MetricsAggregator:
         """Cancelled requests are tracked separately: they count in
         `n_aborted` but never pollute the latency distributions."""
         self.aborted.append(req)
+
+    def add_error(self, req: Request):
+        """Request retired after exhausting its retry budget."""
+        self.errors.append(req)
+
+    def add_timeout(self, req: Request):
+        """Request retired by the no-progress watchdog."""
+        self.timeouts.append(req)
+
+    def note_shed(self, n: int = 1):
+        """Admission rejected with BackpressureError (never entered
+        the lifecycle, so there is no Request to keep)."""
+        self.n_shed += n
+
+    def note_quarantine(self, n: int = 1):
+        """Arena blocks pulled from circulation by the corruption scan."""
+        self.blocks_quarantined += n
 
     def note_kv_transfer(self, true_bytes: int, padded_bytes: int):
         """Record one admission round's KV handoff payload (both figures,
@@ -65,6 +92,16 @@ class MetricsAggregator:
         return {"n_stop": n_stop, "n_length": n_length,
                 "n_aborted": len(self.aborted)}
 
+    def _robustness(self) -> dict:
+        n_retries = sum(r.n_retries for pool in
+                        (self.done, self.aborted, self.errors, self.timeouts)
+                        for r in pool)
+        return {"n_errors": len(self.errors),
+                "n_timeouts": len(self.timeouts),
+                "n_shed": self.n_shed,
+                "n_retries": n_retries,
+                "blocks_quarantined": self.blocks_quarantined}
+
     def summary(self, wall_time: float) -> dict:
         if not self.done:
             # zero-done is a normal state now (every request aborted, or the
@@ -72,6 +109,7 @@ class MetricsAggregator:
             # index n_done / latency columns unconditionally don't KeyError
             nan = float("nan")
             return {"n_done": 0, "qpm": 0.0, **self._reasons(),
+                    **self._robustness(),
                     "ttft_mean": nan, "ttft_p99": nan,
                     "tpot_mean_ms": nan, "tpot_p99_ms": nan,
                     "e2e_mean": nan, "e2e_p99": nan,
@@ -89,6 +127,7 @@ class MetricsAggregator:
         return {
             "n_done": len(self.done),
             **self._reasons(),
+            **self._robustness(),
             "qpm": 60.0 * len(self.done) / wall,
             "ttft_mean": float(ttft.mean()) if len(ttft) else float("nan"),
             "ttft_p99": pct(ttft, 99),

@@ -39,6 +39,7 @@ class OASConfig:
     straggler_penalty: float = 0.5
     timeout_factor: float = 10.0
     max_retries: int = 2
+    retry_backoff_s: float = 0.0    # re-dispatch delay × n_retries (0 → off)
     lpt: bool = True                # decode LPT ordering (ablation switch)
     cache_aware: bool = True        # prefill APC-aware scoring (ablation)
     deferred: bool = True           # deferred submission (ablation)
@@ -115,9 +116,10 @@ class OmniProxy:
         # expired or who align with the predicted upstream batch cycle
         if self.cfg.deferred:
             cycle = min(self._predicted_cycle(), self.cfg.defer_window)
-            ready = [r for r in self.pending if now - r.arrival >= cycle]
+            ready = [r for r in self.pending if now - r.arrival >= cycle
+                     and now >= r.not_before]
         else:
-            ready = list(self.pending)
+            ready = [r for r in self.pending if now >= r.not_before]
 
         # ---- resorting: coherent groups — short prompts first within the
         # released group keeps prefill batches uniform (reduces bubbles)
@@ -201,18 +203,71 @@ class OmniProxy:
         req.advance(Phase.DECODE_WAIT, now)
         self.decode_wait.append(req)
 
-    def on_decode_kv_lost(self, req: Request, now: float):
+    def _reroute_to_prefill(self, req: Request, now: float) -> bool:
+        """Shared recovery tail for every KV-loss path: clear placement,
+        wipe the output buffer (draws are positional, so the regenerated
+        prefix is bit-identical and the server's per-rid delivered counter
+        suppresses re-streaming it) and re-enter the deferred-submission
+        pool. Bounded by `max_retries`: a request whose KV keeps vanishing
+        must not re-enter the prefill queue forever — exhausted retries
+        advance to Phase.FAILED, which the server retires with
+        finish_reason="error". retry_backoff_s > 0 delays the re-dispatch
+        by backoff × n_retries (linear backoff)."""
+        if req.n_retries >= self.cfg.max_retries:
+            req.advance(Phase.FAILED, now)
+            return False
+        req.n_retries += 1
+        req.prefill_instance = None
+        req.decode_instance = None
+        req.output_tokens.clear()
+        if self.cfg.retry_backoff_s > 0:
+            req.not_before = max(req.not_before,
+                                 now + self.cfg.retry_backoff_s * req.n_retries)
+        req.advance(Phase.APC_MATCH, now)
+        self.pending.append(req)
+        return True
+
+    def on_decode_kv_lost(self, req: Request, now: float) -> bool:
         """Scheduled for decode but its KV vanished (e.g. decode-instance
-        failure between admissions): undo the schedule accounting and route
-        the request back through prefill from scratch."""
+        failure between admissions, a dropped handoff payload): undo the
+        schedule accounting and route the request back through prefill from
+        scratch — retry-capped (see _reroute_to_prefill). → re-dispatched?"""
         inst = self.decode[req.decode_instance]
         inst.queue_len -= 1
         inst.queued_tokens -= req.max_tokens
         req.decode_instance = None
-        req.prefill_instance = None
-        req.output_tokens.clear()
-        req.advance(Phase.APC_MATCH, now)
-        self.pending.append(req)
+        return self._reroute_to_prefill(req, now)
+
+    def on_decode_restart(self, req: Request, now: float) -> bool:
+        """A RUNNING decode request lost its KV (engine-detected loss,
+        corruption quarantine): undo the running accounting and route back
+        through prefill from scratch — retry-capped."""
+        inst = self.decode[req.decode_instance]
+        inst.running -= 1
+        inst.running_tokens -= req.effective_load
+        req.decode_instance = None
+        return self._reroute_to_prefill(req, now)
+
+    def on_prefill_restart(self, req: Request, now: float) -> bool:
+        """An in-flight prefill lost its blocks (corruption quarantine —
+        whole-instance death goes through mark_unhealthy): undo the phase
+        accounting and re-dispatch — retry-capped."""
+        if req.prefill_instance is not None:
+            inst = self.prefill[req.prefill_instance]
+            if req.phase == Phase.PREFILL_RUNNING:
+                inst.running -= 1
+                inst.running_tokens -= req.prompt_len
+            elif req.phase == Phase.PREFILL_SCHEDULED:
+                inst.queue_len -= 1
+                inst.queued_tokens -= req.prompt_len - req.prefix_match
+        return self._reroute_to_prefill(req, now)
+
+    def on_handoff_lost(self, req: Request, now: float) -> bool:
+        """A parked (prefill-done, not yet admitted) handoff lost its KV:
+        prefill accounting is closed and decode accounting not yet opened —
+        just leave the wait pool and reroute through prefill, retry-capped."""
+        self.decode_wait = [r for r in self.decode_wait if r.rid != req.rid]
+        return self._reroute_to_prefill(req, now)
 
     def on_decode_preempt(self, req: Request, now: float):
         """Running request evicted by the engine (KV block exhaustion):
@@ -297,14 +352,9 @@ class OmniProxy:
         for req in list(self.inflight.values()):
             if kind == "prefill" and req.prefill_instance == iid and \
                     req.phase in (Phase.PREFILL_SCHEDULED, Phase.PREFILL_RUNNING):
-                if req.n_retries >= self.cfg.max_retries:
-                    req.advance(Phase.FAILED, now)
-                    continue
-                req.n_retries += 1
-                req.prefill_instance = None
-                req.advance(Phase.APC_MATCH, now)
-                self.pending.append(req)
-                requeued.append(req)
+                # accounting is zeroed wholesale below — only reroute here
+                if self._reroute_to_prefill(req, now):
+                    requeued.append(req)
             elif kind == "decode" and req.decode_instance == iid and \
                     req.phase in (Phase.DECODE_SCHEDULED, Phase.DECODE_RUNNING):
                 if req.n_retries >= self.cfg.max_retries:

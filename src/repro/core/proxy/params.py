@@ -22,6 +22,17 @@ import numpy as np
 FINISH_STOP = "stop"        # hit one of the request's stop_token_ids
 FINISH_LENGTH = "length"    # generated max_tokens
 FINISH_ABORT = "abort"      # cancelled via Server.abort(rid)
+FINISH_ERROR = "error"      # retries exhausted (instance death / KV loss)
+FINISH_TIMEOUT = "timeout"  # retired by the no-progress watchdog
+
+
+class BackpressureError(RuntimeError):
+    """Typed admission rejection (graceful load shedding): raised by
+    Server.add_request/submit when a request could never be served (prompt
+    larger than the whole KV pool) or when the admission backlog exceeds
+    `ServerConfig.admission_queue_cap`. Shedding at the door replaces the
+    livelock of a request deferring forever inside the engines; callers
+    retry later or route elsewhere. Counted in `MetricsAggregator.n_shed`."""
 
 
 @dataclass(frozen=True)
@@ -70,7 +81,8 @@ class RequestOutput:
     rid: int
     new_tokens: tuple = ()
     finished: bool = False
-    finish_reason: Optional[str] = None     # FINISH_STOP/LENGTH/ABORT
+    finish_reason: Optional[str] = None     # FINISH_STOP/LENGTH/ABORT/
+                                            # ERROR/TIMEOUT
     n_generated: int = 0                    # total output tokens so far
 
 

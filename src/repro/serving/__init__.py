@@ -1,9 +1,12 @@
-from repro.core.proxy.params import RequestOutput, SamplingParams
+from repro.core.proxy.params import (BackpressureError, RequestOutput,
+                                     SamplingParams)
 from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
                                   PrefillEngine)
+from repro.serving.faults import FaultConfig, FaultPlane, FaultSpec
 from repro.serving.server import Server, ServerConfig
 from repro.serving.sparsity import SparsityController, SparsityPlan
 
 __all__ = ["BlockHandoff", "DecodeEngine", "KVArena", "PrefillEngine",
            "Server", "ServerConfig", "SamplingParams", "RequestOutput",
+           "BackpressureError", "FaultConfig", "FaultPlane", "FaultSpec",
            "SparsityController", "SparsityPlan"]

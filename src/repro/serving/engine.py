@@ -131,6 +131,7 @@ class KVArena:
         self.block_nbytes = sum(x.size // n * x.dtype.itemsize
                                 for x in leaves)
         self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
+        self._scrub = jax.jit(self._scrub_impl, donate_argnums=(0,))
 
     def _copy_impl(self, kv, src, dst):
         # every arena leaf — KV [n_rep?, N, K, bs, h] AND the block-summary
@@ -158,6 +159,55 @@ class KVArena:
         through CoW without touching the keys."""
         if jax.tree.leaves(self.kv):
             self.kv = self._copy(self.kv, jnp.int32(src), jnp.int32(dst))
+
+    def _scrub_impl(self, kv, b):
+        # zero every leaf of one block — content AND summary plane — so a
+        # quarantined block satisfies summary == reduce(content) forever
+        def blk(x, stacked):
+            if stacked:
+                return x.at[:, b].set(0)
+            return x.at[b].set(0)
+        per = tuple(None if e is None else
+                    {k: blk(v, True) for k, v in e.items()}
+                    for e in kv["period"])
+        rem = tuple(None if e is None else
+                    {k: blk(v, False) for k, v in e.items()}
+                    for e in kv["rem"])
+        return {"period": per, "rem": rem}
+
+    def scrub_block(self, b: int):
+        """Zero one physical block across every layer arena (corruption
+        quarantine: the block leaves circulation, and zeroed content with a
+        zeroed summary keeps `check_summaries` green — all-zero keys reduce
+        to all-zero min/max/mean)."""
+        if jax.tree.leaves(self.kv):
+            self.kv = self._scrub(self.kv, jnp.int32(b))
+
+    def find_corrupt_blocks(self) -> list:
+        """Summary-plane corruption scan: block ids whose stored key
+        summaries disagree with a fresh reduction of the block's key
+        content. A fault (bit-flip, lost write, partial DMA) that mutates K
+        without going through a summary-maintaining write path trips this —
+        the detection half of the FaultPlane corruption story. Host scan
+        (fetches the key arenas); call at recovery points, not per step."""
+        n = self.pool.n_blocks + 1
+        bad = np.zeros(n, bool)
+
+        def one(entry, stacked):
+            if entry is None or "kmin" not in entry:
+                return
+            k = np.asarray(entry["k"], np.float32)
+            mism = (np.asarray(entry["kmin"], np.float32) != k.min(axis=-2)) \
+                | (np.asarray(entry["kmax"], np.float32) != k.max(axis=-2))
+            # reduce every axis except the block axis
+            ax = 1 if stacked else 0
+            red = tuple(i for i in range(mism.ndim) if i != ax)
+            np.logical_or(bad, mism.any(axis=red), out=bad)
+        for e in self.kv["period"]:
+            one(e, True)
+        for e in self.kv["rem"]:
+            one(e, False)
+        return [int(b) for b in np.nonzero(bad)[0]]
 
     def check_summaries(self):
         """Zero-stale-summary invariant: for EVERY arena block of every
@@ -243,6 +293,7 @@ class PrefillResult:
 
 @dataclass
 class PrefillEngine:
+    _next_handoff_id = 0              # shared-pool-unique handoff keys
     lm: LM
     params: dict
     tables: Optional[dict]
@@ -278,7 +329,6 @@ class PrefillEngine:
             self.block_size = self.arena.block_size
             self._resume_paged = jax.jit(self._resume_paged_impl,
                                          donate_argnums=(2,))
-            self._handoff_id = 0
         self.store = PrefixKVStore(
             self.tree, self.cache_cap,
             pool=self.arena.pool if self.paged else None,
@@ -537,6 +587,17 @@ class PrefillEngine:
         self._ready = [r for r in self._ready if r.rid != rid]
         return hit or len(self._ready) != n0
 
+    def drop_results(self) -> int:
+        """Discard every completed-but-undelivered result, releasing paged
+        handoff blocks (instance-death recovery: a dead engine's results
+        will never be drained by the server loop — without this their
+        ("handoff", i) pool keys leak). → results dropped."""
+        n = len(self._ready)
+        for r in self._ready:
+            self._release_result(r)
+        self._ready = []
+        return n
+
     def step(self, token_budget: int = 1 << 30) -> list[PrefillResult]:
         """Run up to `token_budget` tokens of prefill work; → completed
         prompts. Chunked mode schedules shortest-remaining-first at chunk
@@ -672,8 +733,11 @@ class PrefillEngine:
                     task.logits)
         if self.paged:
             pool, key = self.arena.pool, self._pf_key(task.rid)
-            hkey = ("handoff", self._handoff_id)
-            self._handoff_id += 1
+            # class-level counter: several engines share one pool (arena),
+            # so handoff keys must be unique ACROSS engines — per-engine
+            # counters collide at ("handoff", 0)
+            hkey = ("handoff", PrefillEngine._next_handoff_id)
+            PrefillEngine._next_handoff_id += 1
             blocks = tuple(pool.transfer(key, hkey))
             task.handoff = BlockHandoff(hkey, blocks, task.cache, L)
         return task

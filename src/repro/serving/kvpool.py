@@ -78,6 +78,10 @@ class PrefixKVStore:
     weighs the same as a 2048-token one.
     """
 
+    _n_stores = 0       # namespace counter: several stores can share one
+                        # pool (one per co-located prefill engine), so pool
+                        # keys must be unique ACROSS stores, not just within
+
     def __init__(self, tree: Optional[RadixTree] = None, capacity: int = 32,
                  pool: Optional["KVPool"] = None,
                  capacity_bytes: Optional[int] = None):
@@ -87,6 +91,11 @@ class PrefixKVStore:
         self.pool = pool
         self.entries: OrderedDict[int, StoreEntry] = OrderedDict()
         self._next_id = 0
+        self._ns = PrefixKVStore._n_stores
+        PrefixKVStore._n_stores += 1
+
+    def _key(self, handle: int) -> tuple:
+        return ("store", self._ns, handle)
 
     @property
     def size_bytes(self) -> int:
@@ -97,7 +106,7 @@ class PrefixKVStore:
         if ent is None:
             return
         if ent.blocks is not None and self.pool is not None:
-            self.pool.release(("store", handle))
+            self.pool.release(self._key(handle))
         self.tree.detach(ent.tokens, handle)
 
     def put(self, tokens, cache, logits, now: Optional[float] = None, *,
@@ -125,7 +134,7 @@ class PrefixKVStore:
         if old is not None:
             self._drop(old)
         if blocks is not None and self.pool is not None:
-            self.pool.adopt(("store", handle), blocks)
+            self.pool.adopt(self._key(handle), blocks)
         if nbytes is None:
             nbytes = _pytree_bytes(cache) + _pytree_bytes(logits)
         self.entries[handle] = StoreEntry(len(tokens), tokens, cache, logits,
@@ -178,6 +187,20 @@ class PrefixKVStore:
                 self._drop(handle)
         return self.pool.free_blocks - start
 
+    def drop_containing(self, blocks) -> int:
+        """Corruption recovery: drop every paged entry whose block list
+        intersects `blocks` (a set of condemned arena block ids) — a stored
+        prefix built on a quarantined block must never seed a resume.
+        → number of entries dropped."""
+        bad = set(blocks)
+        dropped = 0
+        for handle in list(self.entries):
+            eb = self.entries[handle].blocks
+            if eb is not None and bad & set(eb):
+                self._drop(handle)
+                dropped += 1
+        return dropped
+
 
 @dataclass
 class KVPool:
@@ -186,6 +209,12 @@ class KVPool:
     refcount: dict = field(default_factory=dict)       # block id → mappers
     per_request: dict = field(default_factory=dict)    # rid → [block ids]
     _free: List[int] = field(default_factory=list)
+    # blocks pulled from circulation by the corruption scan: never returned
+    # to the free list, still counted in the conservation invariant
+    quarantined: set = field(default_factory=set)
+    # FaultPlane hook: next N real allocations/extensions fail as if the
+    # pool were exhausted (callers must take their preempt/defer path)
+    inject_alloc_failures: int = 0
 
     def __post_init__(self):
         self._free = list(range(self.n_blocks, 0, -1))   # pop() → id 1 first
@@ -252,6 +281,9 @@ class KVPool:
             fresh_n = total - min(self.shareable_blocks(cached_tokens), total)
         if fresh_n > len(self._free):
             return None
+        if fresh_n > 0 and self.inject_alloc_failures > 0:
+            self.inject_alloc_failures -= 1
+            return None
         fresh = [self._free.pop() for _ in range(fresh_n)]
         table = shared + fresh
         for b in table:
@@ -298,6 +330,9 @@ class KVPool:
             return []
         if need > len(self._free):
             return None
+        if self.inject_alloc_failures > 0:
+            self.inject_alloc_failures -= 1
+            return None
         fresh = [self._free.pop() for _ in range(need)]
         for b in fresh:
             self.refcount[b] = self.refcount.get(b, 0) + 1
@@ -306,14 +341,30 @@ class KVPool:
 
     def release(self, rid: int):
         """Unmap all of `rid`'s blocks; a block returns to the free list only
-        when its last mapper releases (prefix sharers keep it alive)."""
+        when its last mapper releases (prefix sharers keep it alive).
+        Quarantined blocks never rejoin the free list."""
         for b in self.per_request.pop(rid, ()):
             n = self.refcount.get(b, 0) - 1
             if n <= 0:
                 self.refcount.pop(b, None)
-                self._free.append(b)
+                if b not in self.quarantined:
+                    self._free.append(b)
             else:
                 self.refcount[b] = n
+
+    def quarantine(self, b: int):
+        """Pull block `b` out of circulation (corruption scan hit). A free
+        block leaves the free list immediately; a mapped block stays mapped
+        until its last holder releases (the caller is responsible for
+        restarting those holders), after which `release` skips the free
+        list. Idempotent."""
+        if b in self.quarantined:
+            return
+        self.quarantined.add(b)
+        try:
+            self._free.remove(b)
+        except ValueError:
+            pass
 
     # ---- invariants (property tests) ---------------------------------
     def check_invariants(self, arena=None):
@@ -329,7 +380,9 @@ class KVPool:
         free = set(self._free)
         assert len(free) == len(self._free), "duplicate ids in free list"
         assert not (free & set(self.refcount)), "block both free and mapped"
-        assert free | set(self.refcount) == set(range(1, self.n_blocks + 1)), \
+        assert not (free & self.quarantined), "quarantined block in free list"
+        assert free | set(self.refcount) | self.quarantined \
+            == set(range(1, self.n_blocks + 1)), \
             "block population not conserved"
         counts: dict = {}
         for blocks in self.per_request.values():

@@ -37,8 +37,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.placement import DynamicScheduler, SchedulerConfig
 from repro.core.placement.migration import tables_from_placement_from_slots
-from repro.core.proxy import (MetricsAggregator, OASConfig, OmniProxy,
-                              Request, RequestOutput, SamplingParams)
+from repro.core.proxy import (BackpressureError, MetricsAggregator, OASConfig,
+                              OmniProxy, Phase, Request, RequestOutput,
+                              SamplingParams)
 from repro.distributed.ctx import MeshCtx, local_mesh_ctx
 from repro.models import moe as moe_mod
 from repro.models.lm import LM
@@ -71,13 +72,24 @@ class ServerConfig:
                                       # empty (-1 → run to max_tokens)
     idle_sleep_s: float = 0.01        # max per-iteration sleep while run()
                                       # waits for a future arrival
+    # ---- FaultPlane recovery knobs (None → off, no behavior change) ----
+    watchdog_steps: Optional[int] = None    # retire a request whose progress
+                                            # marker is unchanged for N steps
+                                            # with finish_reason="timeout"
+    watchdog_wall_s: Optional[float] = None  # same, wall-clock bound
+    admission_queue_cap: Optional[int] = None  # shed (BackpressureError) when
+                                               # the admission backlog exceeds
+                                               # this many waiting requests
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, scfg: ServerConfig,
                  mesh: Optional[MeshCtx] = None, rng=None,
-                 pattern: Optional[list] = None, params=None):
+                 pattern: Optional[list] = None, params=None, faults=None):
         self.cfg, self.scfg = cfg, scfg
+        # FaultPlane (serving/faults.py): seeded deterministic fault
+        # injection, fired at the top of every step() before any engine work
+        self.faults = faults
         self.mesh = mesh or local_mesh_ctx()
         self.lm = LM.build(cfg, self.mesh, pattern=pattern)
         self.params = params if params is not None else \
@@ -130,6 +142,9 @@ class Server:
         self._finish_info: dict[int, tuple] = {}    # rid → (reason, total)
         self._events: list[RequestOutput] = []
         self._idle_slept_s = 0.0
+        # watchdog state: rid → (progress marker, step seen, wall seen)
+        self._wd: dict[int, tuple] = {}
+        self.n_handoffs_swept = 0
         self.placement_sched = None
         if scfg.enable_placement and cfg.moe.n_experts:
             s = int(self.tables["slot_expert"].shape[1])
@@ -163,10 +178,37 @@ class Server:
 
     def _submit(self, rid: int, prompt: tuple, params: SamplingParams,
                 now: float) -> int:
+        self._admission_check(prompt)
         self.proxy.submit(Request(rid, prompt, params.max_tokens,
                                   arrival=now, sampling=params), now)
         self._next_rid = max(self._next_rid, rid + 1)
         return rid
+
+    def _admission_check(self, prompt: tuple):
+        """Graceful load shedding: reject at the door — with a typed
+        BackpressureError the caller can act on — instead of admitting a
+        request that would defer inside the engines forever (livelock).
+        Two gates: a prompt no sequence of releases could ever make fit
+        (larger than every non-quarantined block), and a bounded admission
+        backlog (`admission_queue_cap`, None → unbounded)."""
+        if self.kv_arena is not None:
+            pool = self.kv_arena.pool
+            usable = pool.n_blocks - len(pool.quarantined)
+            need = pool.blocks_for(len(prompt))
+            if need > usable:
+                self.metrics.note_shed()
+                raise BackpressureError(
+                    f"prompt needs {need} KV blocks but the pool has only "
+                    f"{usable} usable ({len(pool.quarantined)} quarantined)")
+        cap = self.scfg.admission_queue_cap
+        if cap is not None:
+            backlog = (len(self.proxy.pending) + len(self.proxy.decode_wait)
+                       + len(self._pending_kv)
+                       + sum(len(e.queue) for e in self.prefills))
+            if backlog >= cap:
+                self.metrics.note_shed()
+                raise BackpressureError(
+                    f"admission backlog {backlog} >= cap {cap}")
 
     def step(self, now: Optional[float] = None) -> list[RequestOutput]:
         """Advance the whole server one round (proxy tick → prefill round →
@@ -174,9 +216,19 @@ class Server:
         this step, plus finish records (finish_reason in {stop, length})
         and abort notifications."""
         now = time.monotonic() if now is None else now
+        if self.faults is not None:
+            # fire scheduled faults (and run their recovery) BEFORE this
+            # step's engine rounds: no token is ever computed from corrupt
+            # or lost KV, which is what makes completed outputs bit-identical
+            # to the fault-free run
+            self.faults.on_step(self, self._step_count, now)
+        if self.kv_arena is not None:
+            self._sweep_orphan_handoffs()
         self._drain_actions(now)
+        self._sweep_failed(now)
         self._prefill_round()
         self._decode_round()
+        self._watchdog(now)
         return self._flush_outputs()
 
     def abort(self, rid: int, now: Optional[float] = None) -> bool:
@@ -237,6 +289,186 @@ class Server:
         shared-arena blocks permanently."""
         if isinstance(cache, BlockHandoff):
             self.kv_arena.pool.release(cache.key)
+
+    # ---- FaultPlane recovery machinery -------------------------------
+    def _retire_faulted(self, rid: int, reason: str, now: float):
+        """Retire a request the recovery machinery gave up on (`"error"`:
+        retries exhausted, `"timeout"`: watchdog): release every engine/pool
+        resource it holds and emit a terminal RequestOutput. Reuses
+        proxy.abort for the accounting unwind — a Phase.FAILED request
+        matches no accounting branch by construction."""
+        req = self.proxy.abort(rid, now)
+        if req is None:
+            return
+        req.finish_reason = reason
+        kv = self._pending_kv.pop(rid, None)
+        if kv is not None:
+            self._release_handoff(kv[0])
+        for eng in self.prefills:
+            eng.abort(rid)
+        for eng in self.decodes:
+            eng.release(rid)
+        self._fresh.pop(rid, None)
+        self._finish_info.pop(rid, None)
+        self._wd.pop(rid, None)
+        n_out = max(len(req.output_tokens), self._emitted.pop(rid, 0))
+        if reason == "timeout":
+            self.metrics.add_timeout(req)
+        else:
+            self.metrics.add_error(req)
+        self._events.append(RequestOutput(rid, (), True, reason, n_out))
+
+    def _sweep_failed(self, now: float):
+        """Retire every Phase.FAILED request with finish_reason="error".
+        Retry-cap exhaustion (and the no-healthy-instance tick path) only
+        advances the phase — without this sweep a FAILED request would sit
+        in proxy.inflight forever and run()/generate() would never return
+        (the pre-FaultPlane livelock)."""
+        for rid in [r.rid for r in list(self.proxy.inflight.values())
+                    if r.phase == Phase.FAILED]:
+            self._retire_faulted(rid, "error", now)
+
+    def _watchdog(self, now: float):
+        """Retire requests whose progress marker has not changed for
+        `watchdog_steps` server steps or `watchdog_wall_s` seconds with
+        finish_reason="timeout". The marker collapses DECODE_WAIT and
+        DECODE_SCHEDULED into one class — admission-requeue ping-pong is
+        not progress and must not reset the timer — while prefill cursor
+        advance, new output tokens, and a granted retry each re-earn the
+        full window."""
+        ws, ww = self.scfg.watchdog_steps, self.scfg.watchdog_wall_s
+        if ws is None and ww is None:
+            return
+        live = set()
+        for rid, req in list(self.proxy.inflight.items()):
+            live.add(rid)
+            phase_class = (Phase.DECODE_WAIT if req.phase in
+                           (Phase.DECODE_WAIT, Phase.DECODE_SCHEDULED)
+                           else req.phase)
+            cursor = 0
+            for eng in self.prefills:
+                for t in eng.queue:
+                    if t.rid == rid:
+                        cursor = max(cursor, t.cursor)
+            marker = (phase_class, cursor, len(req.output_tokens),
+                      req.n_retries)
+            prev = self._wd.get(rid)
+            if prev is None or prev[0] != marker:
+                self._wd[rid] = (marker, self._step_count, now)
+                continue
+            _, step0, t0 = prev
+            if (ws is not None and self._step_count - step0 >= ws) or \
+                    (ww is not None and now - t0 >= ww):
+                self._retire_faulted(rid, "timeout", now)
+                live.discard(rid)
+        for rid in [r for r in self._wd if r not in live]:
+            del self._wd[rid]
+
+    def _sweep_orphan_handoffs(self):
+        """Leak backstop for the `("handoff", i)` rename stage: a handoff
+        key in the pool referenced by neither a parked `_pending_kv` record
+        nor an engine's undelivered-result cache belongs to nobody — no
+        code path will ever admit or release it. Dead-instance drops and
+        injected handoff faults land here; released blocks return to the
+        free list and the sweep is counted (`n_handoffs_swept`)."""
+        pool = self.kv_arena.pool
+        refs = {kv[0].key for kv in self._pending_kv.values()
+                if isinstance(kv[0], BlockHandoff)}
+        for eng in self.prefills:
+            for r in eng._ready:
+                if isinstance(r.cache, BlockHandoff):
+                    refs.add(r.cache.key)
+        for key in list(pool.per_request):
+            if isinstance(key, tuple) and len(key) == 2 \
+                    and key[0] == "handoff" and key not in refs:
+                pool.release(key)
+                self.n_handoffs_swept += 1
+
+    def recover_corruption(self, now: Optional[float] = None) -> list:
+        """Summary-plane corruption recovery: scan the arena for blocks
+        whose stored key summaries disagree with their content, then (1)
+        drop prefix-store entries built on them, (2) drop parked handoffs
+        and (3) in-flight prefill work touching them (rerouting those
+        requests retry-capped), (4) restart resident decode requests mapping
+        them, and (5) quarantine + scrub the now-unmapped blocks so they
+        leave circulation with a coherent (all-zero) summary. → condemned
+        block ids. Restarted requests regenerate bit-identical prefixes
+        (positional draws) and the delivered counter suppresses re-streaming."""
+        if self.kv_arena is None:
+            return []
+        now = time.monotonic() if now is None else now
+        bad = self.kv_arena.find_corrupt_blocks()
+        if not bad:
+            return []
+        badset = set(bad)
+        pool = self.kv_arena.pool
+        # an already-orphaned handoff key may map a condemned block — sweep
+        # first so the holder scan below sees only live owners
+        self._sweep_orphan_handoffs()
+        for eng in self.prefills:
+            eng.store.drop_containing(badset)
+        for rid in list(self._pending_kv):
+            kv = self._pending_kv[rid]
+            if isinstance(kv[0], BlockHandoff) and badset & set(kv[0].blocks):
+                self._pending_kv.pop(rid)
+                self._release_handoff(kv[0])
+                req = self.proxy.inflight.get(rid)
+                if req is not None:
+                    self.proxy.on_handoff_lost(req, now)
+        for eng in self.prefills:
+            hit = {r.rid for r in eng._ready
+                   if isinstance(r.cache, BlockHandoff)
+                   and badset & set(r.cache.blocks)}
+            hit |= {t.rid for t in eng.queue
+                    if badset & set(pool.owned(("prefill", t.rid)))}
+            for rid in hit:
+                eng.abort(rid)
+                req = self.proxy.inflight.get(rid)
+                if req is not None:
+                    self.proxy.on_prefill_restart(req, now)
+        for eng in self.decodes:
+            for rid in list(eng.rid_slot):
+                if badset & set(pool.owned(rid)):
+                    eng.release(rid)
+                    req = self.proxy.inflight.get(rid)
+                    if req is not None and req.phase == Phase.DECODE_RUNNING:
+                        self.proxy.on_decode_restart(req, now)
+        self._sweep_failed(now)
+        for b in bad:
+            pool.quarantine(b)
+            assert b not in pool.refcount, \
+                f"corrupt block {b} still mapped after recovery"
+            self.kv_arena.scrub_block(b)
+        self.metrics.note_quarantine(len(bad))
+        return bad
+
+    # ---- fault-injection entry points (FaultPlane hooks) -------------
+    def inject_instance_failure(self, kind: str, iid: int,
+                                now: Optional[float] = None):
+        """Kill one engine instance: the proxy reroutes its in-flight
+        requests (retry-capped) and the next step's engine rounds release
+        its slots / queued tasks / undelivered results."""
+        now = time.monotonic() if now is None else now
+        self.proxy.mark_unhealthy(kind, iid, now)
+
+    def revive_instance(self, kind: str, iid: int):
+        self.proxy.mark_healthy(kind, iid)
+
+    def inject_kv_lost(self, rid: int, now: Optional[float] = None):
+        """Lose one resident decode request's KV: its slots/blocks are
+        released and the request reroutes through prefill, retry-capped."""
+        now = time.monotonic() if now is None else now
+        req = self.proxy.inflight.get(rid)
+        for eng in self.decodes:
+            eng.release(rid)
+        if req is not None and req.phase == Phase.DECODE_RUNNING:
+            self.proxy.on_decode_restart(req, now)
+
+    def inject_handoff_drop(self, rid: int) -> bool:
+        """Drop a parked handoff WITHOUT releasing its pool key — models a
+        payload lost mid-rename. The orphan-handoff sweep reclaims the
+        blocks; the request recovers via the kv-lost path at dispatch."""
+        return self._pending_kv.pop(rid, None) is not None
 
     def _stop_tokens(self, req: Request) -> tuple:
         sp = req.sampling
@@ -324,6 +556,10 @@ class Server:
                 # prefill-phase block reservations)
                 for t in list(eng.queue):
                     eng.abort(t.rid)
+                # undelivered results die with the instance too: their
+                # ("handoff", i) blocks would otherwise leak (the sweep is
+                # the backstop; this is the prompt release)
+                eng.drop_results()
                 continue
             if not eng.has_work():
                 continue
@@ -472,7 +708,10 @@ class Server:
                 _, i, prompt, spec = todo[k]
                 params = spec if isinstance(spec, SamplingParams) else \
                     SamplingParams(max_tokens=int(spec))
-                self._submit(i, tuple(prompt), params, now)
+                try:
+                    self._submit(i, tuple(prompt), params, now)
+                except BackpressureError:
+                    pass        # shed (counted in metrics.n_shed)
                 k += 1
             if not self.proxy.inflight and k < len(todo):
                 # nothing in flight and the next arrival is in the future:
@@ -496,6 +735,9 @@ class Server:
         summary["wall_s"] = wall
         summary["n_migrations"] = self.n_migrations
         summary["idle_slept_s"] = self._idle_slept_s
+        summary["n_handoffs_swept"] = self.n_handoffs_swept
+        if self.faults is not None:
+            summary["faults_injected"] = dict(self.faults.injected)
         summary["prefill_stats"] = [e.stats for e in self.prefills]
         summary["decode_stats"] = [e.stats for e in self.decodes]
         return summary

@@ -1,0 +1,416 @@
+"""FaultPlane: deterministic fault injection + full-stack recovery.
+
+Covers the PR-6 robustness contract end to end:
+
+  · schedule determinism — a FaultConfig seed fully determines the fault
+    schedule (step, kind, arg), so chaos runs replay exactly;
+  · bounded retries — repeated KV loss for one request exhausts
+    `OASConfig.max_retries` and retires it with finish_reason="error"
+    (counted in n_errors), with zero leaked arena blocks;
+  · orphan-handoff sweep — a dropped `("handoff", i)` payload is reclaimed
+    by the step-top sweep and the request recovers via the kv-lost path
+    (the rename-stage leak regression);
+  · watchdog — a request that can make no progress (no healthy decode
+    instance) is retired with finish_reason="timeout";
+  · graceful shedding — infeasible prompts and over-cap admission backlogs
+    raise a typed BackpressureError at the door (counted in n_shed);
+  · corruption recovery — a corrupted block's stale key summary is
+    detected, its holders are restarted, the block is quarantined+scrubbed,
+    and the restarted request's greedy output is bit-identical;
+  · chaos soak — under a full seeded fault schedule (kills, corruption, KV
+    loss, handoff drops, allocation failures, stragglers), every request
+    completes with output bit-identical to the fault-free run, streamed
+    deltas are never replayed, and the pool/summary invariants hold with
+    zero leaked blocks.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.proxy import MetricsAggregator, OASConfig, Phase
+from repro.serving import (BackpressureError, FaultConfig, FaultPlane,
+                           SamplingParams, Server, ServerConfig)
+from repro.serving.faults import FAULT_KINDS, corrupt_block
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2)
+    return cfg
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    """This module builds ~15 Servers (each with its own jit entries for
+    prefill chunks, admission batches, decode buckets, scrub). Drop the
+    compiled executables when the module finishes so the compile-heavy
+    modules that follow alphabetically (kernels, paged_prefill, serving,
+    sparsity) don't run on top of them."""
+    yield
+    import jax
+    jax.clear_caches()
+
+
+def _drive(srv, reqs, max_steps=3000):
+    """Submit every request at t=0 and step() until quiescent, collecting
+    the per-rid streamed token deltas and finish records — the raw material
+    for the no-replay and delivered-counter asserts."""
+    t0 = time.monotonic()
+    rids = []
+    for p, spec in reqs:
+        params = spec if isinstance(spec, SamplingParams) \
+            else SamplingParams(max_tokens=int(spec))
+        try:
+            rids.append(srv.add_request(p, params, now=t0))
+        except BackpressureError:
+            rids.append(None)
+    deltas: dict = {}
+    finishes: dict = {}
+    steps = 0
+    while srv.proxy.inflight and steps < max_steps:
+        for out in srv.step():
+            deltas.setdefault(out.rid, []).extend(out.new_tokens)
+            if out.finished:
+                finishes[out.rid] = (out.finish_reason, out.n_generated)
+        steps += 1
+    assert not srv.proxy.inflight, f"not quiescent after {steps} steps"
+    return rids, deltas, finishes
+
+
+def _assert_no_leaks(srv):
+    """Quiescent-point hygiene: pool invariants hold (including the arena's
+    zero-stale-summary scan) and the only residual block mappings are
+    prefix-store snapshots — no request, prefill, or handoff key survives."""
+    if srv.kv_arena is None:
+        return
+    pool = srv.kv_arena.pool
+    pool.check_invariants(arena=srv.kv_arena)
+    for key in pool.per_request:
+        assert isinstance(key, tuple) and key[0] == "store", \
+            f"leaked block mapping under {key!r}"
+
+
+# ---------------------------------------------------------------------
+def test_fault_schedule_deterministic():
+    """Same seed → identical schedule; the schedule respects the config's
+    step window and only names known fault kinds."""
+    cfg = FaultConfig(seed=3, horizon=40)
+    a, b = FaultPlane(cfg), FaultPlane(cfg)
+    assert list(a.schedule) == list(b.schedule)
+    assert list(a.schedule) != list(FaultPlane(FaultConfig(seed=4,
+                                                           horizon=40)).schedule)
+    for spec in a.schedule:
+        assert spec.kind in FAULT_KINDS
+        assert cfg.warmup_steps <= spec.step < cfg.horizon
+    n_expected = (cfg.n_kill_prefill + cfg.n_kill_decode + cfg.n_kv_corrupt
+                  + cfg.n_kv_lost + cfg.n_handoff_drop + cfg.n_alloc_fail
+                  + cfg.n_straggler)
+    assert len(a.schedule) == n_expected
+
+
+def test_metrics_robustness_keys():
+    """The robustness counters ride along in BOTH summary branches (the
+    zero-done early return included)."""
+    m = MetricsAggregator()
+    empty = m.summary(1.0)
+    for k in ("n_errors", "n_timeouts", "n_shed", "n_retries",
+              "blocks_quarantined"):
+        assert k in empty and empty[k] == 0
+    m.note_shed()
+    m.note_quarantine(3)
+    assert m.summary(1.0)["n_shed"] == 1
+    assert m.summary(1.0)["blocks_quarantined"] == 3
+
+
+def test_kv_lost_retry_cap_surfaces_error(small):
+    """Satellite 1: losing a request's decode KV more often than
+    `max_retries` allows must retire it with finish_reason="error" (not
+    loop forever) and leak nothing."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        oas=OASConfig(defer_window=0.0, max_retries=1))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(21)
+    prompt = tuple(rng.integers(0, cfg.vocab_size, 10))
+    rid = srv.add_request(prompt, SamplingParams(max_tokens=8))
+    finish, injections = None, 0
+    for _ in range(200):
+        if any(rid in eng.rid_slot for eng in srv.decodes):
+            srv.inject_kv_lost(rid)
+            injections += 1
+        for out in srv.step():
+            if out.rid == rid and out.finished:
+                finish = out.finish_reason
+        if finish is not None:
+            break
+    assert finish == "error"
+    assert injections == 2          # retry 1 granted, retry 2 over the cap
+    assert not srv.proxy.inflight
+    s = srv.metrics.summary(1.0)
+    assert s["n_errors"] == 1 and s["n_retries"] >= 1
+    _assert_no_leaks(srv)
+
+
+def test_orphan_handoff_sweep_reclaims_and_recovers(small):
+    """Satellite 2: dropping a parked prefill→decode handoff WITHOUT
+    releasing its pool key (the rename-stage leak) must be reclaimed by the
+    orphan sweep, and the request must still complete via the kv-lost
+    reroute — with pool invariants intact throughout."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(22)
+    rid = srv.add_request(tuple(rng.integers(0, cfg.vocab_size, 12)),
+                          SamplingParams(max_tokens=4))
+    dropped, finish = False, None
+    for _ in range(200):
+        if not dropped and rid in srv._pending_kv:
+            assert srv.inject_handoff_drop(rid)
+            assert rid not in srv._pending_kv
+            dropped = True
+        for out in srv.step():
+            if out.rid == rid and out.finished:
+                finish = out.finish_reason
+        srv.kv_arena.pool.check_invariants()
+        if finish is not None:
+            break
+    assert dropped, "handoff never parked — test lost its injection point"
+    assert srv.n_handoffs_swept >= 1
+    assert finish == "length"
+    assert srv.metrics.summary(1.0)["n_retries"] >= 1
+    _assert_no_leaks(srv)
+
+
+def test_watchdog_retires_stuck_request(small):
+    """With every decode instance dead and no revival, a prefilled request
+    can never progress past DECODE_WAIT: the step-count watchdog must
+    retire it with finish_reason="timeout" and release its parked KV."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        watchdog_steps=5,
+                        oas=OASConfig(defer_window=0.0, max_retries=10))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    srv.inject_instance_failure("decode", 0)
+    rng = np.random.default_rng(23)
+    rid = srv.add_request(tuple(rng.integers(0, cfg.vocab_size, 8)),
+                          SamplingParams(max_tokens=6))
+    finish = None
+    for _ in range(60):
+        for out in srv.step():
+            if out.rid == rid and out.finished:
+                finish = out.finish_reason
+        if finish is not None:
+            break
+    assert finish == "timeout"
+    assert not srv.proxy.inflight
+    assert srv.metrics.summary(1.0)["n_timeouts"] == 1
+    _assert_no_leaks(srv)
+
+
+def test_backpressure_shedding(small):
+    """Typed load shedding at the door: a prompt no release sequence could
+    ever fit raises BackpressureError, as does an admission backlog over
+    `admission_queue_cap` — and the shed requests never enter the proxy."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=2, max_len=96,
+                        kv_blocks=6, admission_queue_cap=2,
+                        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(24)
+    # 6 blocks × 16 tokens = 96-token ceiling → a 200-token prompt is
+    # infeasible no matter what frees up
+    with pytest.raises(BackpressureError):
+        srv.add_request(tuple(rng.integers(0, cfg.vocab_size, 200)),
+                        SamplingParams(max_tokens=2))
+    assert not srv.proxy.inflight
+    short = [tuple(rng.integers(0, cfg.vocab_size, 6)) for _ in range(3)]
+    r0 = srv.add_request(short[0], SamplingParams(max_tokens=2))
+    r1 = srv.add_request(short[1], SamplingParams(max_tokens=2))
+    with pytest.raises(BackpressureError):     # backlog 2 >= cap 2
+        srv.add_request(short[2], SamplingParams(max_tokens=2))
+    assert srv.metrics.summary(1.0)["n_shed"] == 2
+    # the admitted pair still serves normally after the shed
+    done = set()
+    for _ in range(200):
+        done |= {o.rid for o in srv.step() if o.finished}
+        if done == {r0, r1}:
+            break
+    assert done == {r0, r1}
+    _assert_no_leaks(srv)
+
+
+def test_corruption_detected_quarantined_bit_identical(small):
+    """KV corruption under a live decode request: the summary-plane scan
+    must detect exactly the corrupted block, quarantine+scrub it, restart
+    the mapping request, and the replayed greedy output must be
+    bit-identical to an unfaulted run."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        oas=OASConfig(defer_window=0.0, max_retries=4))
+    rng = np.random.default_rng(25)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 14)), 6) for _ in range(2)]
+
+    base = Server(cfg, scfg, pattern=[0, 0])
+    _, _, _ = _drive(base, reqs)
+    ref = {r.rid: tuple(r.output_tokens) for r in base.metrics.done}
+
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    kv = srv.kv_arena.kv
+    assert any(e is not None and "kmin" in e for e in kv["period"]), \
+        "pattern=[0,0] should give every layer a summary plane"
+    t0 = time.monotonic()
+    for i, (p, m) in enumerate(reqs):
+        srv.submit(i, p, m, t0)
+    corrupted = None
+    for _ in range(300):
+        if corrupted is None:
+            pool = srv.kv_arena.pool
+            for eng in srv.decodes:
+                for rid in list(eng.rid_slot):
+                    owned = pool.owned(rid)
+                    if owned:
+                        corrupted = owned[0]
+                        break
+            if corrupted is not None:
+                corrupt_block(srv.kv_arena, corrupted, offset=0.75)
+                bad = srv.recover_corruption()
+                assert bad == [corrupted]
+                assert corrupted in pool.quarantined
+                assert corrupted not in pool.refcount
+                srv.kv_arena.check_summaries()   # scrubbed block is coherent
+        srv.step()
+        if not srv.proxy.inflight:
+            break
+    assert corrupted is not None, "no decode-resident block to corrupt"
+    assert not srv.proxy.inflight
+    outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+    assert outs == ref, "post-corruption replay diverged from fault-free run"
+    assert srv.metrics.summary(1.0)["blocks_quarantined"] == 1
+    _assert_no_leaks(srv)
+
+
+def test_alloc_failure_burst_recovers(small):
+    """A burst of injected allocation failures (transient HBM pressure)
+    must only defer/preempt — every request still completes and the pool
+    balances."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        oas=OASConfig(defer_window=0.0, max_retries=4))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    srv.kv_arena.pool.inject_alloc_failures = 3
+    rng = np.random.default_rng(26)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 12)), 5) for _ in range(3)]
+    _, _, finishes = _drive(srv, reqs)
+    assert srv.kv_arena.pool.inject_alloc_failures == 0, \
+        "armed failures never consumed — injection point dead"
+    assert {f[0] for f in finishes.values()} == {"length"}
+    assert len(finishes) == 3
+    _assert_no_leaks(srv)
+
+
+def test_disaggregated_failure_drill(small):
+    """Satellite 3: the serve_disaggregated example's failure drill as a
+    tier-1 test — streaming sampled requests over 2 prefill instances, a
+    mid-stream prefill death+revival, and an abort — asserting delivered
+    counters, no replayed deltas, and zero leaked blocks."""
+    cfg = small
+    scfg = ServerConfig(n_prefill=2, n_decode=1, decode_slots=4, max_len=96,
+                        chunk_tokens=8, prefill_tick_budget=8,
+                        oas=OASConfig(defer_window=0.0, max_retries=4))
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    rng = np.random.default_rng(1)
+    prompts = [tuple(rng.integers(0, cfg.vocab_size,
+                                  int(rng.integers(6, 20))))
+               for _ in range(6)]
+    params = [SamplingParams(temperature=0.7, top_k=32, seed=i, max_tokens=4)
+              for i in range(6)]
+    deltas: dict = {}
+    finishes: dict = {}
+    kicked = aborted = None
+    for out in srv.generate(prompts, params, max_wall_s=120):
+        deltas.setdefault(out.rid, []).extend(out.new_tokens)
+        if out.finished:
+            finishes[out.rid] = (out.finish_reason, out.n_generated)
+        if kicked is None and out.new_tokens:
+            kicked = out.rid
+            srv.inject_instance_failure("prefill", 0)
+            srv.revive_instance("prefill", 0)
+        if aborted is None and kicked is not None:
+            quiet = [r for r in range(6)
+                     if r not in finishes and not deltas.get(r)]
+            if quiet:
+                aborted = quiet[0]
+                assert srv.abort(aborted)
+    assert len(finishes) == 6
+    for rid, (reason, n_out) in finishes.items():
+        if rid == aborted:
+            assert reason == "abort"
+            assert len(deltas.get(rid, [])) <= n_out
+        else:
+            assert reason in ("stop", "length")
+            # delivered-counter contract: the streamed deltas ARE the
+            # output — nothing replayed, nothing missing
+            assert len(deltas[rid]) == n_out == 4
+    done = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+    for rid, toks in done.items():
+        assert tuple(deltas[rid]) == toks
+    s = srv.metrics.summary(1.0)
+    assert s["n_done"] == 5 and len(srv.metrics.aborted) == 1
+    _assert_no_leaks(srv)
+
+
+# ---------------------------------------------------------------------
+SOAK_SEEDS = (1, 2, 5, 7, 9)
+
+
+def _soak_server(cfg, faults=None):
+    scfg = ServerConfig(n_prefill=2, n_decode=2, decode_slots=4, max_len=128,
+                        chunk_tokens=32, prefill_tick_budget=64, kv_blocks=96,
+                        watchdog_steps=200,
+                        oas=OASConfig(defer_window=0.0, max_retries=10))
+    return Server(cfg, scfg, pattern=[0, 0], faults=faults)
+
+
+def _soak_workload(vocab):
+    rng = np.random.default_rng(42)
+    return [(tuple(rng.integers(0, vocab, 24)), 12) for _ in range(8)]
+
+
+def test_chaos_soak_bit_identical(small):
+    """The headline contract: across ≥5 fault seeds mixing instance kills,
+    KV corruption, KV loss, handoff drops, allocation failures and
+    stragglers, every request completes with greedy output bit-identical
+    to the fault-free run, no streamed delta is ever replayed, and the
+    quiescent pool passes invariants (zero stale summaries, zero leaks)."""
+    cfg = small
+    reqs = _soak_workload(cfg.vocab_size)
+
+    base = _soak_server(cfg)
+    _, base_deltas, base_fin = _drive(base, reqs)
+    ref = {r.rid: tuple(r.output_tokens) for r in base.metrics.done}
+    assert len(ref) == 8
+    _assert_no_leaks(base)
+
+    for seed in SOAK_SEEDS:
+        plane = FaultPlane(FaultConfig(seed=seed, horizon=20))
+        srv = _soak_server(cfg, faults=plane)
+        _, deltas, finishes = _drive(srv, reqs)
+        outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+        assert len(outs) == 8, \
+            f"seed {seed}: {8 - len(outs)} requests did not complete " \
+            f"({ {r: f for r, f in finishes.items() if f[0] not in ('stop', 'length')} })"
+        assert outs == ref, f"seed {seed}: outputs diverged from fault-free run"
+        for rid, toks in outs.items():
+            assert tuple(deltas[rid]) == toks, \
+                f"seed {seed}: rid {rid} streamed deltas replayed or lost"
+        assert sum(plane.injected.values()) > 0, \
+            f"seed {seed}: chaos run injected nothing"
+        pool = srv.kv_arena.pool
+        assert len(pool.quarantined) == srv.metrics.blocks_quarantined
+        s = srv.metrics.summary(1.0)
+        assert s["n_errors"] == 0 and s["n_timeouts"] == 0
+        _assert_no_leaks(srv)
