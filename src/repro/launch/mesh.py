@@ -1,21 +1,45 @@
 """Production mesh builders (functions — importing this module never touches
-jax device state)."""
+jax device state).
+
+The (data, model) axes double as the serving engine's parallel axes:
+``data`` is the expert-parallel (EP) axis, ``model`` is tensor parallelism
+(TP) — see repro.distributed.ctx.MeshCtx. Pass explicit ``tp``/``ep`` to
+carve a serving mesh out of whatever devices the process sees (the launcher
+exposes these as --tp/--ep); the default shapes are the paper's pod-scale
+deployment footprints.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 
 from repro.distributed.ctx import MeshCtx
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def make_production_mesh(*, multi_pod: bool = False,
+                         tp: Optional[int] = None, ep: Optional[int] = None):
+    if tp is not None or ep is not None:
+        if multi_pod:
+            raise ValueError("--tp/--ep sizing and multi_pod are exclusive")
+        shape = (ep or 1, tp or 1)
+        axes = ("data", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = 1
     for s in shape:
         n *= s
-    devices = jax.devices()[:n]   # single-pod mesh uses the first 256 of 512
-    return jax.make_mesh(shape, axes, devices=devices)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {n} devices, have "
+            f"{len(devices)} (on CPU: XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
 
 
-def make_production_ctx(*, multi_pod: bool = False) -> MeshCtx:
-    return MeshCtx(make_production_mesh(multi_pod=multi_pod))
+def make_production_ctx(*, multi_pod: bool = False,
+                        tp: Optional[int] = None,
+                        ep: Optional[int] = None) -> MeshCtx:
+    return MeshCtx(make_production_mesh(multi_pod=multi_pod, tp=tp, ep=ep))

@@ -24,6 +24,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width (the mesh 'model' axis)")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel width (the mesh 'data' axis)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=6)
     ap.add_argument("--prefill", type=int, default=1)
@@ -44,10 +48,15 @@ def main(argv=None):
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     oas = OASConfig(defer_window=0.0, cache_aware=not args.no_proxy,
                     lpt=not args.no_proxy, deferred=False)
+    placement = None
+    if args.tp > 1 or args.ep > 1:
+        from repro.launch.mesh import make_production_ctx
+        placement = make_production_ctx(tp=args.tp, ep=args.ep)
     srv = Server(cfg, ServerConfig(n_prefill=args.prefill,
                                    n_decode=args.decode,
                                    decode_slots=args.slots,
-                                   max_len=args.max_len, oas=oas))
+                                   max_len=args.max_len, oas=oas),
+                 placement=placement)
     rng = np.random.default_rng(args.seed)
     shared = tuple(rng.integers(0, min(cfg.vocab_size, 500), 16).tolist())
     stop = (args.stop_token,) if args.stop_token >= 0 else ()

@@ -34,6 +34,14 @@ def decode_strategy(n_kv: int, tp: int) -> str:
     return "kv" if n_kv % tp == 0 else "wseq"
 
 
+def arena_kv_part(n_kv: int, tp: int):
+    """Mesh axis (or None) the KV-head dim of paged KV arenas and their
+    block summaries shards over. Blocks stay replicated along the block
+    dim — any rank can serve any block-table row — so TP only splits the
+    head dim, and only under the 'kv' decode strategy."""
+    return "model" if tp > 1 and decode_strategy(n_kv, tp) == "kv" else None
+
+
 # ----------------------------------------------------------------------
 def chunked_attention(
     q, k, v, *,

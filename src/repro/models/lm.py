@@ -50,7 +50,13 @@ class LM:
         return d
 
     def init(self, rng) -> dict:
-        return init_params(self.param_defs, rng)
+        """Fresh params, laid out per `shardings()` on multi-device meshes
+        (attention heads over `model`, MoE expert slots over `data`) so
+        every downstream jit sees the canonical placement from step one."""
+        params = init_params(self.param_defs, rng)
+        if self.mesh.n_devices > 1:
+            params = jax.device_put(params, self.shardings())
+        return params
 
     def specs(self) -> dict:
         return param_specs(self.param_defs)

@@ -207,9 +207,18 @@ def cache_struct(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, B: int,
     return sds, sps
 
 
+def _alloc_placed(mesh, sds, sps):
+    """zeros for every ShapeDtypeStruct leaf, laid out on the mesh per its
+    PartitionSpec (single-device meshes skip the device_put)."""
+    zeros = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+    if mesh.n_devices == 1:
+        return zeros
+    return jax.device_put(zeros, mesh.tree_shardings(sps))
+
+
 def alloc_cache(cfg, mesh, plan, B, max_len, dtype=None):
-    sds, _ = cache_struct(cfg, mesh, plan, B, max_len, dtype)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+    sds, sps = cache_struct(cfg, mesh, plan, B, max_len, dtype)
+    return _alloc_placed(mesh, sds, sps)
 
 
 # ----------------------------------------------------------------------
@@ -239,8 +248,7 @@ def layer_cache_shape_paged(cfg: ModelConfig, mesh: MeshCtx, spec: LayerSpec,
         N = n_slots * ring_block_count(sink, recent, block_size)
     else:
         N = n_arena_blocks
-    kv_part = "model" if attn_mod.decode_strategy(K, mesh.tp) == "kv" else None
-    sp = P(None, kv_part, None, None)
+    sp = P(None, attn_mod.arena_kv_part(K, mesh.tp), None, None)
     return {"k": ((N, K, block_size, h), sp),
             "v": ((N, K, block_size, h), sp)}
 
@@ -273,9 +281,9 @@ def paged_cache_struct(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan,
 
 def alloc_paged_cache(cfg, mesh, plan, n_slots, max_len, n_arena_blocks,
                       block_size, dtype=None):
-    sds, _ = paged_cache_struct(cfg, mesh, plan, n_slots, max_len,
-                                n_arena_blocks, block_size, dtype)
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+    sds, sps = paged_cache_struct(cfg, mesh, plan, n_slots, max_len,
+                                  n_arena_blocks, block_size, dtype)
+    return _alloc_placed(mesh, sds, sps)
 
 
 # ----------------------------------------------------------------------
@@ -319,22 +327,37 @@ def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
     decode scoring path)."""
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     K, h = cfg.n_kv_heads, cfg.head_dim
+    kv_part = attn_mod.arena_kv_part(K, mesh.tp)
 
     def one(spec, stacked):
         if not full_attn_layer(cfg, spec):
-            return None
+            return None, None
         shp = (n_arena_blocks, K, block_size, h)
         sshp = (n_arena_blocks, K, h)
+        lead = ()
         if stacked:
             shp = (plan.n_rep,) + shp
             sshp = (plan.n_rep,) + sshp
-        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
-                "kmin": jnp.zeros(sshp, jnp.float32),
-                "kmax": jnp.zeros(sshp, jnp.float32),
-                "kmean": jnp.zeros(sshp, jnp.float32)}
+            lead = (None,)
+        kv_sp = P(*lead, None, kv_part, None, None)
+        sm_sp = P(*lead, None, kv_part, None)
+        entry = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype),
+                 "kmin": jnp.zeros(sshp, jnp.float32),
+                 "kmax": jnp.zeros(sshp, jnp.float32),
+                 "kmean": jnp.zeros(sshp, jnp.float32)}
+        sps = {"k": kv_sp, "v": kv_sp,
+               "kmin": sm_sp, "kmax": sm_sp, "kmean": sm_sp}
+        return entry, sps
 
-    return {"period": tuple(one(s, True) for s in plan.period),
-            "rem": tuple(one(s, False) for s in plan.rem)}
+    period = [one(s, True) for s in plan.period]
+    rem = [one(s, False) for s in plan.rem]
+    arena = {"period": tuple(p[0] for p in period),
+             "rem": tuple(r[0] for r in rem)}
+    sps = {"period": tuple(p[1] for p in period),
+           "rem": tuple(r[1] for r in rem)}
+    if mesh.n_devices == 1:
+        return arena
+    return jax.device_put(arena, mesh.tree_shardings(sps))
 
 
 def topk_block_budget(oa, nb: int) -> Optional[int]:

@@ -1,12 +1,15 @@
 from repro.core.proxy.params import (BackpressureError, RequestOutput,
                                      SamplingParams)
-from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
-                                  PrefillEngine)
+from repro.serving.arena import BlockHandoff, KVArena
+from repro.serving.decode import DecodeEngine
 from repro.serving.faults import FaultConfig, FaultPlane, FaultSpec
+from repro.serving.placement import DevicePlacement
+from repro.serving.prefill import PrefillEngine, PrefillResult, PrefillTask
 from repro.serving.server import Server, ServerConfig
 from repro.serving.sparsity import SparsityController, SparsityPlan
 
-__all__ = ["BlockHandoff", "DecodeEngine", "KVArena", "PrefillEngine",
+__all__ = ["BlockHandoff", "DecodeEngine", "DevicePlacement", "KVArena",
+           "PrefillEngine", "PrefillResult", "PrefillTask",
            "Server", "ServerConfig", "SamplingParams", "RequestOutput",
            "BackpressureError", "FaultConfig", "FaultPlane", "FaultSpec",
            "SparsityController", "SparsityPlan"]

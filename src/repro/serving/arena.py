@@ -1,0 +1,237 @@
+"""Shared paged-KV arena runtime + block/dense interchange + PD handoff.
+
+KVArena owns the per-layer full-attention block arenas and their allocator
+(KVPool), shared by EVERY paged engine of one host. Prefill writes chunk KV
+straight into the arenas through per-task block tables, decode reads/extends
+them through per-slot tables, and admission is a zero-copy block-table
+transfer (BlockHandoff: pool ownership renames from the handoff key to the
+decode rid). Engines follow a compose/split discipline: a jit call takes
+(private ∪ arena) and writes the donated arena leaves back here, so
+sequential engines never hold stale buffers.
+
+Every arena jit is built through the owning `DevicePlacement`'s donate_jit
+choke point with the arena's PartitionSpec tree pinned as out-shardings —
+on a TP mesh the KV-head dim stays sharded over `model` through every
+copy/scrub, and the donated buffers are reused in place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+from repro.models.stack import alloc_arena_kv
+from repro.serving.kvpool import KVPool
+from repro.serving.placement import DevicePlacement
+
+
+def _bucket(n: int, lo: int = 32) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+def _pow2_floor(n: int) -> int:
+    b = 1
+    while b * 2 <= n:
+        b *= 2
+    return b
+
+
+def kv_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def dense_kv_to_blocks(x, n_blocks: int, block_size: int):
+    """[..., L, K, h] (dense token-major KV) → [..., n_blocks, K, bs, h]
+    (kv-head-major arena blocks); the tail is zero-padded to block_size."""
+    L, K, h = x.shape[-3:]
+    pad = n_blocks * block_size - L
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+    x = x.reshape(x.shape[:-3] + (n_blocks, block_size, K, h))
+    return jnp.moveaxis(x, -3, -2)
+
+
+def blocks_to_dense_kv(x, L: int):
+    """Inverse of dense_kv_to_blocks: [..., nb, K, bs, h] → [..., L, K, h]."""
+    x = jnp.moveaxis(x, -2, -3)
+    nb, bs, K, h = x.shape[-4:]
+    return x.reshape(x.shape[:-4] + (nb * bs, K, h))[..., :L, :, :]
+
+
+# ======================================================================
+@dataclass
+class KVArena:
+    """Shared physically-paged KV runtime: the per-layer full-attention
+    block arenas plus their allocator, shared by EVERY paged engine of one
+    host. Prefill writes chunk KV straight into the arenas through
+    per-task block tables, decode reads/extends them through per-slot
+    tables, and admission is a zero-copy block-table transfer. Engines
+    follow a compose/split discipline: a jit call takes (private ∪ arena)
+    and writes the donated arena leaves back here, so sequential engines
+    never hold stale buffers.
+
+    `reclaimers` are backpressure callbacks (prefix stores registering
+    `evict_for_blocks`): when an allocation cannot be served, the caller
+    asks the arena to reclaim before deferring/preempting."""
+    lm: LM
+    pool: KVPool
+    kv: dict                 # alloc_arena_kv leaves [n_rep?, N, K, bs, h]
+    block_size: int
+    reclaimers: list = field(default_factory=list)
+    placement: Optional[DevicePlacement] = None
+
+    @staticmethod
+    def build(lm: LM, n_blocks: int, block_size: int = 16,
+              placement: Optional[DevicePlacement] = None) -> "KVArena":
+        pool = KVPool(n_blocks=n_blocks, block_size=block_size)
+        # +1: arena block 0 is the reserved null block (never allocated)
+        kv = alloc_arena_kv(lm.cfg, lm.mesh, lm.plan, n_blocks + 1,
+                            block_size)
+        return KVArena(lm, pool, kv, block_size, placement=placement)
+
+    def __post_init__(self):
+        if self.placement is None:
+            self.placement = DevicePlacement.of(self.lm.mesh)
+        leaves = jax.tree.leaves(self.kv)
+        n = self.pool.n_blocks + 1
+        # bytes one arena block pins across every full-attention layer
+        self.block_nbytes = sum(x.size // n * x.dtype.itemsize
+                                for x in leaves)
+        specs = self.placement.arena_specs(self.lm.cfg, self.lm.plan)
+        self._copy = self.placement.donate_jit(
+            self._copy_impl, donate_argnums=(0,), out_specs=specs)
+        self._scrub = self.placement.donate_jit(
+            self._scrub_impl, donate_argnums=(0,), out_specs=specs)
+
+    def _copy_impl(self, kv, src, dst):
+        # every arena leaf — KV [n_rep?, N, K, bs, h] AND the block-summary
+        # plane [n_rep?, N, K, h] — carries the block axis at position 1
+        # (stacked period entries) or 0 (rem), so the copy is structural,
+        # not ndim-dispatched
+        def blk(x, stacked):
+            if stacked:
+                return x.at[:, dst].set(x[:, src])
+            return x.at[dst].set(x[src])
+        per = tuple(None if e is None else
+                    {k: blk(v, True) for k, v in e.items()}
+                    for e in kv["period"])
+        rem = tuple(None if e is None else
+                    {k: blk(v, False) for k, v in e.items()}
+                    for e in kv["rem"])
+        return {"period": per, "rem": rem}
+
+    def copy_block(self, src: int, dst: int):
+        """Device-copy one physical block across every layer arena (the
+        partial-tail copy-on-write for prefix-store resume borrowers).
+        The block-summary plane rides along: a copied block's content is
+        bit-identical to its source, so copying the summary IS the
+        invalidate-and-recompute — the zero-stale-summary invariant holds
+        through CoW without touching the keys."""
+        if jax.tree.leaves(self.kv):
+            self.kv = self._copy(self.kv, jnp.int32(src), jnp.int32(dst))
+
+    def _scrub_impl(self, kv, b):
+        # zero every leaf of one block — content AND summary plane — so a
+        # quarantined block satisfies summary == reduce(content) forever
+        def blk(x, stacked):
+            if stacked:
+                return x.at[:, b].set(0)
+            return x.at[b].set(0)
+        per = tuple(None if e is None else
+                    {k: blk(v, True) for k, v in e.items()}
+                    for e in kv["period"])
+        rem = tuple(None if e is None else
+                    {k: blk(v, False) for k, v in e.items()}
+                    for e in kv["rem"])
+        return {"period": per, "rem": rem}
+
+    def scrub_block(self, b: int):
+        """Zero one physical block across every layer arena (corruption
+        quarantine: the block leaves circulation, and zeroed content with a
+        zeroed summary keeps `check_summaries` green — all-zero keys reduce
+        to all-zero min/max/mean)."""
+        if jax.tree.leaves(self.kv):
+            self.kv = self._scrub(self.kv, jnp.int32(b))
+
+    def find_corrupt_blocks(self) -> list:
+        """Summary-plane corruption scan: block ids whose stored key
+        summaries disagree with a fresh reduction of the block's key
+        content. A fault (bit-flip, lost write, partial DMA) that mutates K
+        without going through a summary-maintaining write path trips this —
+        the detection half of the FaultPlane corruption story. Host scan
+        (fetches the key arenas); call at recovery points, not per step."""
+        n = self.pool.n_blocks + 1
+        bad = np.zeros(n, bool)
+
+        def one(entry, stacked):
+            if entry is None or "kmin" not in entry:
+                return
+            k = np.asarray(entry["k"], np.float32)
+            mism = (np.asarray(entry["kmin"], np.float32) != k.min(axis=-2)) \
+                | (np.asarray(entry["kmax"], np.float32) != k.max(axis=-2))
+            # reduce every axis except the block axis
+            ax = 1 if stacked else 0
+            red = tuple(i for i in range(mism.ndim) if i != ax)
+            np.logical_or(bad, mism.any(axis=red), out=bad)
+        for e in self.kv["period"]:
+            one(e, True)
+        for e in self.kv["rem"]:
+            one(e, False)
+        return [int(b) for b in np.nonzero(bad)[0]]
+
+    def check_summaries(self):
+        """Zero-stale-summary invariant: for EVERY arena block of every
+        full-attention layer, the stored per-block key summaries equal a
+        fresh reduction of the block's key content. Holds at any quiescent
+        point because every path that writes arena K recomputes the touched
+        blocks' summaries in the same jit (prefill chunk writes, decode
+        appends, dense-scatter admission) and copy_block copies content and
+        summary together. Test/diagnostic helper — fetches the arenas."""
+        def one(entry):
+            if entry is None or "kmin" not in entry:
+                return
+            k = np.asarray(entry["k"], np.float32)
+            np.testing.assert_array_equal(np.asarray(entry["kmin"]),
+                                          k.min(axis=-2),
+                                          err_msg="stale kmin summary")
+            np.testing.assert_array_equal(np.asarray(entry["kmax"]),
+                                          k.max(axis=-2),
+                                          err_msg="stale kmax summary")
+            np.testing.assert_allclose(np.asarray(entry["kmean"]),
+                                       k.mean(axis=-2), rtol=1e-5, atol=1e-6,
+                                       err_msg="stale kmean summary")
+        for e in self.kv["period"]:
+            one(e)
+        for e in self.kv["rem"]:
+            one(e)
+
+    def reclaim(self, n_blocks: int) -> int:
+        """Free up to `n_blocks` pool blocks by evicting shared cache
+        state (LRU prefix-store entries first). → blocks actually freed."""
+        freed = 0
+        for cb in self.reclaimers:
+            if freed >= n_blocks:
+                break
+            freed += cb(n_blocks - freed)
+        return freed
+
+
+@dataclass
+class BlockHandoff:
+    """Zero-copy PD handoff record: a finished prefill's pool-owned block
+    table plus the bounded private leaves (ring KV, mamba state, position).
+    Admission transfers pool ownership from `key` to the decode rid — no
+    full-attention KV byte is copied (`handoff_copy_bytes == 0`); the
+    dense-pytree handoff survives as the paged=False / cross-arena compat
+    path."""
+    key: tuple                         # pool ownership key ("handoff", i)
+    blocks: tuple                      # physical block ids, logical order
+    private: dict                      # B=1 cache without full-attn entries
+    pos: int                           # resident tokens

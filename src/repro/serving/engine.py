@@ -1,1478 +1,32 @@
-"""In-process serving engines (CPU-real, small models) — the execution layer
-under OmniProxy, built for continuous batching over a shared paged-KV arena.
+"""Back-compat shim: the monolithic engine module split into per-phase
+modules constructed over the explicit device-placement layer.
 
-PrefillEngine processes prompts in fixed-size token chunks (jit'd once per
-chunk bucket, cache threaded between chunks through LM.prefill_resume) and
-schedules queued prompts shortest-remaining-first at chunk granularity, so a
-short prompt never sits behind a long in-flight prefill. With a KVArena the
-prefill phase is itself PAGED: each chunk reserves real KVPool blocks and
-writes its KV straight into the per-layer block arenas through a per-task
-block table (kernels/paged_prefill.py / paged_prefill_attention), so an
-in-flight prompt pins blocks ∝ its length — never a dense max_len cache —
-and a reservation the pool cannot serve DEFERS the task (backpressure)
-instead of over-committing HBM. Completed prefixes land in a radix-backed
-PrefixKVStore as refcounted block lists sized by real bytes: a later prompt
-sharing an N-token prefix maps the entry's full blocks (copying only the
-partial tail) and resumes prefill at token N.
+  serving/placement.py — DevicePlacement (MeshCtx owner, per-leaf sharding
+                         specs, the donate_jit choke point)
+  serving/arena.py     — KVArena, BlockHandoff, block/dense interchange
+  serving/prefill.py   — PrefillEngine, PrefillTask, PrefillResult
+  serving/decode.py    — DecodeEngine
 
-DecodeEngine admits pending caches in one donated jit call per batch, keeps
-slot state (pos / cur_tok / active) device-side so the hot step has a single
-[n_slots] host fetch (the sampled tokens), and masks inactive slots. With
-paged=True (default) attention KV lives in physically paged per-layer
-arenas; the decode step reads only resident blocks through per-slot block
-tables, and a step that cannot grow its allocation preempts the request
-(cache gathered back out of the arenas for re-admission) after LRU store
-reclaim fails, instead of over-committing HBM. See docs/serving.md.
-
-PD handoff: with a shared arena, admission is a ZERO-COPY block-table
-transfer (BlockHandoff: pool ownership renames from the handoff key to the
-decode rid; only bounded ring/mamba leaves are inserted). The B=1 dense
-cache pytree survives as the paged=False / preemption-re-admission compat
-format, scattered into arena blocks (prefix-sharing admissions MAP a live
-lender's full prefix blocks instead of copying). The transfer-cost model
-meters TRUE resident bytes next to the legacy padded figure.
+Every public name keeps resolving from here; new code should import from
+the per-phase modules directly. tests/test_engine_shim.py asserts this
+module stays a ≤100-line re-export surface in sync with the real modules.
 """
-from __future__ import annotations
-
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core.proxy.params import GREEDY, SamplingParams, device_row
-from repro.core.proxy.radix import RadixTree
-from repro.models import attention as attn_mod
-from repro.models.lm import LM
-from repro.models.stack import (alloc_arena_kv, alloc_cache,
-                                alloc_paged_private_cache,
-                                alloc_prefill_private_cache, cache_struct,
-                                cache_window, full_attn_layer,
-                                merge_arena_cache, ring_block_count,
-                                split_arena_cache)
-from repro.serving.kvpool import KVPool, PrefixKVStore, _pytree_bytes
-from repro.serving.sampling import sample_tokens
-from repro.serving.sparsity import SparsityController
-
-
-def _bucket(n: int, lo: int = 32) -> int:
-    b = lo
-    while b < n:
-        b *= 2
-    return b
-
-
-def _pow2_floor(n: int) -> int:
-    b = 1
-    while b * 2 <= n:
-        b *= 2
-    return b
-
-
-def kv_bytes(cache) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
-
-
-def dense_kv_to_blocks(x, n_blocks: int, block_size: int):
-    """[..., L, K, h] (dense token-major KV) → [..., n_blocks, K, bs, h]
-    (kv-head-major arena blocks); the tail is zero-padded to block_size."""
-    L, K, h = x.shape[-3:]
-    pad = n_blocks * block_size - L
-    if pad:
-        x = jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
-    x = x.reshape(x.shape[:-3] + (n_blocks, block_size, K, h))
-    return jnp.moveaxis(x, -3, -2)
-
-
-def blocks_to_dense_kv(x, L: int):
-    """Inverse of dense_kv_to_blocks: [..., nb, K, bs, h] → [..., L, K, h]."""
-    x = jnp.moveaxis(x, -2, -3)
-    nb, bs, K, h = x.shape[-4:]
-    return x.reshape(x.shape[:-4] + (nb * bs, K, h))[..., :L, :, :]
-
-
-# ======================================================================
-@dataclass
-class KVArena:
-    """Shared physically-paged KV runtime: the per-layer full-attention
-    block arenas plus their allocator, shared by EVERY paged engine of one
-    host. Prefill writes chunk KV straight into the arenas through
-    per-task block tables, decode reads/extends them through per-slot
-    tables, and admission is a zero-copy block-table transfer. Engines
-    follow a compose/split discipline: a jit call takes (private ∪ arena)
-    and writes the donated arena leaves back here, so sequential engines
-    never hold stale buffers.
-
-    `reclaimers` are backpressure callbacks (prefix stores registering
-    `evict_for_blocks`): when an allocation cannot be served, the caller
-    asks the arena to reclaim before deferring/preempting."""
-    lm: LM
-    pool: KVPool
-    kv: dict                 # alloc_arena_kv leaves [n_rep?, N, K, bs, h]
-    block_size: int
-    reclaimers: list = field(default_factory=list)
-
-    @staticmethod
-    def build(lm: LM, n_blocks: int, block_size: int = 16) -> "KVArena":
-        pool = KVPool(n_blocks=n_blocks, block_size=block_size)
-        # +1: arena block 0 is the reserved null block (never allocated)
-        kv = alloc_arena_kv(lm.cfg, lm.mesh, lm.plan, n_blocks + 1,
-                            block_size)
-        return KVArena(lm, pool, kv, block_size)
-
-    def __post_init__(self):
-        leaves = jax.tree.leaves(self.kv)
-        n = self.pool.n_blocks + 1
-        # bytes one arena block pins across every full-attention layer
-        self.block_nbytes = sum(x.size // n * x.dtype.itemsize
-                                for x in leaves)
-        self._copy = jax.jit(self._copy_impl, donate_argnums=(0,))
-        self._scrub = jax.jit(self._scrub_impl, donate_argnums=(0,))
-
-    def _copy_impl(self, kv, src, dst):
-        # every arena leaf — KV [n_rep?, N, K, bs, h] AND the block-summary
-        # plane [n_rep?, N, K, h] — carries the block axis at position 1
-        # (stacked period entries) or 0 (rem), so the copy is structural,
-        # not ndim-dispatched
-        def blk(x, stacked):
-            if stacked:
-                return x.at[:, dst].set(x[:, src])
-            return x.at[dst].set(x[src])
-        per = tuple(None if e is None else
-                    {k: blk(v, True) for k, v in e.items()}
-                    for e in kv["period"])
-        rem = tuple(None if e is None else
-                    {k: blk(v, False) for k, v in e.items()}
-                    for e in kv["rem"])
-        return {"period": per, "rem": rem}
-
-    def copy_block(self, src: int, dst: int):
-        """Device-copy one physical block across every layer arena (the
-        partial-tail copy-on-write for prefix-store resume borrowers).
-        The block-summary plane rides along: a copied block's content is
-        bit-identical to its source, so copying the summary IS the
-        invalidate-and-recompute — the zero-stale-summary invariant holds
-        through CoW without touching the keys."""
-        if jax.tree.leaves(self.kv):
-            self.kv = self._copy(self.kv, jnp.int32(src), jnp.int32(dst))
-
-    def _scrub_impl(self, kv, b):
-        # zero every leaf of one block — content AND summary plane — so a
-        # quarantined block satisfies summary == reduce(content) forever
-        def blk(x, stacked):
-            if stacked:
-                return x.at[:, b].set(0)
-            return x.at[b].set(0)
-        per = tuple(None if e is None else
-                    {k: blk(v, True) for k, v in e.items()}
-                    for e in kv["period"])
-        rem = tuple(None if e is None else
-                    {k: blk(v, False) for k, v in e.items()}
-                    for e in kv["rem"])
-        return {"period": per, "rem": rem}
-
-    def scrub_block(self, b: int):
-        """Zero one physical block across every layer arena (corruption
-        quarantine: the block leaves circulation, and zeroed content with a
-        zeroed summary keeps `check_summaries` green — all-zero keys reduce
-        to all-zero min/max/mean)."""
-        if jax.tree.leaves(self.kv):
-            self.kv = self._scrub(self.kv, jnp.int32(b))
-
-    def find_corrupt_blocks(self) -> list:
-        """Summary-plane corruption scan: block ids whose stored key
-        summaries disagree with a fresh reduction of the block's key
-        content. A fault (bit-flip, lost write, partial DMA) that mutates K
-        without going through a summary-maintaining write path trips this —
-        the detection half of the FaultPlane corruption story. Host scan
-        (fetches the key arenas); call at recovery points, not per step."""
-        n = self.pool.n_blocks + 1
-        bad = np.zeros(n, bool)
-
-        def one(entry, stacked):
-            if entry is None or "kmin" not in entry:
-                return
-            k = np.asarray(entry["k"], np.float32)
-            mism = (np.asarray(entry["kmin"], np.float32) != k.min(axis=-2)) \
-                | (np.asarray(entry["kmax"], np.float32) != k.max(axis=-2))
-            # reduce every axis except the block axis
-            ax = 1 if stacked else 0
-            red = tuple(i for i in range(mism.ndim) if i != ax)
-            np.logical_or(bad, mism.any(axis=red), out=bad)
-        for e in self.kv["period"]:
-            one(e, True)
-        for e in self.kv["rem"]:
-            one(e, False)
-        return [int(b) for b in np.nonzero(bad)[0]]
-
-    def check_summaries(self):
-        """Zero-stale-summary invariant: for EVERY arena block of every
-        full-attention layer, the stored per-block key summaries equal a
-        fresh reduction of the block's key content. Holds at any quiescent
-        point because every path that writes arena K recomputes the touched
-        blocks' summaries in the same jit (prefill chunk writes, decode
-        appends, dense-scatter admission) and copy_block copies content and
-        summary together. Test/diagnostic helper — fetches the arenas."""
-        def one(entry):
-            if entry is None or "kmin" not in entry:
-                return
-            k = np.asarray(entry["k"], np.float32)
-            np.testing.assert_array_equal(np.asarray(entry["kmin"]),
-                                          k.min(axis=-2),
-                                          err_msg="stale kmin summary")
-            np.testing.assert_array_equal(np.asarray(entry["kmax"]),
-                                          k.max(axis=-2),
-                                          err_msg="stale kmax summary")
-            np.testing.assert_allclose(np.asarray(entry["kmean"]),
-                                       k.mean(axis=-2), rtol=1e-5, atol=1e-6,
-                                       err_msg="stale kmean summary")
-        for e in self.kv["period"]:
-            one(e)
-        for e in self.kv["rem"]:
-            one(e)
-
-    def reclaim(self, n_blocks: int) -> int:
-        """Free up to `n_blocks` pool blocks by evicting shared cache
-        state (LRU prefix-store entries first). → blocks actually freed."""
-        freed = 0
-        for cb in self.reclaimers:
-            if freed >= n_blocks:
-                break
-            freed += cb(n_blocks - freed)
-        return freed
-
-
-@dataclass
-class BlockHandoff:
-    """Zero-copy PD handoff record: a finished prefill's pool-owned block
-    table plus the bounded private leaves (ring KV, mamba state, position).
-    Admission transfers pool ownership from `key` to the decode rid — no
-    full-attention KV byte is copied (`handoff_copy_bytes == 0`); the
-    dense-pytree handoff survives as the paged=False / cross-arena compat
-    path."""
-    key: tuple                         # pool ownership key ("handoff", i)
-    blocks: tuple                      # physical block ids, logical order
-    private: dict                      # B=1 cache without full-attn entries
-    pos: int                           # resident tokens
-
-
-# ======================================================================
-@dataclass
-class PrefillTask:
-    rid: int
-    prompt: tuple
-    cache: object = None              # threaded B=1 cache (None until started)
-    logits: object = None             # last-token logits of the latest chunk
-    cursor: int = 0                   # tokens resident (incl. reused prefix)
-    reused: int = 0                   # prefix tokens resumed from the store
-    snap: int = 0                     # snapshot boundary (shared-prefix hint)
-    params: SamplingParams = GREEDY   # first-token decoding config
-    t_start: float = 0.0
-    compute_s: float = 0.0            # pure prefill compute (excl. queue wait)
-    handoff: object = None            # BlockHandoff once finished (paged)
-
-    @property
-    def remaining(self) -> int:
-        return len(self.prompt) - self.cursor
-
-
-@dataclass
-class PrefillResult:
-    rid: int
-    cache: object
-    first_token: int
-    prompt_len: int
-    reused: int
-    elapsed_s: float                  # prefill compute time (EWMA batch time)
-    t_done: float = 0.0               # wall time the first token materialized
-
-
-@dataclass
-class PrefillEngine:
-    _next_handoff_id = 0              # shared-pool-unique handoff keys
-    lm: LM
-    params: dict
-    tables: Optional[dict]
-    max_len: int
-    chunk_tokens: int = 64            # target chunk size (TTFT/TPOT knob)
-    enable_chunked: bool = True
-    allow_partial_reuse: bool = True
-    cache_cap: int = 32               # PrefixKVStore entries
-    cache_cap_bytes: Optional[int] = None   # PrefixKVStore byte cap (LRU)
-    tree: Optional[RadixTree] = None  # share the proxy's per-instance tree
-    arena: Optional[KVArena] = None   # shared paged-KV runtime → paged mode
-    block_size: int = 16              # accounting granularity (dense mode)
-    stats: dict = field(default_factory=lambda: {
-        "prefills": 0, "cache_hits": 0, "prefix_hits": 0, "reused_tokens": 0,
-        "tokens": 0, "chunks": 0, "busy_s": 0.0, "host_fetches": 0,
-        "blocks_mapped": 0, "prefill_kv_peak_blocks": 0, "defers": 0})
-
-    def __post_init__(self):
-        self._fn = jax.jit(self._prefill)
-        self._resume = jax.jit(self._resume_impl, donate_argnums=(2,),
-                               static_argnums=(5,))
-        self._first = jax.jit(self._first_impl)
-        self.queue: deque[PrefillTask] = deque()
-        self._ready: list[PrefillResult] = []
-        sup, limit = self.lm.chunked_prefill_support
-        self.chunk = _pow2_floor(max(min(self.chunk_tokens, limit), 1))
-        self.chunked = bool(self.enable_chunked and sup and self.chunk >= 8)
-        # paged prefill rides the chunked machinery (blocks grow per chunk);
-        # with chunking unsupported the engine falls back to dense prefill
-        # and the decode engine's dense-scatter admission compat path
-        self.paged = bool(self.arena is not None and self.chunked)
-        if self.paged:
-            self.block_size = self.arena.block_size
-            self._resume_paged = jax.jit(self._resume_paged_impl,
-                                         donate_argnums=(2,))
-        self.store = PrefixKVStore(
-            self.tree, self.cache_cap,
-            pool=self.arena.pool if self.paged else None,
-            capacity_bytes=self.cache_cap_bytes)
-        if self.paged:
-            self.arena.reclaimers.append(self.store.evict_for_blocks)
-
-    # ---- jit bodies --------------------------------------------------
-    def _prefill(self, params, tokens, true_len, tables):
-        cache, logits, _ = self.lm.prefill(params, {"tokens": tokens},
-                                           max_len=self.max_len, tables=tables,
-                                           true_len=true_len)
-        return cache, logits
-
-    def _resume_impl(self, params, tokens, cache, chunk_len, tables,
-                     attend_limit):
-        cache, logits, _ = self.lm.prefill_resume(
-            params, {"tokens": tokens}, cache, max_len=self.max_len,
-            tables=tables, chunk_len=chunk_len, attend_limit=attend_limit)
-        return cache, logits
-
-    def _resume_paged_impl(self, params, tokens, cache, chunk_len, tables,
-                           tbl_row):
-        """One paged chunk: full-attention cache leaves are the shared
-        arenas, the chunk's KV is written straight into the tabled blocks
-        (no dense max_len cache exists anywhere on this path)."""
-        cache, logits, _ = self.lm.prefill_resume(
-            params, {"tokens": tokens}, cache, max_len=self.max_len,
-            tables=tables, chunk_len=chunk_len, block_tables=tbl_row)
-        return cache, logits
-
-    def _first_impl(self, logits_tuple, temp, tk, tp, keys, fold):
-        """Fused first-token sampling over the stacked last-token logits of
-        a batch of finished prefills (pow2-padded)."""
-        logits = jnp.concatenate(logits_tuple, axis=0)
-        return sample_tokens(logits, temp, tk, tp, keys, fold)
-
-    # ---- paged-KV helpers --------------------------------------------
-    @staticmethod
-    def _pf_key(rid: int) -> tuple:
-        return ("prefill", rid)
-
-    def _resize_full_attn(self, cache, length: int, copy_rest: bool = False):
-        """Slice or zero-pad the full-attention KV leaves of a dense B=1
-        cache to `length` tokens (the prefix-store sizing fix: stored
-        prefixes pin prefix-length KV, not a max_len allocation). Ring /
-        mamba leaves are untouched (bounded) unless copy_rest — then they
-        are jnp.copy'd so the snapshot survives chunk-to-chunk donation."""
-        cfg, plan = self.lm.cfg, self.lm.plan
-
-        def one(spec, entry, stacked):
-            if entry is None:
-                return None
-            if not full_attn_layer(cfg, spec):
-                return jax.tree.map(jnp.copy, entry) if copy_rest else entry
-            ax = 2 if stacked else 1
-
-            def f(x):
-                W = x.shape[ax]
-                if W > length:
-                    idx = [slice(None)] * x.ndim
-                    idx[ax] = slice(0, length)
-                    return x[tuple(idx)]
-                if W < length:
-                    pad = [(0, 0)] * x.ndim
-                    pad[ax] = (0, length - W)
-                    return jnp.pad(x, pad)
-                return jnp.copy(x) if copy_rest else x
-            return {kk: f(vv) for kk, vv in entry.items()}
-
-        return {"period": tuple(one(s, cache["period"][i], True)
-                                for i, s in enumerate(plan.period)),
-                "rem": tuple(one(s, cache["rem"][i], False)
-                             for i, s in enumerate(plan.rem)),
-                "pos": jnp.copy(cache["pos"]) if copy_rest else cache["pos"]}
-
-    def _grow_blocks(self, task: PrefillTask, cl: int) -> bool:
-        """Reserve pool blocks for the next `cl` chunk tokens. On
-        exhaustion, reclaim shared cache (LRU store entries) and retry;
-        still short → False (the caller defers this task — backpressure
-        instead of HBM over-commit)."""
-        pool, key = self.arena.pool, self._pf_key(task.rid)
-        target = task.cursor + cl
-
-        def attempt():
-            if key in pool:
-                return pool.extend(key, task.cursor, target)
-            return pool.allocate(key, target)
-
-        got = attempt()
-        if got is None:
-            held = len(pool.owned(key)) if key in pool else 0
-            need = pool.blocks_for(target) - held - pool.free_blocks
-            self.arena.reclaim(max(need, 1))
-            got = attempt()
-        return got is not None
-
-    def _table_row(self, rid: int) -> jnp.ndarray:
-        nb = -(-self.max_len // self.block_size)
-        row = np.zeros((1, nb), np.int32)
-        owned = self.arena.pool.owned(self._pf_key(rid))
-        row[0, :len(owned)] = owned
-        return jnp.asarray(row)
-
-    def _store_put_paged(self, task: PrefillTask, n: int,
-                         copy_private: bool) -> None:
-        """Publish the first `n` tokens of a task as a store entry: the
-        covering blocks are adopted (refcounted) by the store — zero copy —
-        and only the bounded private leaves are snapshotted. Entry size is
-        the REAL resident bytes, so LRU eviction can tell a 16-token prefix
-        from a 2048-token one."""
-        pool = self.arena.pool
-        blocks = pool.owned(self._pf_key(task.rid))[:pool.blocks_for(n)]
-        priv = jax.tree.map(jnp.copy, task.cache) if copy_private \
-            else task.cache
-        nbytes = (len(blocks) * self.arena.block_nbytes + _pytree_bytes(priv)
-                  + _pytree_bytes(task.logits))
-        self.store.put(task.prompt[:n], priv, task.logits, blocks=blocks,
-                       nbytes=nbytes)
-
-    def _release_result(self, rec: PrefillResult) -> None:
-        """Drop an undelivered result (supersede/abort): a paged handoff
-        still owns pool blocks that nobody will ever admit."""
-        if isinstance(rec.cache, BlockHandoff):
-            self.arena.pool.release(rec.cache.key)
-
-    def _note_peak(self, task: PrefillTask) -> None:
-        """Work-based memory metric: peak KV blocks pinned by a SINGLE
-        in-flight prefill. Paged tasks grow per chunk, so the peak is
-        blocks_for(prompt_len); a dense task pins a blocks_for(max_len)
-        cache from its first chunk regardless of prompt length — exactly
-        the prefill-phase over-commit paged prefill removes."""
-        if self.paged:
-            held = len(self.arena.pool.owned(self._pf_key(task.rid)))
-        else:
-            held = -(-self.max_len // self.block_size)
-        if held > self.stats["prefill_kv_peak_blocks"]:
-            self.stats["prefill_kv_peak_blocks"] = held
-
-    # ---- scheduling --------------------------------------------------
-    def start(self, rid: int, prompt: tuple, prefix_hint: int = 0,
-              params: Optional[SamplingParams] = None) -> None:
-        """Enqueue a prompt. Exact store hits complete immediately (drained
-        by the next step()); partial hits resume at the stored boundary.
-        prefix_hint (the proxy's Match_P, computed before self-insertion)
-        marks a prefix shared with other prompts: the engine snapshots its
-        cache at that boundary so later sharers can resume there."""
-        # a re-dispatch of the same rid (instance fail/recover) supersedes any
-        # queued task or undelivered result — otherwise both complete and the
-        # proxy sees duplicate first tokens
-        for t in list(self.queue):
-            if t.rid == rid:
-                self.queue.remove(t)
-                if self.paged:
-                    self.arena.pool.release(self._pf_key(rid))
-        for r in self._ready:
-            if r.rid == rid:
-                self._release_result(r)
-        self._ready = [r for r in self._ready if r.rid != rid]
-        task = PrefillTask(rid, tuple(prompt), params=params or GREEDY,
-                           t_start=time.monotonic())
-        if (self.chunked and self.allow_partial_reuse
-                and 8 <= prefix_hint < len(task.prompt)):
-            task.snap = prefix_hint
-        self._try_resume(task)
-        self.queue.append(task)
-
-    def _try_resume(self, task: PrefillTask) -> None:
-        """Resume from the deepest stored prefix (exact hits: adopt whole)."""
-        if self.paged:
-            self._try_resume_paged(task)
-            return
-        n, cache, logits = self.store.lookup(task.prompt)
-        if cache is None or n <= task.cursor:
-            return
-        if n == len(task.prompt):
-            # stored caches are prefix-trimmed: pad the full-attention KV
-            # back to the engine's max_len working shape (ring/mamba leaves
-            # are shared — an adopted whole is never donated downstream)
-            task.cache, task.logits = \
-                self._resize_full_attn(cache, self.max_len), logits
-            task.cursor = task.reused = n
-            return
-        if self.chunked and self.allow_partial_reuse:
-            # copy — the threaded cache is donated chunk-to-chunk and must
-            # not eat the store's buffers
-            task.cache = self._resize_full_attn(cache, self.max_len,
-                                                copy_rest=True)
-            task.logits = logits
-            task.cursor = task.reused = n
-            self.stats["prefix_hits"] += 1
-            self.stats["reused_tokens"] += n
-
-    def _try_resume_paged(self, task: PrefillTask) -> None:
-        """Paged resume: map the entry's FULL prefix blocks into the task's
-        table (refcount++, zero copy); a partial tail block is copied into
-        a private block — its content diverges as the task appends. Exact
-        hits adopt the same way (the tail copy keeps two adopters of one
-        prompt from clobbering each other's decode-time appends)."""
-        ent = self.store.lookup_entry(task.prompt)
-        if ent is None or ent.n <= task.cursor or ent.blocks is None:
-            return
-        if not (self.allow_partial_reuse or ent.n == len(task.prompt)):
-            return
-        pool, key = self.arena.pool, self._pf_key(task.rid)
-        if key in pool:                 # mid-flight deepening is unsound
-            return
-        n = ent.n
-        full = n // pool.block_size
-        # pin the entry's blocks for the duration: reclaim-under-pressure
-        # below may evict THIS entry, and without the pin its released
-        # blocks would hit the free list while we are about to map them as
-        # `shared` (and read the tail for the copy) — allocator corruption
-        pin = ("resume-pin", task.rid)
-        pool.adopt(pin, ent.blocks)
-        try:
-            tbl = pool.allocate(key, n, shared=ent.blocks[:full])
-            if tbl is None:
-                self.arena.reclaim(pool.blocks_for(n) - full)
-                tbl = pool.allocate(key, n, shared=ent.blocks[:full])
-                if tbl is None:
-                    return              # backpressure: prefill from scratch
-            if pool.blocks_for(n) > full:   # partial tail → copy-on-write
-                self.arena.copy_block(ent.blocks[full], tbl[full])
-        finally:
-            pool.release(pin)
-        # private leaves are donated chunk-to-chunk: always copy
-        task.cache = jax.tree.map(jnp.copy, ent.cache)
-        task.logits = ent.logits
-        task.cursor = task.reused = n
-        self.stats["blocks_mapped"] += full
-        if n < len(task.prompt):
-            self.stats["prefix_hits"] += 1
-            self.stats["reused_tokens"] += n
-
-    def has_work(self) -> bool:
-        return bool(self.queue or self._ready)
-
-    def abort(self, rid: int) -> bool:
-        """Drop a queued / in-flight / completed-but-undelivered prompt.
-        The task's private cache is released to the GC and its pool blocks
-        (paged) are released; store snapshots it already published stay —
-        they are shared cache, not request state (their blocks are
-        refcounted under the store's own key)."""
-        hit = False
-        for t in list(self.queue):
-            if t.rid == rid:
-                self.queue.remove(t)
-                hit = True
-        if self.paged:
-            self.arena.pool.release(self._pf_key(rid))
-        n0 = len(self._ready)
-        for r in self._ready:
-            if r.rid == rid:
-                self._release_result(r)
-        self._ready = [r for r in self._ready if r.rid != rid]
-        return hit or len(self._ready) != n0
-
-    def drop_results(self) -> int:
-        """Discard every completed-but-undelivered result, releasing paged
-        handoff blocks (instance-death recovery: a dead engine's results
-        will never be drained by the server loop — without this their
-        ("handoff", i) pool keys leak). → results dropped."""
-        n = len(self._ready)
-        for r in self._ready:
-            self._release_result(r)
-        self._ready = []
-        return n
-
-    def step(self, token_budget: int = 1 << 30) -> list[PrefillResult]:
-        """Run up to `token_budget` tokens of prefill work; → completed
-        prompts. Chunked mode schedules shortest-remaining-first at chunk
-        granularity (a short prompt preempts an in-flight long prefill at
-        the next chunk boundary); unchunked mode is the pre-chunking engine:
-        FIFO, one whole prompt per call. Paged tasks that cannot grow their
-        block reservation are DEFERRED for the round (stats.defers) rather
-        than over-committing — they retry when decode/store releases free
-        blocks."""
-        done, budget = self._ready, token_budget
-        self._ready = []
-        fresh: list[PrefillTask] = []
-        blocked: set[int] = set()
-        t0 = time.monotonic()
-        while budget > 0:
-            cands = [t for t in self.queue if t.rid not in blocked]
-            if not cands:
-                break
-            task = (min(cands, key=lambda t: t.remaining)
-                    if self.chunked else cands[0])
-            if task.cursor == 0:
-                # entries stored since enqueue (e.g. a queued sharer's
-                # snapshot) are visible to tasks that have not started
-                self._try_resume(task)
-            if task.remaining > 0:
-                ran = (self._run_chunk(task, min(budget, self.chunk))
-                       if self.chunked else self._run_full(task))
-                if ran == 0 and task.remaining > 0:
-                    blocked.add(task.rid)       # pool backpressure: defer
-                    continue
-                budget -= ran
-            if task.remaining == 0:
-                self.queue.remove(task)
-                fresh.append(self._finish(task))
-        if fresh:
-            done.extend(self._emit(fresh))
-        self.stats["busy_s"] += time.monotonic() - t0
-        return done
-
-    def _run_chunk(self, task: PrefillTask, budget: int) -> int:
-        t0 = time.monotonic()
-        cl = min(self.chunk, task.remaining, max(budget, 1))
-        if task.cursor < task.snap:
-            cl = min(cl, task.snap - task.cursor)   # land on the boundary
-        if self.paged and not self._grow_blocks(task, cl):
-            self.stats["defers"] += 1
-            return 0
-        if task.cache is None:
-            task.cache = (alloc_prefill_private_cache(
-                self.lm.cfg, self.lm.mesh, self.lm.plan, self.max_len)
-                if self.paged else
-                alloc_cache(self.lm.cfg, self.lm.mesh, self.lm.plan, 1,
-                            self.max_len))
-        S = min(_bucket(cl, lo=8), self.chunk)
-        toks = list(task.prompt[task.cursor:task.cursor + cl]) + [0] * (S - cl)
-        if self.paged:
-            # chunk KV is written straight into the arena blocks through
-            # the task's table — the composed cache's full-attention leaves
-            # ARE the shared arenas (donated and written back)
-            composed = merge_arena_cache(self.lm.cfg, self.lm.plan,
-                                         task.cache, self.arena.kv)
-            composed, task.logits = self._resume_paged(
-                self.params, jnp.asarray([toks], jnp.int32), composed,
-                jnp.int32(cl), self.tables, self._table_row(task.rid))
-            task.cache, self.arena.kv = split_arena_cache(
-                self.lm.cfg, self.lm.plan, composed)
-        else:
-            # attend_limit=0: one trace per chunk bucket. (Passing a pow2
-            # prefix bound trims attention flops but multiplies trace
-            # count — a win on accelerators, a compile-stall hazard on the
-            # CPU-real path.)
-            task.cache, task.logits = self._resume(
-                self.params, jnp.asarray([toks], jnp.int32), task.cache,
-                jnp.int32(cl), self.tables, 0)
-        task.cursor += cl
-        self.stats["tokens"] += cl
-        self.stats["chunks"] += 1
-        self._note_peak(task)
-        if task.cursor == task.snap:
-            shared = task.prompt[:task.snap]
-            if self.store.lookup(shared)[0] != task.snap:
-                if self.paged:
-                    self._store_put_paged(task, task.snap, copy_private=True)
-                else:
-                    # prefix-length snapshot (sizing fix): slice the
-                    # full-attention KV to the boundary instead of pinning
-                    # a max_len copy
-                    self.store.put(
-                        shared,
-                        self._resize_full_attn(
-                            task.cache,
-                            min(_bucket(task.snap, lo=8), self.max_len),
-                            copy_rest=True),
-                        task.logits)
-        task.compute_s += time.monotonic() - t0
-        return cl
-
-    def _run_full(self, task: PrefillTask) -> int:
-        t0 = time.monotonic()
-        S = len(task.prompt)
-        # lo=8: same bucket floor as the chunked path — a short prompt must
-        # not compile a gratuitous extra trace just because it arrived at
-        # an unchunked engine
-        pad = min(_bucket(S, lo=8), self.max_len) - S
-        toks = jnp.asarray([list(task.prompt) + [0] * pad], jnp.int32)
-        task.cache, task.logits = self._fn(self.params, toks, jnp.int32(S),
-                                           self.tables)
-        task.cursor = S
-        self.stats["tokens"] += S
-        self._note_peak(task)
-        task.compute_s += time.monotonic() - t0
-        return S
-
-    def _finish(self, task: PrefillTask) -> PrefillTask:
-        """Store bookkeeping for a completed prompt. The first token is NOT
-        sampled here: finished tasks of one engine round are sampled in a
-        single fused call (`_emit`) — the per-record `int(jnp.argmax(...))`
-        host sync is gone. Paged tasks turn into a BlockHandoff: pool
-        ownership moves from the task to the handoff record, which
-        admission later renames to the decode rid — zero copy end to end."""
-        L = len(task.prompt)
-        if task.reused == L:                    # whole prompt adopted
-            self.stats["cache_hits"] += 1
-        else:
-            self.stats["prefills"] += 1
-            if self.paged:
-                self._store_put_paged(task, L, copy_private=False)
-            else:
-                self.store.put(
-                    task.prompt,
-                    self._resize_full_attn(
-                        task.cache, min(_bucket(L, lo=8), self.max_len)),
-                    task.logits)
-        if self.paged:
-            pool, key = self.arena.pool, self._pf_key(task.rid)
-            # class-level counter: several engines share one pool (arena),
-            # so handoff keys must be unique ACROSS engines — per-engine
-            # counters collide at ("handoff", 0)
-            hkey = ("handoff", PrefillEngine._next_handoff_id)
-            PrefillEngine._next_handoff_id += 1
-            blocks = tuple(pool.transfer(key, hkey))
-            task.handoff = BlockHandoff(hkey, blocks, task.cache, L)
-        return task
-
-    def _emit(self, tasks: list) -> list[PrefillResult]:
-        toks = self.sample_first([t.logits for t in tasks],
-                                 [t.params for t in tasks],
-                                 [t.rid for t in tasks],
-                                 [len(t.prompt) for t in tasks])
-        t_done = time.monotonic()
-        return [PrefillResult(t.rid, t.handoff if t.handoff is not None
-                              else t.cache, int(tok), len(t.prompt),
-                              t.reused, t.compute_s, t_done)
-                for t, tok in zip(tasks, toks)]
-
-    def sample_first(self, logits_list, params_list, rids, folds
-                     ) -> np.ndarray:
-        """Sample the first token for a batch of finished prompts under
-        each one's SamplingParams in ONE jit call + ONE host fetch
-        (pow2-padded to bound retraces). logits_list: [1, V] arrays;
-        folds: context lengths (= prompt lengths)."""
-        n = len(logits_list)
-        npad = _bucket(n, lo=1)
-        logits = tuple(logits_list) + (logits_list[-1],) * (npad - n)
-        rows = [device_row(p, r) for p, r in zip(params_list, rids)]
-        rows += [rows[-1]] * (npad - n)
-        temp = jnp.asarray([r[0] for r in rows], jnp.float32)
-        tk = jnp.asarray([r[1] for r in rows], jnp.int32)
-        tp = jnp.asarray([r[2] for r in rows], jnp.float32)
-        keys = jnp.asarray(np.stack([r[3] for r in rows]))
-        fold = jnp.asarray(list(folds) + [folds[-1]] * (npad - n), jnp.int32)
-        out = np.asarray(self._first(logits, temp, tk, tp, keys, fold))
-        self.stats["host_fetches"] += 1
-        return out[:n]
-
-    # ---- blocking back-compat API ------------------------------------
-    def process(self, prompt: tuple) -> tuple:
-        """→ (cache B=1, first_token:int, elapsed_s). Runs the prompt to
-        completion (chunked underneath when supported)."""
-        t0 = time.monotonic()
-        self.start(-1, tuple(prompt))
-        while True:
-            recs = self.step()
-            self._ready.extend(r for r in recs if r.rid != -1)
-            for rec in recs:
-                if rec.rid == -1:
-                    return rec.cache, rec.first_token, time.monotonic() - t0
-
-
-# ======================================================================
-@dataclass
-class DecodeEngine:
-    """Continuous-batch decode engine.
-
-    paged=True (default): attention KV lives in physically paged per-layer
-    arenas. Admission allocates real blocks from the KVPool and scatters the
-    incoming B=1 dense cache into them (prefix-sharing admissions map the
-    lender's full prefix blocks instead of writing them — only the partial
-    tail block and the suffix are copied); each decode step writes the new
-    token's K/V through the per-slot block table and attends over resident
-    blocks only; preemption extracts the dense cache back out of the arenas
-    and releases the blocks (refcounted — shared blocks survive until their
-    last mapper leaves). paged=False preserves the slot-dense layout with
-    accounting-only admission control.
-    """
-    lm: LM
-    params: dict
-    tables: Optional[dict]
-    n_slots: int
-    max_len: int
-    hbm_budget_bytes: int = 1 << 34
-    kv_blocks: Optional[int] = None   # explicit pool size (tests/benchmarks)
-    paged: bool = True                # physically paged attention KV
-    block_size: int = 16
-    arena: Optional[KVArena] = None   # shared arena (co-located prefill)
-    stats: dict = field(default_factory=lambda: {
-        "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
-        "kv_transfer_bytes_padded": 0, "handoff_copy_bytes": 0,
-        "admits": 0, "preemptions": 0, "moe_counts": None,
-        "blocks_touched": 0, "blocks_shared": 0, "blocks_fresh": 0,
-        "host_fetches": 0})
-
-    def __post_init__(self):
-        cfg = self.lm.cfg
-        if self.paged:
-            if self.arena is None:
-                if self.kv_blocks is None:
-                    # capacity parity with the dense layout: every slot can
-                    # run to max_len; the pool turns that into admission
-                    # flexibility
-                    self.kv_blocks = self.n_slots * \
-                        -(-self.max_len // self.block_size)
-                self.arena = KVArena.build(self.lm, self.kv_blocks,
-                                           self.block_size)
-            self.block_size = self.arena.block_size
-            self.kv_blocks = self.arena.pool.n_blocks
-        self.max_blocks = -(-self.max_len // self.block_size)
-        self.sparsity = None
-        if self.paged:
-            # engine-private side only: per-slot ring arenas + non-attention
-            # state; the full-attention arenas live in the (possibly shared)
-            # KVArena and are composed in around every jit call
-            self.cache = alloc_paged_private_cache(
-                cfg, self.lm.mesh, self.lm.plan, self.n_slots, self.max_len,
-                self.block_size)
-            self.tables_h = np.zeros((self.n_slots, self.max_blocks), np.int32)
-            self._tbl_dev = jnp.asarray(self.tables_h)
-            self._tbl_bucket = self.max_blocks
-            self._tbl_dirty = False
-            # online top-k block selection (OmniAttn dynamic sparsity):
-            # resolved once from cfg.omniattn — the step jit reads the same
-            # config, so controller and trace always agree
-            self.sparsity = SparsityController.from_model(
-                cfg, self.lm.plan, self.block_size, self.max_blocks)
-            if self.sparsity is not None:
-                self.stats.update(SparsityController.stats_keys())
-        else:
-            self.cache = alloc_cache(cfg, self.lm.mesh, self.lm.plan,
-                                     self.n_slots, self.max_len)
-            if self.kv_blocks is None:
-                per_slot = kv_bytes(self.cache) // max(self.n_slots, 1)
-                budget = max(self.hbm_budget_bytes // max(per_slot, 1),
-                             self.n_slots) * 4
-                # the accounting pool only needs to never constrain below the
-                # slot-dense physical capacity — don't materialize a free
-                # list for the raw HBM-budget block count (~1e5 ids)
-                self.kv_blocks = min(budget,
-                                     self.n_slots * self.max_blocks * 4)
-        self.pool = self.arena.pool if self.paged else \
-            KVPool(n_blocks=self.kv_blocks, block_size=self.block_size)
-        # PD transfer-cost metering constants: a B=1 dense handoff cache is
-        # `_dense_kv_nbytes` regardless of prompt length (the padded figure
-        # the old meter charged); the TRUE payload is the bounded leaves
-        # plus `_full_tok_nbytes` per resident token of full-attention KV.
-        it = jnp.dtype(cfg.compute_dtype).itemsize
-        n_full = sum(1 for sp in self.lm.plan.all_specs()
-                     if full_attn_layer(cfg, sp))
-        self._full_tok_nbytes = 2 * cfg.n_kv_heads * cfg.head_dim * it * n_full
-        sds, _ = cache_struct(cfg, self.lm.mesh, self.lm.plan, 1, self.max_len)
-        self._dense_kv_nbytes = sum(
-            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
-            for s in jax.tree.leaves(sds))
-        self.free = list(range(self.n_slots))
-        self.slot_rid: dict[int, int] = {}
-        self.rid_slot: dict[int, int] = {}
-        self._prompts: dict[int, tuple] = {}   # live rid → prompt (sharing)
-        # device-resident slot state threaded (donated) through the step jit;
-        # host mirrors updated from values we already know — no device sync.
-        # Per-slot sampling parameters + PRNG base keys live here too, so
-        # the fused step samples the whole batch without any host traffic
-        # (temp <= 0 rows take the greedy argmax branch).
-        self.state = {"pos": jnp.zeros(self.n_slots, jnp.int32),
-                      "tok": jnp.zeros(self.n_slots, jnp.int32),
-                      "active": jnp.zeros(self.n_slots, bool),
-                      "temp": jnp.zeros(self.n_slots, jnp.float32),
-                      "top_k": jnp.zeros(self.n_slots, jnp.int32),
-                      "top_p": jnp.ones(self.n_slots, jnp.float32),
-                      "key": jnp.zeros((self.n_slots, 2), jnp.uint32)}
-        n_moe = sum(1 for sp in self.lm.plan.all_specs() if sp.use_moe)
-        if n_moe and cfg.moe.n_experts:
-            # expert activation counts accumulate device-side too — fetched
-            # (and reset) only at placement ticks via take_moe_counts()
-            self.state["moe_counts"] = jnp.zeros((n_moe, cfg.moe.n_experts),
-                                                 jnp.float32)
-        if self.sparsity is not None:
-            # online-sparsity window [blocks_scored, blocks_attended,
-            # mass_sum, mass_n], layer-summed — accumulates device-side in
-            # the step jit, drained only via take_sparsity_stats()
-            self.state["sparsity"] = jnp.zeros(4, jnp.float32)
-        self.pos_h = np.zeros(self.n_slots, np.int64)      # next write position
-        self.tok_h = np.zeros(self.n_slots, np.int64)      # current input token
-        self.tokens_h = np.zeros(self.n_slots, np.int64)   # pool-accounted tokens
-        self.preempted: list[tuple] = []   # (rid, cache_one, next_tok, pos)
-        if self.paged:
-            self._insert = jax.jit(self._insert_paged_impl,
-                                   donate_argnums=(0, 1))
-            self._insert_handle = jax.jit(self._insert_handle_impl,
-                                          donate_argnums=(0, 1))
-            self._extract = jax.jit(self._extract_paged_impl)
-        else:
-            self._insert = jax.jit(self._insert_impl, donate_argnums=(0, 1))
-            self._extract = jax.jit(self._extract_impl)
-        self._step = jax.jit(self._step_impl, donate_argnums=(1, 2))
-
-    # ---- arena compose/split -----------------------------------------
-    # Paged jit calls take (private ∪ arena) and write the donated arena
-    # leaves back, so the prefill engine sharing this arena never reads a
-    # buffer this engine invalidated (execution is sequential in-process).
-    def _full_cache(self):
-        if not self.paged:
-            return self.cache
-        return merge_arena_cache(self.lm.cfg, self.lm.plan, self.cache,
-                                 self.arena.kv)
-
-    def _store_cache(self, cache):
-        if not self.paged:
-            self.cache = cache
-            return
-        self.cache, self.arena.kv = split_arena_cache(self.lm.cfg,
-                                                      self.lm.plan, cache)
-
-    def _true_kv_nbytes(self, n_tokens: int) -> int:
-        """REAL bytes of a request's KV payload at `n_tokens` resident
-        tokens: bounded leaves (ring KV, mamba state) plus per-token
-        full-attention KV — the transfer-cost figure that does NOT meter
-        max_len padding (a 64-token prompt in a max_len=2048 cache used to
-        charge 32× its real bytes)."""
-        bounded = self._dense_kv_nbytes - self._full_tok_nbytes * self.max_len
-        return bounded + self._full_tok_nbytes * min(n_tokens, self.max_len)
-
-    # ---- paged layout helpers (trace-level) --------------------------
-    def _attn_classes(self):
-        """[(spec, (sink, recent)) for period entries], same for rem."""
-        cfg = self.lm.cfg
-        per = [(s, cache_window(cfg, s)) for s in self.lm.plan.period]
-        rem = [(s, cache_window(cfg, s)) for s in self.lm.plan.rem]
-        return per, rem
-
-    def _insert_attn_paged(self, win, entry, one, slot, wtbl, stacked):
-        """Scatter one request's dense per-layer KV into arena blocks.
-        Full layers write through `wtbl` (shared prefix entries redirected to
-        the null block — mapped, not copied); ring layers overwrite the
-        slot's statically owned block run. Full-layer writes recompute the
-        written blocks' key summaries in the same jit, so dense→paged
-        (re-)admission never leaves a stale summary (shared prefix entries
-        redirect to the null block — the lender's summaries stand)."""
-        sink, recent = win
-        bs = self.block_size
-        out = dict(entry)
-        for name in ("k", "v"):
-            a = entry[name]
-            o = one[name][:, 0] if stacked else one[name][0]   # [(R,) L, K, h]
-            if sink or recent:
-                bpw = ring_block_count(sink, recent, bs)
-                blocks = dense_kv_to_blocks(o, bpw, bs).astype(a.dtype)
-                start = (0, slot * bpw, 0, 0, 0) if stacked else \
-                    (slot * bpw, 0, 0, 0)
-                a = jax.lax.dynamic_update_slice(a, blocks, start)
-            else:
-                blocks = dense_kv_to_blocks(o, self.max_blocks,
-                                            bs).astype(a.dtype)
-                a = a.at[:, wtbl].set(blocks) if stacked else \
-                    a.at[wtbl].set(blocks)
-            out[name] = a
-        if wtbl is not None and "kmin" in entry:
-            out["kmin"], out["kmax"], out["kmean"] = \
-                attn_mod.update_block_summaries(
-                    entry["kmin"], entry["kmax"], entry["kmean"], out["k"],
-                    wtbl, stacked=stacked)
-        return out
-
-    def _extract_attn_paged(self, win, entry, slot, tbl, stacked):
-        """Gather one slot's dense per-layer KV back out of the arenas."""
-        sink, recent = win
-        bs = self.block_size
-        out = {}
-        for name in ("k", "v"):
-            a = entry[name]
-            K, h = a.shape[-3], a.shape[-1]
-            if sink or recent:
-                W = sink + recent
-                bpw = ring_block_count(sink, recent, bs)
-                if stacked:
-                    blocks = jax.lax.dynamic_slice(
-                        a, (0, slot * bpw, 0, 0, 0),
-                        (a.shape[0], bpw, K, bs, h))
-                else:
-                    blocks = jax.lax.dynamic_slice(
-                        a, (slot * bpw, 0, 0, 0), (bpw, K, bs, h))
-                x = blocks_to_dense_kv(blocks, W)
-            else:
-                blocks = a[:, tbl] if stacked else a[tbl]
-                x = blocks_to_dense_kv(blocks, self.max_len)
-            out[name] = x[:, None] if stacked else x[None]
-        return out
-
-    # ---- jit bodies --------------------------------------------------
-    def _slot_state(self, state, slots, toks, poss, samp):
-        """Write the admitted slots' scalar state + sampling rows."""
-        temps, tks, tps, keys = samp
-        state = dict(state)
-        state.update(pos=state["pos"].at[slots].set(poss),
-                     tok=state["tok"].at[slots].set(toks),
-                     active=state["active"].at[slots].set(True),
-                     temp=state["temp"].at[slots].set(temps),
-                     top_k=state["top_k"].at[slots].set(tks),
-                     top_p=state["top_p"].at[slots].set(tps),
-                     key=state["key"].at[slots].set(keys))
-        return state
-
-    def _insert_impl(self, cache_all, state, caches, slots, toks, poss, samp):
-        """Admit len(caches) B=1 caches into `slots` in one call."""
-        per, rem = cache_all["period"], cache_all["rem"]
-        for j in range(len(caches)):
-            s = slots[j]
-            per = jax.tree.map(lambda a, o, s=s: a.at[:, s].set(o[:, 0]),
-                               per, caches[j]["period"])
-            rem = jax.tree.map(lambda a, o, s=s: a.at[s].set(o[0]),
-                               rem, caches[j]["rem"])
-        state = self._slot_state(state, slots, toks, poss, samp)
-        return {"period": per, "rem": rem, "pos": cache_all["pos"]}, state
-
-    def _insert_paged_impl(self, cache_all, state, caches, slots, toks, poss,
-                           samp, tbls, shns):
-        """Paged admission: scatter each B=1 dense cache into arena blocks
-        through its table row (tbls [n, max_blocks]); the first shns[j]
-        entries are prefix blocks mapped from a lender and must not be
-        written (redirected to the null block). Non-attention layer state
-        stays per-slot."""
-        per_cls, rem_cls = self._attn_classes()
-        per = list(cache_all["period"])
-        rem = list(cache_all["rem"])
-        nb_iota = jnp.arange(self.max_blocks)
-        for j in range(len(caches)):
-            s = slots[j]
-            wtbl = jnp.where(nb_iota < shns[j], 0, tbls[j])
-            for i, (spec, win) in enumerate(per_cls):
-                one = caches[j]["period"][i]
-                if spec.kind == "attn":
-                    per[i] = self._insert_attn_paged(win, per[i], one, s,
-                                                     wtbl, stacked=True)
-                else:
-                    per[i] = jax.tree.map(
-                        lambda a, o, s=s: a.at[:, s].set(o[:, 0]),
-                        per[i], one)
-            for i, (spec, win) in enumerate(rem_cls):
-                one = caches[j]["rem"][i]
-                if spec.kind == "attn":
-                    rem[i] = self._insert_attn_paged(win, rem[i], one, s,
-                                                     wtbl, stacked=False)
-                else:
-                    rem[i] = jax.tree.map(
-                        lambda a, o, s=s: a.at[s].set(o[0]), rem[i], one)
-        state = self._slot_state(state, slots, toks, poss, samp)
-        return {"period": tuple(per), "rem": tuple(rem),
-                "pos": cache_all["pos"]}, state
-
-    def _insert_handle_impl(self, cache_all, state, privs, slots, toks, poss,
-                            samp):
-        """Zero-copy (block-handoff) admission: the full-attention KV is
-        ALREADY in the arena blocks named by each request's table — only
-        the bounded private leaves (ring KV scattered into the slot's
-        static ring run, mamba state, scalars) are written. The dense
-        scatter of `_insert_paged_impl` survives as the compat path."""
-        per_cls, rem_cls = self._attn_classes()
-        per = list(cache_all["period"])
-        rem = list(cache_all["rem"])
-        for j in range(len(privs)):
-            s = slots[j]
-            for i, (spec, win) in enumerate(per_cls):
-                one = privs[j]["period"][i]
-                if one is None:
-                    continue                    # full-attn: lives in arena
-                if spec.kind == "attn":
-                    per[i] = self._insert_attn_paged(win, per[i], one, s,
-                                                     None, stacked=True)
-                else:
-                    per[i] = jax.tree.map(
-                        lambda a, o, s=s: a.at[:, s].set(o[:, 0]),
-                        per[i], one)
-            for i, (spec, win) in enumerate(rem_cls):
-                one = privs[j]["rem"][i]
-                if one is None:
-                    continue
-                if spec.kind == "attn":
-                    rem[i] = self._insert_attn_paged(win, rem[i], one, s,
-                                                     None, stacked=False)
-                else:
-                    rem[i] = jax.tree.map(
-                        lambda a, o, s=s: a.at[s].set(o[0]), rem[i], one)
-        state = self._slot_state(state, slots, toks, poss, samp)
-        return {"period": tuple(per), "rem": tuple(rem),
-                "pos": cache_all["pos"]}, state
-
-    def _step_impl(self, params, cache, state, tables, block_tbl):
-        new_cache, logits, aux = self.lm.decode(
-            params, cache, state["tok"][:, None], state["pos"][:, None],
-            tables=tables, token_mask=state["active"], block_tables=block_tbl)
-        # fused per-slot sampling: the token following pos sees pos+1 context
-        # tokens — folding that into the slot's base key makes the draw a
-        # pure function of (seed, position), so preempt/resume and paged vs
-        # dense layouts reproduce the same stream. Greedy slots (temp <= 0)
-        # reduce to the old argmax bit-exactly.
-        nxt = sample_tokens(logits, state["temp"], state["top_k"],
-                            state["top_p"], state["key"], state["pos"] + 1)
-        act = state["active"]
-        new_state = dict(state)
-        new_state.update(pos=state["pos"] + act.astype(jnp.int32),
-                         tok=jnp.where(act, nxt, state["tok"]))
-        if "moe_counts" in state:
-            cnts = ([c.reshape(-1, c.shape[-1]) for c in aux["period_counts"]]
-                    + [c[None] for c in aux["rem_counts"]])
-            new_state["moe_counts"] = (state["moe_counts"] +
-                                       jnp.concatenate(cnts, axis=0))
-        if "sparsity" in state:
-            # per-layer [4] vectors (period entries scan-stacked [n_rep, 4])
-            vecs = [a.sum(0) for a in aux.get("period_sparsity", ())] \
-                + list(aux.get("rem_sparsity", ()))
-            if vecs:
-                new_state["sparsity"] = state["sparsity"] + sum(vecs)
-        return new_cache, new_state, nxt
-
-    def _extract_impl(self, cache_all, slot):
-        """Pull one slot back out as a B=1 cache (preemption path)."""
-        per = jax.tree.map(
-            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-            cache_all["period"])
-        rem = jax.tree.map(
-            lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
-            cache_all["rem"])
-        return {"period": per, "rem": rem, "pos": cache_all["pos"]}
-
-    def _extract_paged_impl(self, cache_all, slot, tbl):
-        """Pull one slot's KV out of the arenas as a dense B=1 cache
-        (preemption / re-admission interchange format)."""
-        per_cls, rem_cls = self._attn_classes()
-        per, rem = [], []
-        for i, (spec, win) in enumerate(per_cls):
-            e = cache_all["period"][i]
-            if spec.kind == "attn":
-                per.append(self._extract_attn_paged(win, e, slot, tbl,
-                                                    stacked=True))
-            else:
-                per.append(jax.tree.map(
-                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-                    e))
-        for i, (spec, win) in enumerate(rem_cls):
-            e = cache_all["rem"][i]
-            if spec.kind == "attn":
-                rem.append(self._extract_attn_paged(win, e, slot, tbl,
-                                                    stacked=False))
-            else:
-                rem.append(jax.tree.map(
-                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0),
-                    e))
-        return {"period": tuple(per), "rem": tuple(rem),
-                "pos": cache_all["pos"]}
-
-    # ------------------------------------------------------------------
-    def _refresh_tables(self):
-        """Device block-table refresh, with the resident-block count fed to
-        the step jit pow2-BUCKETED (lo=8 floor, the prefill chunk-bucket
-        convention): the jit traces once per bucket instead of once per
-        block-boundary crossing as contexts grow, and short-context steps
-        hand the kernels a narrow table — the paged_decode grid (and its
-        per-block DMAs) scales with the bucket, not max_len. Every live
-        slot's resident blocks fit the bucket by construction; stale rows
-        of freed slots are clamped to the null block by the write guard."""
-        cur = 1
-        for slot in self.slot_rid:
-            cur = max(cur, self.pool.blocks_for(int(self.tokens_h[slot])))
-        nb = min(_bucket(cur, lo=8), self.max_blocks)
-        if self._tbl_dirty or nb != self._tbl_bucket:
-            self._tbl_dev = jnp.asarray(self.tables_h[:, :nb])
-            self._tbl_bucket = nb
-            self._tbl_dirty = False
-
-    def take_sparsity_stats(self):
-        """Fetch + reset the device-side online-sparsity window and fold it
-        into stats (blocks_scored / blocks_attended / attn_mass_*, layer-
-        averaged — see serving/sparsity.py). → the layer-averaged [4] np
-        vector, or None when online sparsity is off. The only host sync for
-        these counters — call at monitor ticks / run end, not per step."""
-        acc = self.state.get("sparsity")
-        if acc is None:
-            return None
-        v = np.asarray(acc, np.float64)
-        self.state["sparsity"] = jnp.zeros_like(acc)
-        self.sparsity.note(self.stats, v)
-        L = max(self.sparsity.plan.n_sparse_layers, 1)
-        return v / L
-
-    def has_capacity(self) -> bool:
-        return len(self.free) > 0
-
-    def _find_shared(self, prompt, cached: int) -> list[int]:
-        """Physical prefix blocks to map for an admission whose first
-        `cached` tokens are radix-cached: a live request whose prompt shares
-        that prefix lends its FULL prefix blocks (floor — the partial tail
-        block is always privately copied by the borrower). Returns [] when
-        no lender is resident (the credit is then not taken: PR 1 credited
-        blocks that were not physically anywhere)."""
-        shn = self.pool.shareable_blocks(cached)
-        if shn <= 0 or prompt is None:
-            return []
-        prompt = tuple(prompt)
-        for rid, ptoks in self._prompts.items():
-            if (ptoks is not None and len(ptoks) >= cached
-                    and tuple(ptoks[:cached]) == prompt[:cached]):
-                blocks = self.pool.owned(rid)
-                if len(blocks) >= shn:
-                    return blocks[:shn]
-        return []
-
-    def _admit_handle(self, rid: int, hb: BlockHandoff, pos: int) -> bool:
-        """Zero-copy admission: rename the handoff's pool ownership to the
-        decode rid, extend capacity for the next token, and point the
-        slot's table row at the (already written) blocks. Fails clean —
-        ownership is handed back so the server can requeue the handle."""
-        self.pool.transfer(hb.key, rid)
-        grown = self.pool.extend(rid, pos, pos + 1)
-        if grown is None:
-            self.arena.reclaim(1)
-            grown = self.pool.extend(rid, pos, pos + 1)
-        if grown is None:
-            self.pool.transfer(rid, hb.key)
-            return False
-        self.stats["blocks_fresh"] += len(grown)
-        return True
-
-    def admit_batch(self, items: list[tuple]) -> dict[int, bool]:
-        """items: (rid, cache_one, next_token, pos, cached_tokens[, prompt
-        [, sampling_params]]). `cache_one` is either a B=1 dense cache (the
-        scatter compat path, also used for preemption re-admission) or a
-        `BlockHandoff` (paged prefill: ownership of the already-written
-        arena blocks transfers to the decode rid — zero KV copy). Inserts
-        every admissible item in ONE donated jit call per kind;
-        → {rid: admitted}. With paged KV and a dense cache, `prompt`
-        enables prefix-sharing admission: full blocks of the cached prefix
-        are mapped from a live lender instead of copied. `sampling_params`
-        (SamplingParams, None → greedy) lands in the slot's device-side
-        parameter tensors."""
-        out: dict[int, bool] = {}
-        batch, hbatch = [], []
-        for item in items:
-            rid, cache_one, tok, pos, cached = item[:5]
-            prompt = item[5] if len(item) > 5 else None
-            sparams = item[6] if len(item) > 6 else None
-            handoff = isinstance(cache_one, BlockHandoff)
-            if not self.free:
-                out[rid] = False
-                continue
-            if handoff:
-                if not self.paged:
-                    raise ValueError("BlockHandoff admission needs paged KV")
-                if not self._admit_handle(rid, cache_one, pos):
-                    out[rid] = False
-                    continue
-                slot = self.free.pop()
-                tbl = self.pool.owned(rid)
-                row = np.zeros(self.max_blocks, np.int32)
-                row[:len(tbl)] = tbl
-                self.tables_h[slot] = row
-                shn = 0
-            elif self.paged:
-                shared = self._find_shared(prompt, cached)
-                tbl = self.pool.allocate(rid, pos + 1, shared=shared)
-                if tbl is None:
-                    self.arena.reclaim(self.pool.blocks_for(pos + 1)
-                                       - len(shared))
-                    tbl = self.pool.allocate(rid, pos + 1, shared=shared)
-                if tbl is None:
-                    out[rid] = False
-                    continue
-                self.stats["blocks_shared"] += len(shared)
-                self.stats["blocks_fresh"] += len(tbl) - len(shared)
-                slot = self.free.pop()
-                row = np.zeros(self.max_blocks, np.int32)
-                row[:len(tbl)] = tbl
-                self.tables_h[slot] = row
-                shn = len(shared)
-            else:
-                if self.pool.allocate(rid, pos + 1,
-                                      cached_tokens=cached) is None:
-                    out[rid] = False
-                    continue
-                slot = self.free.pop()
-                row, shn = None, 0
-            self.slot_rid[slot] = rid
-            self.rid_slot[rid] = slot
-            self._prompts[rid] = tuple(prompt) if prompt is not None else None
-            self.pos_h[slot] = pos
-            self.tok_h[slot] = tok
-            self.tokens_h[slot] = pos + 1
-            # transfer-cost model: TRUE payload bytes (resident tokens, not
-            # the max_len allocation) next to the padded figure the old
-            # meter charged; handoff_copy_bytes is the full-attention KV
-            # physically copied at admission — 0 on the zero-copy path, the
-            # whole max_len scatter on the dense compat path
-            self.stats["kv_transfer_bytes"] += self._true_kv_nbytes(pos)
-            self.stats["kv_transfer_bytes_padded"] += self._dense_kv_nbytes
-            if not handoff:
-                self.stats["handoff_copy_bytes"] += \
-                    self._full_tok_nbytes * self.max_len
-            self.stats["admits"] += 1
-            rec = (slot, cache_one.private if handoff else cache_one, tok,
-                   pos, row, shn, device_row(sparams, rid))
-            (hbatch if handoff else batch).append(rec)
-            out[rid] = True
-
-        # pad to a pow2 batch by repeating the last insert (idempotent:
-        # same slot, same values) — bounds jit retraces to log2(n_slots)
-        def _prep(b):
-            while len(b) & (len(b) - 1):
-                b.append(b[-1])
-            slots = jnp.asarray([x[0] for x in b], jnp.int32)
-            toks = jnp.asarray([x[2] for x in b], jnp.int32)
-            poss = jnp.asarray([x[3] for x in b], jnp.int32)
-            caches = tuple(x[1] for x in b)
-            samp = (jnp.asarray([x[6][0] for x in b], jnp.float32),
-                    jnp.asarray([x[6][1] for x in b], jnp.int32),
-                    jnp.asarray([x[6][2] for x in b], jnp.float32),
-                    jnp.asarray(np.stack([x[6][3] for x in b])))
-            return slots, toks, poss, caches, samp
-
-        if batch:
-            slots, toks, poss, caches, samp = _prep(batch)
-            if self.paged:
-                tbls = jnp.asarray(np.stack([b[4] for b in batch]), jnp.int32)
-                shns = jnp.asarray([b[5] for b in batch], jnp.int32)
-                cache, self.state = self._insert(
-                    self._full_cache(), self.state, caches, slots, toks,
-                    poss, samp, tbls, shns)
-                self._store_cache(cache)
-            else:
-                self.cache, self.state = self._insert(
-                    self.cache, self.state, caches, slots, toks, poss, samp)
-        if hbatch:
-            slots, toks, poss, privs, samp = _prep(hbatch)
-            cache, self.state = self._insert_handle(
-                self._full_cache(), self.state, privs, slots, toks, poss,
-                samp)
-            self._store_cache(cache)
-        if self.paged and (batch or hbatch):
-            self._tbl_dirty = True       # next step() re-buckets + uploads
-        return out
-
-    def admit(self, rid: int, cache_one, first_token: int, prompt_len: int,
-              cached_tokens: int = 0, prompt: Optional[tuple] = None,
-              params: Optional[SamplingParams] = None) -> bool:
-        return self.admit_batch([(rid, cache_one, first_token, prompt_len,
-                                  cached_tokens, prompt, params)])[rid]
-
-    # ------------------------------------------------------------------
-    def step(self) -> dict[int, int]:
-        """One batched decode step → {rid: next_token} for active slots.
-        Requests whose block allocation cannot grow are preempted into
-        self.preempted (cache extracted for later re-admission)."""
-        if not self.slot_rid:
-            return {}
-        t0 = time.monotonic()
-        if self.paged:
-            self._refresh_tables()
-        cache, self.state, nxt = self._step(
-            self.params, self._full_cache(), self.state, self.tables,
-            self._tbl_dev if self.paged else None)
-        self._store_cache(cache)
-        next_np = np.asarray(nxt)          # the single per-step host fetch
-        self.stats["host_fetches"] += 1
-        out = {}
-        for slot, rid in list(self.slot_rid.items()):
-            tok = int(next_np[slot])
-            out[rid] = tok
-            self.pos_h[slot] += 1
-            self.tok_h[slot] = tok
-            # work-based read metric: full-attention blocks gathered for this
-            # slot this step (the dense layout always touches max_blocks)
-            self.stats["blocks_touched"] += (
-                self.pool.blocks_for(int(self.tokens_h[slot]))
-                if self.paged else self.max_blocks)
-            # capacity is capped at max_len: a request decoding past it keeps
-            # emitting (its writes are dropped — null block for paged, OOB
-            # scatter drop for dense) but never grows its allocation —
-            # growing would index past the table row
-            cur = int(self.tokens_h[slot])
-            new_tokens = min(cur + 1, self.max_len)
-            nb_used = self.pool.blocks_for(cur)
-            grown = self.pool.extend(rid, cur, new_tokens)
-            if grown is None and self.paged:
-                # before preempting, reclaim shared cache state (LRU prefix
-                # store entries) — evicting a snapshot is always cheaper
-                # than extracting and re-prefilling a live request
-                if self.arena.reclaim(1):
-                    grown = self.pool.extend(rid, cur, new_tokens)
-            if grown is None:
-                # the sampled token is already in `out` (delivered once); the
-                # preemption record carries it as the resume input so it is
-                # neither dropped nor replayed on re-admission
-                self.stats["preemptions"] += 1
-                self.preempted.append(self._preempt(rid))
-                continue
-            if grown and self.paged:
-                for b in grown:
-                    self.tables_h[slot, nb_used] = b
-                    nb_used += 1
-                self._tbl_dirty = True
-                self.stats["blocks_fresh"] += len(grown)
-            self.tokens_h[slot] = new_tokens
-        dt = time.monotonic() - t0
-        self.stats["steps"] += 1
-        self.stats["tokens"] += len(out)
-        self.stats["busy_s"] += dt
-        return out
-
-    def take_moe_counts(self):
-        """Fetch + reset the device-side expert activation window ([L_moe, E]
-        np array, or None for non-MoE models). The only host sync for counts
-        — call it at monitor ticks, not per step."""
-        c = self.state.get("moe_counts")
-        if c is None:
-            return None
-        out = np.asarray(c, np.float64)
-        self.state["moe_counts"] = jnp.zeros_like(c)
-        self.stats["moe_counts"] = out          # last fetched window (stats)
-        return out
-
-    def _preempt(self, rid: int) -> tuple:
-        slot = self.rid_slot[rid]
-        if self.paged:
-            cache_one = self._extract(self._full_cache(), jnp.int32(slot),
-                                      jnp.asarray(self.tables_h[slot]))
-        else:
-            cache_one = self._extract(self.cache, jnp.int32(slot))
-        rec = (rid, cache_one, int(self.tok_h[slot]), int(self.pos_h[slot]))
-        self._free_slot(rid, slot)
-        return rec
-
-    def _free_slot(self, rid: int, slot: int):
-        del self.slot_rid[slot]
-        del self.rid_slot[rid]
-        self._prompts.pop(rid, None)
-        self.state["active"] = self.state["active"].at[slot].set(False)
-        # a stale temp > 0 on a freed slot would permanently defeat the
-        # all-greedy fast path in sample_tokens (jnp.all over every slot)
-        self.state["temp"] = self.state["temp"].at[slot].set(0.0)
-        self.free.append(slot)
-        self.pool.release(rid)
-        if self.paged:
-            # the freed slot keeps decoding garbage until reused: its writes
-            # must land in the null block, not in blocks the pool may hand to
-            # another request
-            self.tables_h[slot] = 0
-            self._tbl_dirty = True
-
-    def release(self, rid: int):
-        slot = self.rid_slot.get(rid)
-        if slot is not None:
-            self._free_slot(rid, slot)
+from repro.serving.arena import (BlockHandoff, KVArena, _bucket, _pow2_floor,
+                                 blocks_to_dense_kv, dense_kv_to_blocks,
+                                 kv_bytes)
+from repro.serving.decode import DecodeEngine
+from repro.serving.placement import DevicePlacement
+from repro.serving.prefill import PrefillEngine, PrefillResult, PrefillTask
+
+__all__ = [
+    "BlockHandoff",
+    "DecodeEngine",
+    "DevicePlacement",
+    "KVArena",
+    "PrefillEngine",
+    "PrefillResult",
+    "PrefillTask",
+    "blocks_to_dense_kv",
+    "dense_kv_to_blocks",
+    "kv_bytes",
+]

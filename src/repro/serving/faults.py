@@ -45,7 +45,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serving.engine import BlockHandoff, KVArena
+from repro.serving.arena import BlockHandoff, KVArena
 
 FAULT_KINDS = ("kill_prefill", "kill_decode", "kv_corrupt", "kv_lost",
                "handoff_drop", "alloc_fail", "straggler")

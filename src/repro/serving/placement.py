@@ -1,0 +1,201 @@
+"""DevicePlacement — the explicit device-placement layer every serving
+engine is constructed through.
+
+One object owns everything the serving stack needs to know about devices:
+
+  · the `MeshCtx` (axis convention: `data` = expert parallelism / EP,
+    `model` = tensor parallelism / TP — see distributed/ctx.py). No other
+    serving module imports MeshCtx; engines ask this layer instead.
+  · per-leaf `NamedSharding` specs for the three state families the engines
+    allocate — paged KV arenas (KV heads sharded over `model` when the
+    decode strategy is 'kv'), per-slot decode state (replicated), and model
+    parameters (the LM's sanitized ParamDef specs: attention heads over
+    `model`, MoE expert slots over `data`, expert FFN width over `model`);
+  · `donate_jit`, the single choke point every donated serving jit routes
+    through: it pins out-shardings where the caller provides a spec tree so
+    arena/state layouts are a fixed point of the hot jits (donation reuses
+    the input buffers, and the argument-sharding jit cache never churns),
+    and degrades to a plain `jax.jit` on a 1-device mesh.
+
+`build(tp=, ep=)` is the serving-facing constructor: a (ep, tp) mesh over
+the first ep*tp local devices. On CPU, XLA_FLAGS=
+--xla_force_host_platform_device_count=8 provides the devices — the mesh-
+parity tests run tp=2, ep=4 that way; greedy outputs must be bit-identical
+to the 1-device mesh (see tests/test_mesh_parity.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.ctx import MeshCtx, local_mesh_ctx
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import stack as stack_mod
+
+
+@dataclass(frozen=True)
+class DevicePlacement:
+    ctx: MeshCtx
+
+    # ---- constructors -------------------------------------------------
+    @staticmethod
+    def local() -> "DevicePlacement":
+        return DevicePlacement(local_mesh_ctx())
+
+    @staticmethod
+    def build(tp: int = 1, ep: int = 1, devices=None) -> "DevicePlacement":
+        """(ep, tp) mesh over the first ep*tp devices: `data` is the
+        EP/data-parallel axis, `model` the TP axis."""
+        devices = list(jax.devices() if devices is None else devices)
+        n = ep * tp
+        if len(devices) < n:
+            raise ValueError(
+                f"tp={tp}, ep={ep} needs {n} devices but only "
+                f"{len(devices)} are visible (CPU: set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n})")
+        mesh = jax.make_mesh((ep, tp), ("data", "model"),
+                             devices=devices[:n])
+        return DevicePlacement(MeshCtx(mesh))
+
+    @staticmethod
+    def of(obj) -> "DevicePlacement":
+        """Coerce None (→ local 1-device), a MeshCtx, or a DevicePlacement."""
+        if obj is None:
+            return DevicePlacement.local()
+        if isinstance(obj, DevicePlacement):
+            return obj
+        if isinstance(obj, MeshCtx):
+            return DevicePlacement(obj)
+        raise TypeError(f"cannot build a DevicePlacement from {type(obj)!r}")
+
+    # ---- mesh facts ---------------------------------------------------
+    @cached_property
+    def tp(self) -> int:
+        return self.ctx.tp
+
+    @cached_property
+    def ep(self) -> int:
+        return self.ctx.ep
+
+    @cached_property
+    def n_devices(self) -> int:
+        return self.ctx.n_devices
+
+    def sharding(self, spec: P):
+        return self.ctx.sharding(spec)
+
+    def tree_shardings(self, spec_tree):
+        return self.ctx.tree_shardings(spec_tree)
+
+    # ---- per-leaf placement specs ------------------------------------
+    def arena_specs(self, cfg, plan) -> dict:
+        """PartitionSpec tree matching alloc_arena_kv: KV + summary planes,
+        KV heads sharded over `model` under the 'kv' decode strategy."""
+        kv_part = attn_mod.arena_kv_part(cfg.n_kv_heads, self.tp)
+
+        def one(spec, stacked):
+            if not stack_mod.full_attn_layer(cfg, spec):
+                return None
+            lead = (None,) if stacked else ()
+            kv = P(*lead, None, kv_part, None, None)
+            sm = P(*lead, None, kv_part, None)
+            return {"k": kv, "v": kv, "kmin": sm, "kmax": sm, "kmean": sm}
+
+        return {"period": tuple(one(s, True) for s in plan.period),
+                "rem": tuple(one(s, False) for s in plan.rem)}
+
+    def paged_cache_specs(self, cfg, plan, n_slots, max_len, block_size):
+        """(private_specs, merged_specs) for the paged decode cache: the
+        engine-private side (ring arenas + non-attention state) and the
+        composed (private ∪ arena) tree the hot jits thread."""
+        _, sps = stack_mod.paged_cache_struct(cfg, self.ctx, plan, n_slots,
+                                              max_len, 1, block_size)
+        private = stack_mod._drop_entries(cfg, plan, sps, drop_full=True)
+        merged = stack_mod.merge_arena_cache(cfg, plan, private,
+                                             self.arena_specs(cfg, plan))
+        return private, merged
+
+    def dense_cache_specs(self, cfg, plan, B, max_len):
+        _, sps = stack_mod.cache_struct(cfg, self.ctx, plan, B, max_len)
+        return sps
+
+    def slot_state_specs(self, state: dict) -> dict:
+        """Decode slot state ([n_slots] scalars, sampling rows, counter
+        accumulators) is replicated: every rank sees every slot."""
+        return jax.tree.map(lambda _: P(), state)
+
+    def param_specs(self, lm) -> dict:
+        return lm.specs()
+
+    # ---- placement (device_put) --------------------------------------
+    def place(self, tree, spec_tree):
+        """device_put every leaf onto its NamedSharding (no-op on one
+        device — uncommitted host arrays behave identically there)."""
+        if self.n_devices == 1:
+            return tree
+        return jax.device_put(tree, self.tree_shardings(spec_tree))
+
+    def replicate(self, tree):
+        if self.n_devices == 1:
+            return tree
+        return jax.device_put(tree, self.sharding(P()))
+
+    def place_params(self, lm, params):
+        return self.place(params, lm.specs())
+
+    # ---- the jit choke point -----------------------------------------
+    def donate_jit(self, fn, *, donate_argnums=(), static_argnums=(),
+                   out_specs=None):
+        """Every donated serving jit is built here. `out_specs` (optional
+        PartitionSpec pytree matching the outputs) pins out-shardings so
+        donated state keeps its layout call-to-call; on a 1-device mesh the
+        pin is dropped and this is a plain jax.jit."""
+        kw = {}
+        if out_specs is not None and self.n_devices > 1:
+            kw["out_shardings"] = self.tree_shardings(out_specs)
+        return jax.jit(fn, donate_argnums=donate_argnums,
+                       static_argnums=static_argnums, **kw)
+
+    # ---- cross-mesh parameter transfer -------------------------------
+    def transfer_params(self, lm_src, params, lm_dst):
+        """Re-lay-out `params` built for lm_src's mesh so lm_dst can serve
+        them, and place them on this mesh. Only the MoE slot tensors are
+        layout-dependent (w1/w3/w2 [R, s, D, Fe] with R = source EP): the
+        canonical per-expert rows are gathered through the source replica
+        tables and re-slotted for the destination placement, so a tp=2,ep=4
+        server decodes with bit-identical expert weights to the 1-device
+        server it mirrors (the mesh-parity contract)."""
+        cfg = lm_dst.cfg
+        if cfg.moe.n_experts == 0:
+            return self.place_params(lm_dst, params)
+        src_t = lm_src.default_tables()
+        dst_t = lm_dst.default_tables()
+        rr = np.asarray(src_t["rep_rank"])[:, 0]
+        rs = np.asarray(src_t["rep_slot"])[:, 0]
+        dst_se = np.asarray(dst_t["slot_expert"])
+
+        def remap_layer(p, stacked):
+            if "moe_w1" not in p:
+                return p
+            p = dict(p)
+            for k in ("moe_w1", "moe_w3", "moe_w2"):
+                if stacked:
+                    canon = p[k][:, rr, rs]
+                    p[k] = jax.vmap(lambda c: moe_mod.slots_from_canonical(
+                        c, dst_se))(canon)
+                else:
+                    p[k] = moe_mod.slots_from_canonical(p[k][rr, rs], dst_se)
+            return p
+
+        stack = params["stack"]
+        params = dict(params)
+        params["stack"] = {
+            "period": tuple(remap_layer(p, True) for p in stack["period"]),
+            "rem": tuple(remap_layer(p, False) for p in stack["rem"])}
+        return self.place_params(lm_dst, params)

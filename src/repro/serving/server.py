@@ -32,6 +32,7 @@ from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
@@ -40,11 +41,12 @@ from repro.core.placement.migration import tables_from_placement_from_slots
 from repro.core.proxy import (BackpressureError, MetricsAggregator, OASConfig,
                               OmniProxy, Phase, Request, RequestOutput,
                               SamplingParams)
-from repro.distributed.ctx import MeshCtx, local_mesh_ctx
 from repro.models import moe as moe_mod
 from repro.models.lm import LM
-from repro.serving.engine import (BlockHandoff, DecodeEngine, KVArena,
-                                  PrefillEngine)
+from repro.serving.arena import BlockHandoff, KVArena
+from repro.serving.decode import DecodeEngine
+from repro.serving.placement import DevicePlacement
+from repro.serving.prefill import PrefillEngine
 
 
 @dataclass
@@ -80,21 +82,31 @@ class ServerConfig:
     admission_queue_cap: Optional[int] = None  # shed (BackpressureError) when
                                                # the admission backlog exceeds
                                                # this many waiting requests
+    placement_cfg: Optional[SchedulerConfig] = None  # OmniPlacement scheduler
+                                               # override (None → defaults
+                                               # with budget=0, table-width
+                                               # max_slots)
 
 
 class Server:
     def __init__(self, cfg: ModelConfig, scfg: ServerConfig,
-                 mesh: Optional[MeshCtx] = None, rng=None,
-                 pattern: Optional[list] = None, params=None, faults=None):
+                 mesh=None, rng=None,
+                 pattern: Optional[list] = None, params=None, faults=None,
+                 placement: Optional[DevicePlacement] = None):
         self.cfg, self.scfg = cfg, scfg
         # FaultPlane (serving/faults.py): seeded deterministic fault
         # injection, fired at the top of every step() before any engine work
         self.faults = faults
-        self.mesh = mesh or local_mesh_ctx()
+        # every engine is constructed through the explicit device-placement
+        # layer; `mesh` (a MeshCtx) survives as the back-compat spelling
+        self.placement = DevicePlacement.of(
+            placement if placement is not None else mesh)
+        self.mesh = self.placement.ctx
         self.lm = LM.build(cfg, self.mesh, pattern=pattern)
-        self.params = params if params is not None else \
+        self.params = self.placement.place_params(self.lm, params) \
+            if params is not None else \
             self.lm.init(rng if rng is not None else jax.random.PRNGKey(0))
-        self.tables = self.lm.default_tables()
+        self.tables = self.placement.replicate(self.lm.default_tables())
         self.proxy = OmniProxy(scfg.n_prefill, scfg.n_decode, scfg.oas)
         self.metrics = MetricsAggregator()
         # one shared paged-KV runtime for every co-located engine: prefill
@@ -110,7 +122,8 @@ class Server:
                 (scfg.n_decode * scfg.decode_slots + scfg.n_prefill) \
                 * max_blocks
             self.kv_arena = KVArena.build(self.lm, n_blocks,
-                                          scfg.kv_block_size)
+                                          scfg.kv_block_size,
+                                          placement=self.placement)
         self.prefills = [
             PrefillEngine(self.lm, self.params, self.tables, scfg.max_len,
                           chunk_tokens=scfg.chunk_tokens,
@@ -119,14 +132,16 @@ class Server:
                           cache_cap=scfg.prefix_cache_cap,
                           cache_cap_bytes=scfg.prefix_cache_cap_bytes,
                           tree=self.proxy.trees[i],
-                          arena=self.kv_arena)
+                          arena=self.kv_arena,
+                          placement=self.placement)
             for i in range(scfg.n_prefill)]
         self.decodes = [DecodeEngine(self.lm, self.params, self.tables,
                                      scfg.decode_slots, scfg.max_len,
                                      kv_blocks=scfg.kv_blocks,
                                      paged=scfg.paged_kv,
                                      block_size=scfg.kv_block_size,
-                                     arena=self.kv_arena)
+                                     arena=self.kv_arena,
+                                     placement=self.placement)
                         for _ in range(scfg.n_decode)]
         # rid → (cache B=1, next_token, pos, cached_tokens, prompt, params)
         # awaiting admission (prompt drives prefix-block sharing in the
@@ -152,10 +167,14 @@ class Server:
                                                       self.mesh.ep, s)
             # the engine applies ONE placement table across layers, so the
             # monitor runs on layer-summed counts (n_layers=1 collapse)
+            pcfg = scfg.placement_cfg
+            if pcfg is None:
+                pcfg = SchedulerConfig(budget=0, max_slots=s)
             self.placement_sched = DynamicScheduler(
                 ep=self.mesh.ep, n_experts=cfg.moe.n_experts, n_layers=1,
-                cfg=SchedulerConfig(budget=0, max_slots=s),
-                placements=[placement])
+                cfg=pcfg, placements=[placement])
+        self.migration_log: list[dict] = []
+        self._remap_stack = None        # lazily-built donated remap jit
 
     # ---- request-level API -------------------------------------------
     def add_request(self, prompt: tuple,
@@ -657,34 +676,54 @@ class Server:
             self._apply_migration(plans[0])
 
     def _apply_migration(self, plan):
-        """Rebuild MoE slot weights + tables for a new placement (the jit'd
-        gather XLA overlaps with serving; tables swap atomically after)."""
+        """Rebuild MoE slot weights + tables for a new placement. The stack
+        remap runs as one donated jit through the placement layer: expert
+        rows gather from the canonical copy (rep_rank/rep_slot of the OLD
+        tables) and scatter into the NEW slot layout, with out-shardings
+        pinned to the stack's own specs so migration never perturbs the
+        P("data", ..., "model") expert layout mid-stream. Compiled once;
+        every later migration reuses it (rr/rs/new_se are traced args)."""
+        if self._remap_stack is None:
+            def remap(stack, rr, rs, new_se):
+                def layer(p, stacked):
+                    if "moe_w1" not in p:
+                        return p
+                    p = dict(p)
+                    for k in ("moe_w1", "moe_w3", "moe_w2"):
+                        if stacked:  # [n_rep, R, s, ...] — canonical rows
+                            canon = p[k][:, rr, rs]
+                            p[k] = jax.vmap(
+                                lambda c: moe_mod.slots_from_canonical(
+                                    c, new_se))(canon)
+                        else:
+                            p[k] = moe_mod.slots_from_canonical(
+                                p[k][rr, rs], new_se)
+                    return p
+                return {"period": tuple(layer(p, True)
+                                        for p in stack["period"]),
+                        "rem": tuple(layer(p, False)
+                                     for p in stack["rem"])}
+            self._remap_stack = self.placement.donate_jit(
+                remap, donate_argnums=(0,),
+                out_specs=self.lm.specs()["stack"])
+
         old = self.tables
-        rr = np.asarray(old["rep_rank"])[:, 0]
-        rs = np.asarray(old["rep_slot"])[:, 0]
-        new_se = plan.new_slot_expert
-
-        def remap_layer(p, stacked):
-            if "moe_w1" not in p:
-                return p
-            p = dict(p)
-            for k in ("moe_w1", "moe_w3", "moe_w2"):
-                if stacked:     # [n_rep, R, s, ...] — gather canonical rows
-                    canon = p[k][:, rr, rs]
-                    p[k] = jax.vmap(
-                        lambda c: moe_mod.slots_from_canonical(c, new_se))(canon)
-                else:
-                    p[k] = moe_mod.slots_from_canonical(p[k][rr, rs], new_se)
-            return p
-
-        stack = self.params["stack"]
-        self.params["stack"] = {
-            "period": tuple(remap_layer(p, True) for p in stack["period"]),
-            "rem": tuple(remap_layer(p, False) for p in stack["rem"])}
-        self.tables = tables_from_placement_from_slots(np.asarray(new_se))
+        rr = jnp.asarray(np.asarray(old["rep_rank"])[:, 0])
+        rs = jnp.asarray(np.asarray(old["rep_slot"])[:, 0])
+        new_se = np.asarray(plan.new_slot_expert)
+        self.params["stack"] = self._remap_stack(
+            self.params["stack"], rr, rs, jnp.asarray(new_se))
+        self.tables = self.placement.replicate(
+            tables_from_placement_from_slots(new_se))
         for eng in self.prefills + self.decodes:
             eng.tables = self.tables
         self.n_migrations += 1
+        hist = self.placement_sched.history[-1] \
+            if self.placement_sched.history else {}
+        self.migration_log.append({
+            "step": self._step_count,
+            "b_before": float(hist.get("b", 0.0)),
+            "b_after": float(hist.get("b_sim", 0.0))})
 
     # ------------------------------------------------------------------
     def run(self, requests: list, max_wall_s: float = 300.0,
@@ -734,6 +773,7 @@ class Server:
         summary = self.metrics.summary(wall)
         summary["wall_s"] = wall
         summary["n_migrations"] = self.n_migrations
+        summary["migration_log"] = list(self.migration_log)
         summary["idle_slept_s"] = self._idle_slept_s
         summary["n_handoffs_swept"] = self.n_handoffs_swept
         if self.faults is not None:
