@@ -427,6 +427,150 @@ def main_sparse(fast: bool = False):
 
 
 # ----------------------------------------------------------------------
+# SpecPlane ablation: model-free speculative decoding (radix/n-gram prompt-
+# lookup drafting + batched multi-token verify with block/summary rollback;
+# see docs/serving.md §Speculative decoding). Run with `--spec`.
+def _spec_workload(vocab: int, n: int):
+    """Repetitive closed-loop decode pressure — the regime prompt-lookup
+    speculation targets (extraction, code, JSON, self-quoting chat stand-ins):
+    every prompt is a short gram repeated to ~40 tokens, decoding 32 tokens.
+    Greedy continuations of a cyclic prompt re-enter the cycle, so the
+    request's own history proposes drafts the verify keeps accepting."""
+    rng = np.random.default_rng(17)
+    reqs = []
+    for i in range(n):
+        gram = tuple(int(t) for t in rng.integers(0, vocab, 5 + (i % 3)))
+        reps = -(-40 // len(gram))
+        reqs.append(((gram * reps)[:40], 32))
+    return reqs
+
+
+def _build_spec(params, spec):
+    from repro.configs import reduced_config
+    from repro.core.proxy import MetricsAggregator, OASConfig
+    from repro.serving import Server, ServerConfig, SpecController
+
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=256, attn_q_chunk=128, attn_kv_chunk=128)
+    scfg = ServerConfig(
+        n_prefill=1, n_decode=1, decode_slots=4, max_len=256,
+        chunk_tokens=64, prefill_tick_budget=256, prefix_reuse=True,
+        paged_kv=True, kv_blocks=128, kv_block_size=16, spec=spec,
+        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0] * cfg.n_layers, params=params)
+    # warm every jit entry the measured run will hit — prefill chunk
+    # buckets, admission, the baseline step AND (on the spec row) the
+    # verify window at the same table bucket — with a repetitive prompt so
+    # the spec server actually traces the verify path
+    rng = np.random.default_rng(99)
+    warm_gram = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 7))
+    srv.run([((warm_gram * 8)[:44], 24),
+             (tuple(rng.integers(0, cfg.vocab_size, 12)), 4)])
+    srv.metrics = MetricsAggregator()
+    for e in srv.prefills:
+        e.store.clear()
+        e.stats.update(prefills=0, cache_hits=0, prefix_hits=0,
+                       reused_tokens=0, tokens=0, chunks=0, busy_s=0.0,
+                       host_fetches=0, blocks_mapped=0,
+                       prefill_kv_peak_blocks=0, defers=0)
+    for e in srv.decodes:
+        e.take_spec_stats()                 # drop the warmup window
+        e.stats.update(steps=0, tokens=0, busy_s=0.0, kv_transfer_bytes=0,
+                       kv_transfer_bytes_padded=0, handoff_copy_bytes=0,
+                       admits=0, preemptions=0, blocks_touched=0,
+                       blocks_shared=0, blocks_fresh=0, host_fetches=0)
+        if e.spec_ctl is not None:
+            e.stats.update(SpecController.stats_keys())
+    return cfg, srv
+
+
+def run_spec(n_requests: int = 6):
+    """→ per-variant result rows for the speculative-decoding ablation.
+
+      exact   the unchanged paged decode engine (one token per step)
+      spec    SpecConfig(k=4): prompt-lookup drafting + batched verify
+
+    Asserts: greedy outputs BIT-IDENTICAL between the rows (the verify
+    accepts exactly the prefix matching its own argmax and re-derives every
+    emitted token, so drafts can change only throughput, never content);
+    `tok_per_step` ≥ 1.5× exact on this repetitive workload;
+    `host_fetches == steps` on both rows (the verify window is one fetch);
+    pool/summary invariants hold at quiescence (every rejected draft rolled
+    back without leaving a stale block summary)."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.distributed.ctx import local_mesh_ctx
+    from repro.models import LM
+    from repro.serving import SpecConfig
+
+    cfg0 = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=256, attn_q_chunk=128, attn_kv_chunk=128)
+    lm = LM.build(cfg0, local_mesh_ctx(), pattern=[0] * cfg0.n_layers)
+    params = lm.init(jax.random.PRNGKey(0))
+    variants = [("exact", None), ("spec", SpecConfig(k=4))]
+    results, outputs = [], {}
+    for name, sp in variants:
+        cfg, srv = _build_spec(params, sp)
+        reqs = _spec_workload(cfg.vocab_size, n_requests)
+        s = srv.run(reqs, max_wall_s=600)
+        outputs[name] = {r.rid: tuple(r.output_tokens)
+                         for r in srv.metrics.done}
+        ds = s["decode_stats"][0]
+        assert s["n_done"] == n_requests, f"{name}: incomplete run"
+        assert ds["host_fetches"] == ds["steps"], \
+            f"{name}: speculation added host syncs " \
+            f"({ds['host_fetches']} fetches / {ds['steps']} steps)"
+        pool = srv.kv_arena.pool
+        pool.check_invariants(arena=srv.kv_arena)
+        results.append({
+            "variant": name, "n_done": s["n_done"],
+            "tpot_mean_ms": s["tpot_mean_ms"],
+            "tok_per_step": ds["tokens"] / max(ds["steps"], 1),
+            "draft_acceptance": s["draft_acceptance"],
+            "tokens_per_verify": s["tokens_per_verify"],
+            "spec_verifies": s["spec_verifies"],
+            "host_fetches": ds["host_fetches"],
+        })
+    assert outputs["spec"] == outputs["exact"], \
+        "speculative greedy outputs diverged from exact paged decode"
+    exact = next(r for r in results if r["variant"] == "exact")
+    spec = next(r for r in results if r["variant"] == "spec")
+    ratio = spec["tok_per_step"] / max(exact["tok_per_step"], 1e-9)
+    assert ratio >= 1.5, \
+        f"spec tok_per_step only {ratio:.2f}× exact on a repetitive " \
+        f"workload (acceptance {spec['draft_acceptance']:.2f})"
+    assert spec["spec_verifies"] > 0 and spec["draft_acceptance"] > 0.5
+    spec["speedup_x"] = ratio
+    return results
+
+
+def main_spec(fast: bool = False):
+    print("variant,n_done,tpot_mean_ms,tok_per_step,draft_acceptance,"
+          "tokens_per_verify,spec_verifies,host_fetches")
+    rows = run_spec(4 if fast else 6)
+    for r in rows:
+        da = r["draft_acceptance"]
+        tv = r["tokens_per_verify"]
+        print(f"{r['variant']},{r['n_done']},{r['tpot_mean_ms']:.2f},"
+              f"{r['tok_per_step']:.2f},{da:.3f},{tv:.2f},"
+              f"{r['spec_verifies']},{r['host_fetches']}", flush=True)
+    spec = next(r for r in rows if r["variant"] == "spec")
+    print(f"# greedy outputs bit-identical to exact paged decode; "
+          f"model-free drafting (prompt-lookup n-grams) accepted "
+          f"{spec['draft_acceptance']:.2f} of drafted tokens, "
+          f"{spec['tokens_per_verify']:.2f} tokens per verify step — "
+          f"{spec['speedup_x']:.2f}× tok/step over exact on the repetitive "
+          f"workload, with host_fetches == steps (the whole verify window "
+          f"is one fetch) and zero stale block summaries after every "
+          f"rollback", flush=True)
+
+
+# ----------------------------------------------------------------------
 # FaultPlane chaos soak: seeded deterministic fault injection over the full
 # PD-disaggregated paged stack (see docs/serving.md §Failure model &
 # recovery). Run with `--chaos`. Every row is one fault seed; the harness
@@ -681,6 +825,8 @@ if __name__ == "__main__":
     import sys
     if "--sparse" in sys.argv:
         main_sparse(fast="--fast" in sys.argv)
+    elif "--spec" in sys.argv:
+        main_spec(fast="--fast" in sys.argv)
     elif "--chaos" in sys.argv:
         main_chaos(fast="--fast" in sys.argv)
     elif "--mesh" in sys.argv:

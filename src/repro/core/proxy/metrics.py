@@ -37,6 +37,14 @@ class MetricsAggregator:
     blocks_attended: int = 0
     attn_mass_sum: float = 0.0
     attn_mass_n: float = 0.0
+    # SpecPlane (model-free speculative decoding): draft tokens proposed vs
+    # accepted by the batched verify, tokens emitted by verify steps, and
+    # the verify-step count — the figures behind the `draft_acceptance` and
+    # `tokens_per_verify` summary columns.
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_emitted: int = 0
+    spec_verifies: int = 0
 
     def add(self, req: Request):
         if req.finish_time is not None:
@@ -79,6 +87,24 @@ class MetricsAggregator:
         self.attn_mass_sum += mass_sum
         self.attn_mass_n += mass_n
 
+    def note_spec(self, drafted, accepted, emitted, verifies):
+        """Record one decode engine's drained speculation window
+        ([drafted, accepted, emitted, verify steps])."""
+        self.spec_drafted += int(round(float(drafted)))
+        self.spec_accepted += int(round(float(accepted)))
+        self.spec_emitted += int(round(float(emitted)))
+        self.spec_verifies += int(round(float(verifies)))
+
+    def _spec(self) -> dict:
+        d, n = self.spec_drafted, self.spec_verifies
+        return {"spec_drafted": d,
+                "spec_accepted": self.spec_accepted,
+                "spec_verifies": n,
+                "draft_acceptance": (self.spec_accepted / d if d
+                                     else float("nan")),
+                "tokens_per_verify": (self.spec_emitted / n if n
+                                      else float("nan"))}
+
     def _sparsity(self) -> dict:
         mass = (self.attn_mass_sum / self.attn_mass_n
                 if self.attn_mass_n else float("nan"))
@@ -116,7 +142,7 @@ class MetricsAggregator:
                     "ott_tok_s": 0.0, "ttt_tok_s": 0.0,
                     "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
                     "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes,
-                    **self._sparsity()}
+                    **self._sparsity(), **self._spec()}
         ttft = np.array([r.ttft() for r in self.done if r.ttft() is not None])
         tpot = np.array([r.tpot() for r in self.done if r.tpot() is not None])
         e2e = np.array([r.e2e() for r in self.done])
@@ -139,5 +165,5 @@ class MetricsAggregator:
             "ttt_tok_s": tot_toks / wall,
             "kv_transfer_true_bytes": self.kv_transfer_true_bytes,
             "kv_transfer_padded_bytes": self.kv_transfer_padded_bytes,
-            **self._sparsity(),
+            **self._sparsity(), **self._spec(),
         }

@@ -161,6 +161,45 @@ class RadixTree:
             node = child
 
     # ------------------------------------------------------------------
+    # Speculative drafting (SpecPlane): read-only n-gram continuation.
+    def continuation(self, tokens, k: int) -> list:
+        """Up to `k` tokens the tree stores immediately AFTER the exact
+        sequence `tokens` — the prompt-lookup draft for model-free
+        speculation. READ-ONLY: no LRU touch, no clock advance, so drafting
+        never perturbs eviction order (spec on/off must not change which
+        prefixes stay cached). Returns [] unless the whole of `tokens`
+        is present; at branch points the walk descends into the
+        most-recently-accessed child (ties broken by smallest token) —
+        a deterministic 'most recent continuation wins' policy."""
+        if k <= 0:
+            return []
+        tokens = tuple(tokens)
+        node, matched = self.root, 0
+        out: list = []
+        while matched < len(tokens):
+            rest = tokens[matched:]
+            child = node.children.get(rest[0])
+            if child is None:
+                return []
+            cp = _common_prefix(child.edge, rest)
+            matched += cp
+            if cp < len(child.edge):
+                if matched < len(tokens):
+                    return []          # diverged mid-edge: no exact match
+                out.extend(child.edge[cp:cp + k])   # ends inside this edge
+            node = child
+        while len(out) < k and node.children:
+            tok = min(node.children, key=lambda t:
+                      (-node.children[t].last_access, t))
+            child = node.children[tok]
+            take = min(k - len(out), len(child.edge))
+            out.extend(child.edge[:take])
+            if take < len(child.edge):
+                break
+            node = child
+        return out
+
+    # ------------------------------------------------------------------
     def _evict(self):
         """Evict least-recently-used leaves until under capacity."""
         while self.total_tokens > self.capacity:

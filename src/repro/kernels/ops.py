@@ -12,6 +12,7 @@ from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode import paged_decode
 from repro.kernels.paged_prefill import paged_prefill
 from repro.kernels.sink_decode import sink_decode
+from repro.kernels.spec_verify import spec_verify
 
 
 def _interpret() -> bool:
@@ -86,6 +87,25 @@ def attention_paged_prefill_op(q, k_new, v_new, k_pages, v_pages, tables,
     vf = v_new.transpose(0, 2, 1, 3)
     o = paged_prefill(qf, kf, vf, k_pages, v_pages, tables, off, chunk_len,
                       window=window, sink=sink, interpret=_interpret())
+    return o.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, h)
+
+
+def spec_verify_op(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
+    """Batched multi-token speculative verify over paged history (read-only).
+    q [B,S,H,h] — S = k+1 window rows per slot; k_new/v_new [B,S,K,h] the
+    window's rope'd keys (NOT yet in any block); arenas [N,K,bs,h]; tables
+    [B,nb]; off [B] per-slot resident-history length; n_tok [B] real window
+    rows → [B,S,H,h]. Same GQA regroup as the chunked-prefill adapter."""
+    B, S, H, h = q.shape
+    K = k_new.shape[2]
+    G = H // K
+    qf = q.reshape(B, S, K, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, S * G, h)
+    kf = k_new.transpose(0, 2, 1, 3)
+    vf = v_new.transpose(0, 2, 1, 3)
+    o = spec_verify(qf, kf, vf, k_pages, v_pages, tables, off, n_tok,
+                    interpret=_interpret())
     return o.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
         .reshape(B, S, H, h)
 

@@ -91,6 +91,20 @@ def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
     return jnp.einsum("bkrt,bkth->bkrh", p, v_all).astype(q.dtype)
 
 
+def spec_verify_ref(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
+    """Speculative-verify oracle. q [B,K,S*G,h] (row r = window token r//G);
+    k_new/v_new [B,K,S,h] the draft window's rope'd keys; pages [N,K,bs,h];
+    tables [B,nb]; off [B] per-slot history length; n_tok [B] real window
+    rows (draft_len+1) → [B,K,S*G,h]. Mathematically the verify step IS a
+    batched causal chunked-prefill read — every slot attends its resident
+    history plus its own window under the causal mask — so the oracle is
+    `paged_prefill_ref` with per-row offsets and no sparse window. Kept as a
+    named oracle so the verify kernel's contract (read-only, causal-only,
+    per-row off/cl) is pinned independently of prefill's evolution."""
+    return paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables,
+                             off, n_tok, window=0, sink=0)
+
+
 def block_topk_scores_ref(q, kmin, kmax, tables, lens, *, block_size):
     """q [B,K,G,h]; kmin/kmax [N,K,h] per-block key channel bounds;
     tables [B,nb]; lens [B] resident logical slots → scores [B,nb] f32.

@@ -1,0 +1,158 @@
+"""Batched speculative-verify attention over physically paged KV (Pallas).
+
+The verify-side sibling of ``paged_prefill``: every decode slot presents a
+tiny draft window of S = k+1 tokens — its current input token followed by k
+speculated continuations — at absolute positions ``off_b .. off_b + k``, and
+attends
+
+  1. the slot's **resident history** — tokens ``< off_b`` living in
+     non-contiguous fixed-size arena blocks ``[n_blocks, K, bs, h]``
+     reached through the slot's scalar-prefetched block-table row, and
+  2. the window's own keys under the causal in-chunk mask,
+
+producing the logits the greedy-prefix acceptance rule consumes. The regime
+differs from chunked prefill in two ways that shape the kernel: the batch is
+the full slot dimension (B = n_slots, every row with its OWN history offset
+``off_b`` and real-row count ``cl_b`` = draft_len+1 — prefill runs one task
+at a time with scalar offsets), and S is tiny (k+1, single-digit), so the
+whole [S·G, h] query tile of one kv group rides each grid step. Masking is
+causal-only: verify serves full-attention layers (ring layers take the
+read-only jnp resume path — their window is enforced by ring eviction, which
+the verify mask mirrors in ``spec_verify_ring_attention``).
+
+STRICTLY READ-ONLY: no K/V is written here. The engine commits the accepted
+prefix AFTER the in-jit acceptance via the masked scatter
+(``stack_verify_commit``) — rejected draft rows never touch a block, which
+is what makes rollback a non-event for the block-summary plane.
+
+Grid: (B, K, n_hist_blocks + 1), last dimension sequential; j < nb is
+history block j (compute skipped once ``j*bs >= off_b`` — table entries past
+the residency point at the reserved null block 0), j == nb is the in-window
+step. GQA is native: q row r is window token r // G.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax>=0.7 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, block_size: int,
+            n_blocks: int, S: int, G: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    off = meta_ref[b, 0]          # this slot's resident-history length
+    cl = meta_ref[b, 1]           # this slot's real window rows (draft_len+1)
+    SG = S * G
+    # query row r is window token r // G at absolute position off + r // G
+    p_row = off + jax.lax.broadcasted_iota(jnp.int32, (SG, 1), 0)[:, 0] // G
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _accumulate(s, mask):
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        m_ref[...] = m_new
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        return p, corr
+
+    # history block j: logical slots [j*bs, (j+1)*bs) hold tokens at those
+    # absolute positions; skip compute once the block starts past this
+    # slot's residency (its tabled entry is the null block)
+    @pl.when(jnp.logical_and(j < n_blocks, j * block_size < off))
+    def _history():
+        q = q_ref[...].astype(jnp.float32)              # [SG, h]
+        k = kp_ref[...].astype(jnp.float32)             # [bs, h]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        tok = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (tok < off) & (tok <= p_row[:, None])
+        p, corr = _accumulate(s, mask)
+        v = vp_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+
+    # in-window step: causal attention over the window's real keys (padded
+    # draft rows past cl are masked as keys; their queries emit garbage the
+    # acceptance rule never reads)
+    @pl.when(j == n_blocks)
+    def _window():
+        q = q_ref[...].astype(jnp.float32)              # [SG, h]
+        k = kn_ref[...].astype(jnp.float32)             # [S, h]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        u = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (u < cl) & ((off + u) <= p_row[:, None])
+        p, corr = _accumulate(s, mask)
+        v = vn_ref[...].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spec_verify(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok,
+                *, interpret: bool = False):
+    """q [B, K, S*G, h] (row r = window token r//G); k_new/v_new [B, K, S, h];
+    arenas [N, K, bs, h]; tables [B, nb] physical block ids; off [B] per-slot
+    history length, n_tok [B] real window rows → o [B, K, S*G, h]."""
+    B, K, SG, h = q.shape
+    S = k_new.shape[2]
+    G = SG // S
+    bs = k_pages.shape[2]
+    nb = tables.shape[1]
+    scale = h ** -0.5
+    meta = jnp.stack([jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,)),
+                      jnp.broadcast_to(jnp.asarray(n_tok, jnp.int32), (B,))],
+                     axis=1)
+    kernel = functools.partial(_kernel, scale=scale, block_size=bs,
+                               n_blocks=nb, S=S, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # tables, meta
+        grid=(B, K, nb + 1),
+        in_specs=[
+            pl.BlockSpec((None, None, SG, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, S, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            pl.BlockSpec((None, None, S, h),
+                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+            # the j == nb (in-window) step still fetches a tabled block; the
+            # clamped entry is never read by compute
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, meta:
+                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+            pl.BlockSpec((None, None, bs, h),
+                         lambda b, kh, j, tbl, meta:
+                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, SG, h),
+                               lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((SG, h), jnp.float32),
+            pltpu.VMEM((SG,), jnp.float32),
+            pltpu.VMEM((SG,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, SG, h), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), meta, q, k_new, v_new, k_pages, v_pages)

@@ -451,6 +451,47 @@ def paged_cache_write(k_pages, v_pages, k_new, v_new, blk, off):
     return k_pages, v_pages
 
 
+def paged_cache_write_tokens(k_pages, v_pages, k_new, v_new, blk, off):
+    """Write a per-sequence token WINDOW into arena blocks.
+
+    arenas [N, K, bs, h]; k_new/v_new [B, S, K, h] (S window rows per
+    sequence); blk/off [B, S] physical block id and in-block offset per row.
+    The speculative-verify commit: the caller redirects rejected/padded rows
+    to the null block 0, so only the accepted prefix ever lands in a real
+    block — rollback is the absence of a write, never an undo. Distinct live
+    sequences own distinct blocks and a window's rows occupy distinct
+    (block, offset) slots, so scatter order is irrelevant outside null.
+    """
+    K = k_pages.shape[1]
+    ki = jnp.arange(K)[None, None, :]
+    k_pages = k_pages.at[blk[:, :, None], ki, off[:, :, None]].set(
+        k_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[blk[:, :, None], ki, off[:, :, None]].set(
+        v_new.astype(v_pages.dtype))
+    return k_pages, v_pages
+
+
+def paged_cache_write_tokens_masked(k_pages, v_pages, k_new, v_new, blk, off,
+                                    write):
+    """`paged_cache_write_tokens` for arenas WITHOUT a null block (the ring
+    arenas): rows with write[b,s] False write back the slot's CURRENT
+    content (gather-then-where, the `prefill_resume_attention` idiom), so a
+    rejected draft row is a bit-exact no-op on its target slot. Callers must
+    keep each sequence's masked-in rows on distinct (blk, off) slots."""
+    K = k_pages.shape[1]
+    ki = jnp.arange(K)[None, None, :]
+    bi = blk[:, :, None]
+    oi = off[:, :, None]
+    cur_k = k_pages[bi, ki, oi]                          # [B, S, K, h]
+    cur_v = v_pages[bi, ki, oi]
+    wm = write[:, :, None, None]
+    k_wr = jnp.where(wm, k_new.astype(k_pages.dtype), cur_k)
+    v_wr = jnp.where(wm, v_new.astype(v_pages.dtype), cur_v)
+    k_pages = k_pages.at[bi, ki, oi].set(k_wr)
+    v_pages = v_pages.at[bi, ki, oi].set(v_wr)
+    return k_pages, v_pages
+
+
 def ring_slot(t, sink: int, recent: int):
     """Cache slot for the token written at absolute position t (sink+ring)."""
     W = sink + recent
@@ -493,6 +534,69 @@ def resident_token_positions(W: int, off, *, sink: int, recent: int):
     else:
         tok = j
     return tok, tok < off
+
+
+def spec_verify_ring_attention(q, k_new, v_new, k_cache, v_cache, positions,
+                               *, sink: int, recent: int):
+    """Read-only speculative-verify attention over a ring (sink+recent) cache.
+
+    q [B,S,H,h] is each slot's draft window at absolute positions [B,S]
+    (row i of slot b at positions[b, 0] + i); k_new/v_new [B,S,K,h] are the
+    window's rope'd keys; caches [B,W,K,h] hold the FROZEN ring history —
+    tokens < positions[:, 0], each ring slot its residue class's largest
+    member below the window. Nothing is written: the accepted prefix is
+    committed afterwards by `paged_cache_write_tokens_masked`.
+
+    Mask equivalence with baseline ring decode: single-token decode writes
+    position t into its ring slot and attends every occupied slot, so the
+    resident set at t is exactly { tok : t - tok < recent } ∪ sink — the
+    ring's physical eviction IS the window. A verify query row at position
+    p = off + i must therefore drop any frozen token with p - tok ≥ recent:
+    its evicting class member tok + recent lies in [off, p], i.e. it is an
+    in-window key this row attends instead. In-window keys themselves are
+    always within the window (i < S ≤ recent — callers keep the draft
+    window no longer than the smallest ring, see `chunked_prefill_support`)
+    so they take only the causal mask. Padded draft rows need no masking:
+    a padded key j is attended only by query rows i ≥ j, which are
+    themselves padding whose outputs the acceptance rule never reads.
+    """
+    B, S, H, h = q.shape
+    K = k_new.shape[2]
+    G = H // K
+    W = k_cache.shape[1]
+    scale = h ** -0.5
+    f32 = jnp.float32
+    pos = jnp.asarray(positions, jnp.int32)              # [B, S]
+    off = pos[:, 0]
+    # per-slot resident map (the [B]-batched resident_token_positions)
+    j = jnp.arange(W, dtype=jnp.int32)[None]             # [1, W]
+    if sink or recent:
+        wraps = jnp.maximum((off[:, None] - 1 - j) // recent, 0)
+        tok = jnp.where(j < sink, j, j + wraps * recent)
+    else:
+        tok = jnp.broadcast_to(j, (B, W))
+    res = tok < off[:, None]                             # [B, W]
+
+    def allowed(p, t):
+        ok = t <= p
+        if recent > 0:
+            ok &= ((p - t) < recent) | (t < sink)
+        return ok
+
+    m_old = res[:, None, :] & allowed(pos[:, :, None], tok[:, None, :])
+    m_new = allowed(pos[:, :, None], pos[:, None, :])    # causal in-window
+    qg = q.reshape(B, S, K, G, h).astype(f32)
+    s_old = jnp.einsum("bskgh,bwkh->bskgw", qg,
+                       k_cache.astype(f32)) * scale
+    s_old = jnp.where(m_old[:, :, None, None, :], s_old,
+                      jnp.asarray(NEG_INF, f32))
+    s_new = jnp.einsum("bskgh,bukh->bskgu", qg, k_new.astype(f32)) * scale
+    s_new = jnp.where(m_new[:, :, None, None, :], s_new,
+                      jnp.asarray(NEG_INF, f32))
+    p_att = jax.nn.softmax(jnp.concatenate([s_old, s_new], axis=-1), axis=-1)
+    v_all = jnp.concatenate([v_cache.astype(f32), v_new.astype(f32)], axis=1)
+    out = jnp.einsum("bskgw,bwkh->bskgh", p_att, v_all)
+    return out.reshape(B, S, H, h).astype(q.dtype)
 
 
 def prefill_resume_attention(q, k_new, v_new, k_cache, v_cache, positions, *,

@@ -230,3 +230,39 @@ class LM:
             tables=tables, token_mask=token_mask, block_tables=block_tables)
         logits = self._logits(params, x[:, 0])
         return new_cache, logits, aux
+
+    def verify(self, params, cache, tokens, positions, tables=None,
+               token_mask=None, block_tables=None):
+        """Speculative multi-token verify: a READ-ONLY forward over each
+        slot's draft window. tokens [B, S] = [current input token,
+        draft_1..draft_{S-1}] per row; positions [B] = each slot's next
+        write position (the same cursor the single-token decode step
+        holds). Runs the stack over all S window positions against the
+        paged caches WITHOUT writing any K/V — each attention layer stages
+        its rope'd window keys instead — and returns (logits [B, S, V],
+        staged, aux). Greedy-prefix acceptance and the masked commit
+        (`verify_commit`) happen in the caller's jit, so a rejected draft
+        never touches a block or its summary. token_mask [B] marks live
+        slots; it is broadcast across the window for the MoE counters
+        (moe_ffn's flat [B·S] row mask)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        bp = self.mesh.batch_part(B)
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+        x = self.mesh.constrain(x, P(bp, None, None))
+        pos2 = jnp.asarray(positions, jnp.int32)[:, None] + \
+            jnp.arange(S, dtype=jnp.int32)[None]
+        tm = None if token_mask is None else jnp.repeat(token_mask, S)
+        x, staged, aux = stack_mod.stack_apply(
+            cfg, self.mesh, self.plan, params["stack"], x, mode="verify",
+            positions=pos2, caches=cache, batch_part=bp, tables=tables,
+            token_mask=tm, block_tables=block_tables)
+        return self._logits(params, x), staged, aux
+
+    def verify_commit(self, cache, staged, positions, n_write, block_tables):
+        """Land the accepted prefix of a `verify` window — n_write [B] rows
+        per slot — in the paged caches; see stack_verify_commit."""
+        return stack_mod.stack_verify_commit(
+            self.cfg, self.plan, cache, staged, positions, n_write,
+            block_tables)

@@ -614,6 +614,38 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
         else:
             out = attn_mod.paged_decode_attention(q[:, 0], kc, vc, tbl, lens)
         y = out.reshape(B, 1, H * h)
+    elif mode == "verify":
+        # speculative verify: READ-ONLY attention of each slot's draft
+        # window [B, S] (S = k+1) against its paged history. No K/V write
+        # happens here — the window's rope'd keys are STAGED as this
+        # layer's "new cache" and committed post-acceptance by
+        # stack_verify_commit, so a rejected draft row leaves blocks and
+        # block summaries untouched (rollback = the write never landing).
+        pos2 = jnp.asarray(positions, jnp.int32)        # [B, S]
+        if sink or recent:
+            # gather the slot's frozen ring blocks into a dense [B, W]
+            # view (slot b statically owns blocks [b·bpw, (b+1)·bpw))
+            bs_a = cache["k"].shape[2]
+            bpw = ring_block_count(sink, recent, bs_a)
+            W = sink + recent
+            kr = jnp.moveaxis(cache["k"].reshape(B, bpw, K, bs_a, h), 2, 3) \
+                .reshape(B, bpw * bs_a, K, h)[:, :W]
+            vr = jnp.moveaxis(cache["v"].reshape(B, bpw, K, bs_a, h), 2, 3) \
+                .reshape(B, bpw * bs_a, K, h)[:, :W]
+            out = attn_mod.spec_verify_ring_attention(
+                q, k, v, kr, vr, pos2, sink=sink, recent=recent)
+        else:
+            t = pos2[:, 0]
+            if use_pallas:
+                from repro.kernels import ops as kops
+                out = kops.spec_verify_op(q, k, v, cache["k"], cache["v"],
+                                          block_tables, t,
+                                          jnp.full_like(t, S))
+            else:
+                out = attn_mod.paged_prefill_attention(
+                    q, k, v, cache["k"], cache["v"], block_tables, t, S)
+        y = out.reshape(B, S, H * h)
+        new_cache = {"k": k, "v": v}
     elif mode == "decode":
         pos = jnp.asarray(positions)
         t = pos[:, 0] if pos.ndim == 2 else (pos[0] if pos.ndim == 1 else pos)
@@ -677,6 +709,12 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
 
 def mamba_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, mode: str,
                    cache, batch_part, true_len=None):
+    if mode == "verify":
+        # backstop: SpecController refuses hybrid/SSM stacks upfront — a
+        # rejected draft would need the pre-window recurrent state back,
+        # and SSM state has no block/summary plane to roll back through
+        raise NotImplementedError(
+            "speculative verify has no multi-token SSM rollback path")
     B, S, D = x.shape
     ssm = cfg.ssm
     d_in = ssm.expand * D
@@ -869,6 +907,13 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
         new_pos = jnp.max(jnp.asarray(positions)) + 1
         new_caches = {"period": new_period_caches, "rem": tuple(new_rem_caches),
                       "pos": jnp.asarray(new_pos, jnp.int32)}
+    elif mode == "verify":
+        # STAGED (not yet written) rope'd window K/V per attention layer —
+        # period entries arrive scan-stacked [n_rep, B, S, K, h]. The caller
+        # decides acceptance, then lands only the accepted prefix via
+        # stack_verify_commit; until then the real caches are untouched.
+        new_caches = {"period": new_period_caches,
+                      "rem": tuple(new_rem_caches)}
     aux = {"period_counts": period_counts, "rem_counts": tuple(rem_counts),
            # per-layer online-sparsity vectors [blocks_scored,
            # blocks_attended, mass_sum, mass_n] — period entries arrive
@@ -876,3 +921,79 @@ def stack_apply(cfg: ModelConfig, mesh: MeshCtx, plan: StackPlan, params: dict,
            "period_sparsity": period_sparsity,
            "rem_sparsity": tuple(rem_sparsity)}
     return x, new_caches, aux
+
+
+# ======================================================================
+def stack_verify_commit(cfg: ModelConfig, plan: StackPlan, caches, staged,
+                        positions, n_write, block_tables):
+    """Land a speculative verify window's ACCEPTED prefix in the paged caches.
+
+    caches: the paged cache pytree the verify forward read (untouched by
+    it); staged: stack_apply(mode="verify")'s second return — each
+    attention layer's rope'd window K/V; positions [B] window start (the
+    pre-verify slot cursor); n_write [B] rows to land per slot — the
+    CONSUMED input tokens (current token + accepted drafts; 0 for idle
+    slots); block_tables [B, nb].
+
+    Window row i of slot b lands at absolute position positions[b] + i iff
+    i < n_write[b]. Full-attention layers redirect rejected/idle/overflow
+    rows to the null block and recompute the touched blocks' summaries in
+    the same jit (duplicate + null ids are harmless re-reductions), so the
+    zero-stale-summary invariant holds at the jit boundary — a rollback is
+    simply a write that never happened. Ring layers have no null block:
+    rejected rows write back their target slot's current content
+    (gather-then-where), bit-exact no-ops. Distinct window rows always map
+    to distinct ring slots because S ≤ recent (`chunked_prefill_support`
+    caps the draft window). Returns the updated cache pytree; "pos"
+    advances to the furthest committed cursor like a decode step's cache.
+    """
+    positions = jnp.asarray(positions, jnp.int32)
+    n_write = jnp.asarray(n_write, jnp.int32)
+    B = positions.shape[0]
+    entries = list(staged["period"]) + list(staged["rem"])
+    S = entries[0]["k"].shape[-3]
+    pos2 = positions[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    valid = jnp.arange(S, dtype=jnp.int32)[None] < n_write[:, None]
+    bidx = jnp.arange(B, dtype=jnp.int32)
+
+    def commit_full(entry, stg):
+        bs = entry["k"].shape[-2]
+        nb = block_tables.shape[1]
+        blk = jnp.where(valid & (pos2 < nb * bs),
+                        block_tables[bidx[:, None],
+                                     jnp.minimum(pos2 // bs, nb - 1)], 0)
+        off = pos2 % bs
+        kc, vc = attn_mod.paged_cache_write_tokens(
+            entry["k"], entry["v"], stg["k"], stg["v"], blk, off)
+        out = dict(entry, k=kc, v=vc)
+        if "kmin" in entry:
+            kmn, kmx, kme = attn_mod.update_block_summaries(
+                entry["kmin"], entry["kmax"], entry["kmean"], kc,
+                blk.reshape(-1))
+            out.update(kmin=kmn, kmax=kmx, kmean=kme)
+        return out
+
+    def commit_ring(entry, stg, sink, recent):
+        bs = entry["k"].shape[-2]
+        bpw = ring_block_count(sink, recent, bs)
+        slot = attn_mod.ring_slot(pos2, sink, recent)
+        blk = bidx[:, None] * bpw + slot // bs
+        off = slot % bs
+        kc, vc = attn_mod.paged_cache_write_tokens_masked(
+            entry["k"], entry["v"], stg["k"], stg["v"], blk, off, valid)
+        return dict(entry, k=kc, v=vc)
+
+    def commit(spec, entry, stg, stacked):
+        sink, recent = cache_window(cfg, spec)
+        if sink or recent:
+            fn = lambda e, s: commit_ring(e, s, sink, recent)
+        else:
+            fn = commit_full
+        return jax.vmap(fn)(entry, stg) if stacked else fn(entry, stg)
+
+    per = tuple(commit(s, caches["period"][i], staged["period"][i], True)
+                for i, s in enumerate(plan.period))
+    rem = tuple(commit(s, caches["rem"][i], staged["rem"][i], False)
+                for i, s in enumerate(plan.rem))
+    new_pos = jnp.max(positions + n_write).astype(jnp.int32)
+    return {"period": per, "rem": rem, "pos": new_pos}

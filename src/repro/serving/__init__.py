@@ -7,9 +7,11 @@ from repro.serving.placement import DevicePlacement
 from repro.serving.prefill import PrefillEngine, PrefillResult, PrefillTask
 from repro.serving.server import Server, ServerConfig
 from repro.serving.sparsity import SparsityController, SparsityPlan
+from repro.serving.spec import SpecConfig, SpecController
 
 __all__ = ["BlockHandoff", "DecodeEngine", "DevicePlacement", "KVArena",
            "PrefillEngine", "PrefillResult", "PrefillTask",
            "Server", "ServerConfig", "SamplingParams", "RequestOutput",
            "BackpressureError", "FaultConfig", "FaultPlane", "FaultSpec",
-           "SparsityController", "SparsityPlan"]
+           "SparsityController", "SparsityPlan",
+           "SpecConfig", "SpecController"]

@@ -40,6 +40,8 @@ from repro.serving.kvpool import KVPool
 from repro.serving.placement import DevicePlacement
 from repro.serving.sampling import sample_tokens
 from repro.serving.sparsity import SparsityController
+from repro.serving.spec import SpecConfig, SpecController
+from repro.serving.stats import drain_accumulator
 
 
 # ======================================================================
@@ -69,6 +71,8 @@ class DecodeEngine:
     block_size: int = 16
     arena: Optional[KVArena] = None   # shared arena (co-located prefill)
     placement: Optional[DevicePlacement] = None
+    spec: Optional[SpecConfig] = None   # model-free speculative decoding
+    spec_radix: Optional[object] = None  # proxy RadixTree for draft lookup
     stats: dict = field(default_factory=lambda: {
         "steps": 0, "tokens": 0, "busy_s": 0.0, "kv_transfer_bytes": 0,
         "kv_transfer_bytes_padded": 0, "handoff_copy_bytes": 0,
@@ -128,6 +132,17 @@ class DecodeEngine:
                                      self.n_slots * self.max_blocks * 4)
         self.pool = self.arena.pool if self.paged else \
             KVPool(n_blocks=self.kv_blocks, block_size=self.block_size)
+        # model-free speculative decoding (SpecPlane): drafting state lives
+        # host-side in the controller; the batched verify runs as ONE extra
+        # donated jit over [n_slots, k+1] window positions
+        self.spec_ctl = SpecController.from_model(
+            self.lm, self.spec, sparsity=self.sparsity, radix=self.spec_radix)
+        if self.spec_ctl is not None:
+            if not self.paged:
+                raise ValueError("speculative decoding requires paged "
+                                 "attention KV (block/summary rollback is "
+                                 "defined on the paged plane)")
+            self.stats.update(SpecController.stats_keys())
         # PD transfer-cost metering constants: a B=1 dense handoff cache is
         # `_dense_kv_nbytes` regardless of prompt length (the padded figure
         # the old meter charged); the TRUE payload is the bounded leaves
@@ -167,6 +182,11 @@ class DecodeEngine:
             # mass_sum, mass_n], layer-summed — accumulates device-side in
             # the step jit, drained only via take_sparsity_stats()
             self.state["sparsity"] = jnp.zeros(4, jnp.float32)
+        if self.spec_ctl is not None:
+            # speculation window [drafted, accepted, emitted, verifies] —
+            # accumulates inside the verify jit, drained only via
+            # take_spec_stats(), so host_fetches == steps survives spec
+            self.state["spec"] = jnp.zeros(4, jnp.float32)
         self.state = pl.replicate(self.state)
         self.pos_h = np.zeros(self.n_slots, np.int64)      # next write position
         self.tok_h = np.zeros(self.n_slots, np.int64)      # current input token
@@ -198,6 +218,12 @@ class DecodeEngine:
             step_cache_sp = dense_sp
         self._step = pl.donate_jit(self._step_impl, donate_argnums=(1, 2),
                                    out_specs=(step_cache_sp, state_sp, P()))
+        self._verify = None
+        if self.spec_ctl is not None:
+            self._verify = pl.donate_jit(
+                self._verify_impl, donate_argnums=(1, 2),
+                out_specs=(step_cache_sp, state_sp, P()))
+        self.greedy_h = np.zeros(self.n_slots, bool)   # slot temp <= 0
 
     # ---- arena compose/split -----------------------------------------
     # Paged jit calls take (private ∪ arena) and write the donated arena
@@ -417,6 +443,55 @@ class DecodeEngine:
                 new_state["sparsity"] = state["sparsity"] + sum(vecs)
         return new_cache, new_state, nxt
 
+    def _verify_impl(self, params, cache, state, tables, block_tbl, drafts,
+                     draft_len):
+        """Batched speculative verify: feed every slot's window
+        [current token, draft_1..draft_k] through a READ-ONLY forward,
+        accept the longest prefix matching the model's own greedy argmax,
+        and land exactly the accepted rows' K/V with a masked commit —
+        rejected draft positions never touch a block or its summary, so
+        rollback is the write never happening. Position 0 reproduces the
+        baseline step bit-exactly (greedy slots reduce to the same argmax;
+        sampled slots draw with the same (key, pos+1) fold), which is what
+        makes the emitted greedy stream identical to non-speculative decode
+        under ANY draft source. → (cache, state, packed [B, k+2]) where
+        packed[:, :k+1] are the emitted tokens and packed[:, -1] the
+        per-slot emit count — ONE host fetch for the whole window."""
+        B, k = drafts.shape
+        act = state["active"]
+        toks = jnp.concatenate([state["tok"][:, None], drafts], axis=1)
+        logits, staged, aux = self.lm.verify(
+            params, cache, toks, state["pos"], tables=tables,
+            token_mask=act, block_tables=block_tbl)
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt0 = sample_tokens(logits[:, 0], state["temp"], state["top_k"],
+                             state["top_p"], state["key"], state["pos"] + 1)
+        is_greedy = state["temp"] <= 0.0
+        dmask = jnp.arange(k)[None, :] < draft_len[:, None]
+        match = (drafts == greedy[:, :k]) & dmask & is_greedy[:, None]
+        # accepted prefix length: draft_i is right iff it equals the greedy
+        # continuation given positions < t+i — all of which were themselves
+        # accepted (cumprod), exactly the sequential decode induction
+        a = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+        n_emit = jnp.where(act, a + 1, 0)
+        emit = jnp.concatenate([nxt0[:, None], greedy[:, 1:]], axis=1)
+        new_tok = jnp.where(act, emit[jnp.arange(B), a], state["tok"])
+        new_cache = self.lm.verify_commit(cache, staged, state["pos"],
+                                          n_emit, block_tbl)
+        new_state = dict(state)
+        new_state.update(pos=state["pos"] + n_emit, tok=new_tok)
+        if "moe_counts" in state:
+            cnts = ([c.reshape(-1, c.shape[-1]) for c in aux["period_counts"]]
+                    + [c[None] for c in aux["rem_counts"]])
+            new_state["moe_counts"] = (state["moe_counts"] +
+                                       jnp.concatenate(cnts, axis=0))
+        actf = act.astype(jnp.float32)
+        new_state["spec"] = state["spec"] + jnp.stack(
+            [(actf * draft_len).sum(), (actf * a).sum(),
+             n_emit.sum().astype(jnp.float32), jnp.ones((), jnp.float32)])
+        packed = jnp.concatenate([emit, n_emit[:, None]], axis=1)
+        return new_cache, new_state, packed
+
     def _extract_impl(self, cache_all, slot):
         """Pull one slot back out as a B=1 cache (preemption path)."""
         per = jax.tree.map(
@@ -478,14 +553,24 @@ class DecodeEngine:
         averaged — see serving/sparsity.py). → the layer-averaged [4] np
         vector, or None when online sparsity is off. The only host sync for
         these counters — call at monitor ticks / run end, not per step."""
-        acc = self.state.get("sparsity")
-        if acc is None:
+        v = drain_accumulator(self.state, "sparsity")
+        if v is None:
             return None
-        v = np.asarray(acc, np.float64)
-        self.state["sparsity"] = jnp.zeros_like(acc)
         self.sparsity.note(self.stats, v)
         L = max(self.sparsity.plan.n_sparse_layers, 1)
         return v / L
+
+    def take_spec_stats(self):
+        """Fetch + reset the device-side speculation window ([drafted,
+        accepted, emitted, verify steps], see SpecController.stats_keys)
+        and fold it into stats. → the raw [4] np vector, or None when
+        speculation is off. The only host sync for the spec counters —
+        call at monitor ticks / run end, not per step."""
+        v = drain_accumulator(self.state, "spec")
+        if v is None:
+            return None
+        SpecController.note(self.stats, v)
+        return v
 
     def has_capacity(self) -> bool:
         return len(self.free) > 0
@@ -600,9 +685,15 @@ class DecodeEngine:
                 self.stats["handoff_copy_bytes"] += \
                     self._full_tok_nbytes * self.max_len
             self.stats["admits"] += 1
+            drow = device_row(sparams, rid)
             rec = (slot, cache_one.private if handoff else cache_one, tok,
-                   pos, row, shn, device_row(sparams, rid))
+                   pos, row, shn, drow)
             (hbatch if handoff else batch).append(rec)
+            # host mirror of the greedy predicate: the draft gather skips
+            # sampled slots without touching device state
+            self.greedy_h[slot] = float(drow[0]) <= 0.0
+            if self.spec_ctl is not None:
+                self.spec_ctl.on_admit(rid, prompt, tok)
             out[rid] = True
 
         # pad to a pow2 batch by repeating the last insert (idempotent:
@@ -649,12 +740,139 @@ class DecodeEngine:
                                   cached_tokens, prompt, params)])[rid]
 
     # ------------------------------------------------------------------
-    def step(self) -> dict[int, int]:
-        """One batched decode step → {rid: next_token} for active slots.
-        Requests whose block allocation cannot grow are preempted into
-        self.preempted (cache extracted for later re-admission)."""
+    def step(self):
+        """One batched decode step. Without speculation: {rid: next_token}
+        for active slots (unchanged contract). With speculation enabled
+        ({rid: [tokens]}, ≥ 1 each): draft up to k candidates per greedy
+        slot and run the batched verify window instead of the single-token
+        step — still exactly one device→host fetch. Requests whose block
+        allocation cannot grow are preempted into self.preempted (cache
+        extracted for later re-admission)."""
         if not self.slot_rid:
             return {}
+        if self.spec_ctl is None:
+            return self._step_base()
+        drafts_h, dlen_h = self._gather_drafts()
+        if not dlen_h.any():
+            # nothing to speculate this step: ride the plain single-token
+            # jit (cheaper than a k+1 window of guaranteed-empty drafts)
+            out = {rid: [t] for rid, t in self._step_base().items()}
+            for rid, ts in out.items():
+                self.spec_ctl.on_tokens(rid, ts)
+            return out
+        return self._step_spec(drafts_h, dlen_h)
+
+    def _gather_drafts(self):
+        """Host-side draft gather → (drafts [n_slots, k] i32, dlen
+        [n_slots] i32). Sampled slots and slots at the max_len capacity
+        wall are skipped (their row rides the verify window as a plain
+        single-token step); draft length is clamped so every candidate
+        write position stays below max_len."""
+        k = self.spec_ctl.k
+        drafts = np.zeros((self.n_slots, k), np.int32)
+        dlen = np.zeros(self.n_slots, np.int32)
+        for slot, rid in self.slot_rid.items():
+            if not self.greedy_h[slot]:
+                continue
+            room = self.max_len - int(self.tokens_h[slot])
+            if room <= 0:
+                continue
+            d = self.spec_ctl.draft(rid)[:room]
+            if not d:
+                continue
+            drafts[slot, :len(d)] = d
+            dlen[slot] = len(d)
+        return drafts, dlen
+
+    def _step_spec(self, drafts_h, dlen_h):
+        """One speculative verify step → {rid: [tokens]}."""
+        t0 = time.monotonic()
+        # pre-extend each drafting slot's allocation to cover its window's
+        # write positions; a slot that cannot grow (even after reclaim)
+        # degrades to a plain single-token row — never preempt here, the
+        # baseline row still fits the blocks it already owns
+        touched = 0
+        for slot, rid in self.slot_rid.items():
+            cur = int(self.tokens_h[slot])
+            touched += self.pool.blocks_for(cur)
+            d = int(dlen_h[slot])
+            want = min(cur + d, self.max_len)
+            if d <= 0 or want <= cur:
+                continue
+            nb_used = self.pool.blocks_for(cur)
+            grown = self.pool.extend(rid, cur, want)
+            if grown is None and self.arena.reclaim(
+                    max(self.pool.blocks_for(want) - nb_used, 1)):
+                grown = self.pool.extend(rid, cur, want)
+            if grown is None:
+                drafts_h[slot] = 0
+                dlen_h[slot] = 0
+                continue
+            for b in grown:
+                self.tables_h[slot, nb_used] = b
+                nb_used += 1
+            if grown:
+                self._tbl_dirty = True
+                self.stats["blocks_fresh"] += len(grown)
+            self.tokens_h[slot] = want
+        self.stats["blocks_touched"] += touched
+        self._refresh_tables()
+        cache, self.state, packed = self._verify(
+            self.params, self._full_cache(), self.state, self.tables,
+            self._tbl_dev, jnp.asarray(drafts_h), jnp.asarray(dlen_h))
+        self._store_cache(cache)
+        packed_np = np.asarray(packed)     # the single per-step host fetch
+        self.stats["host_fetches"] += 1
+        out = {}
+        ntok = 0
+        for slot, rid in list(self.slot_rid.items()):
+            n = int(packed_np[slot, -1])
+            toks = [int(t) for t in packed_np[slot, :n]]
+            out[rid] = toks
+            ntok += n
+            self.pos_h[slot] += n
+            if n:
+                self.tok_h[slot] = toks[-1]
+            covered = int(self.tokens_h[slot])
+            new_tokens = min(int(self.pos_h[slot]) + 1, self.max_len)
+            if new_tokens > covered:
+                # full accept: the next input token needs one position past
+                # the pre-extended window — same grow path as the baseline
+                nb_used = self.pool.blocks_for(covered)
+                grown = self.pool.extend(rid, covered, new_tokens)
+                if grown is None and self.arena.reclaim(1):
+                    grown = self.pool.extend(rid, covered, new_tokens)
+                if grown is None:
+                    self.stats["preemptions"] += 1
+                    self.preempted.append(self._preempt(rid))
+                    continue
+                for b in grown:
+                    self.tables_h[slot, nb_used] = b
+                    nb_used += 1
+                if grown:
+                    self._tbl_dirty = True
+                    self.stats["blocks_fresh"] += len(grown)
+            elif new_tokens < covered:
+                # rejected tail: hand the over-extended blocks back and
+                # zero their table entries. The masked commit never wrote
+                # them (rejected rows land in the null block), so the
+                # released blocks carry no new content and no summary goes
+                # stale — this IS the rollback.
+                dropped = self.pool.shrink(rid, covered, new_tokens)
+                if dropped:
+                    nb_new = self.pool.blocks_for(new_tokens)
+                    self.tables_h[slot, nb_new:nb_new + len(dropped)] = 0
+                    self._tbl_dirty = True
+            self.tokens_h[slot] = new_tokens
+            self.spec_ctl.on_tokens(rid, toks)
+        dt = time.monotonic() - t0
+        self.stats["steps"] += 1
+        self.stats["tokens"] += ntok
+        self.stats["busy_s"] += dt
+        return out
+
+    def _step_base(self) -> dict[int, int]:
+        """The non-speculative single-token step → {rid: next_token}."""
         t0 = time.monotonic()
         if self.paged:
             self._refresh_tables()
@@ -713,11 +931,9 @@ class DecodeEngine:
         """Fetch + reset the device-side expert activation window ([L_moe, E]
         np array, or None for non-MoE models). The only host sync for counts
         — call it at monitor ticks, not per step."""
-        c = self.state.get("moe_counts")
-        if c is None:
+        out = drain_accumulator(self.state, "moe_counts")
+        if out is None:
             return None
-        out = np.asarray(c, np.float64)
-        self.state["moe_counts"] = jnp.zeros_like(c)
         self.stats["moe_counts"] = out          # last fetched window (stats)
         return out
 
@@ -736,6 +952,8 @@ class DecodeEngine:
         del self.slot_rid[slot]
         del self.rid_slot[rid]
         self._prompts.pop(rid, None)
+        if self.spec_ctl is not None:
+            self.spec_ctl.on_release(rid)
         self.state["active"] = self.state["active"].at[slot].set(False)
         # a stale temp > 0 on a freed slot would permanently defeat the
         # all-greedy fast path in sample_tokens (jnp.all over every slot)

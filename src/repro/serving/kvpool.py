@@ -339,6 +339,38 @@ class KVPool:
         self.per_request.setdefault(rid, []).extend(fresh)
         return fresh
 
+    def shrink(self, rid: int, old_tokens: int, new_tokens: int) -> List[int]:
+        """Shrink `rid`'s allocation from old_tokens → new_tokens, returning
+        the block ids dropped from its table (tail-first order). The
+        speculative-decode partial-accept path: blocks pre-extended to cover
+        a draft window hand back the never-written tail when the window is
+        cut short. Tail blocks past the prefix are private by construction
+        (`extend` only allocates fresh ids), so a shrink back to the
+        pre-extension count can never cut into a shared prefix; refcounts
+        are still honored (a block another mapper holds is unmapped here
+        but stays alive), and quarantined blocks skip the free list exactly
+        as in `release`."""
+        drop = self.blocks_for(old_tokens) - self.blocks_for(new_tokens)
+        if drop <= 0:
+            return []
+        table = self.per_request.get(rid)
+        if table is None:
+            raise KeyError(f"rid {rid} holds no blocks")
+        if drop > len(table):
+            raise ValueError(f"shrink past rid {rid}'s table")
+        released = []
+        for _ in range(drop):
+            b = table.pop()
+            released.append(b)
+            n = self.refcount.get(b, 0) - 1
+            if n <= 0:
+                self.refcount.pop(b, None)
+                if b not in self.quarantined:
+                    self._free.append(b)
+            else:
+                self.refcount[b] = n
+        return released
+
     def release(self, rid: int):
         """Unmap all of `rid`'s blocks; a block returns to the free list only
         when its last mapper releases (prefix sharers keep it alive).

@@ -47,6 +47,7 @@ from repro.serving.arena import BlockHandoff, KVArena
 from repro.serving.decode import DecodeEngine
 from repro.serving.placement import DevicePlacement
 from repro.serving.prefill import PrefillEngine
+from repro.serving.spec import SpecConfig
 
 
 @dataclass
@@ -74,6 +75,8 @@ class ServerConfig:
                                       # empty (-1 → run to max_tokens)
     idle_sleep_s: float = 0.01        # max per-iteration sleep while run()
                                       # waits for a future arrival
+    spec: Optional[SpecConfig] = None  # model-free speculative decoding
+                                       # (SpecPlane; None → off, no change)
     # ---- FaultPlane recovery knobs (None → off, no behavior change) ----
     watchdog_steps: Optional[int] = None    # retire a request whose progress
                                             # marker is unchanged for N steps
@@ -141,7 +144,10 @@ class Server:
                                      paged=scfg.paged_kv,
                                      block_size=scfg.kv_block_size,
                                      arena=self.kv_arena,
-                                     placement=self.placement)
+                                     placement=self.placement,
+                                     spec=scfg.spec,
+                                     spec_radix=self.proxy.trees[0]
+                                     if self.proxy.trees else None)
                         for _ in range(scfg.n_decode)]
         # rid → (cache B=1, next_token, pos, cached_tokens, prompt, params)
         # awaiting admission (prompt drives prefix-block sharing in the
@@ -622,7 +628,16 @@ class Server:
                     eng.release(rid)             # done or re-routed elsewhere
                     finished.add(rid)
                     continue
-                reason = self._note_token(req, tok)
+                # a speculating engine emits a LIST per slot (≥ 1 token per
+                # verify step); note each in order and stop at the first
+                # finish reason — tokens past a mid-window stop are never
+                # recorded or streamed, exactly as if decoded one at a time
+                seq = tok if isinstance(tok, (list, tuple)) else (tok,)
+                reason = None
+                for t in seq:
+                    reason = self._note_token(req, t)
+                    if reason:
+                        break
                 if reason:
                     finished.add(rid)
                     eng.release(rid)
@@ -656,6 +671,10 @@ class Server:
                 sp = eng.take_sparsity_stats()
                 if sp is not None:
                     self.metrics.note_sparsity(*sp)
+            if eng.spec_ctl is not None:
+                v = eng.take_spec_stats()
+                if v is not None:
+                    self.metrics.note_spec(*v)
 
     # ---- OmniPlacement closed loop -----------------------------------
     def _maybe_placement_tick(self):
@@ -770,6 +789,10 @@ class Server:
             sp = eng.take_sparsity_stats()
             if sp is not None:
                 self.metrics.note_sparsity(*sp)
+            # same for the speculation window (no-op when spec is off)
+            v = eng.take_spec_stats()
+            if v is not None:
+                self.metrics.note_spec(*v)
         summary = self.metrics.summary(wall)
         summary["wall_s"] = wall
         summary["n_migrations"] = self.n_migrations

@@ -1,0 +1,33 @@
+"""Device-side stat accumulators: the shared drain pattern.
+
+Several engine counters (online-sparsity windows, MoE expert activation
+counts, speculation windows) accumulate INSIDE the donated step jit — a
+jnp array in the slot-state dict that each step adds to — and are fetched
+(+ reset) only at monitor ticks or run end. That keeps the decode hot loop
+at exactly one device→host fetch per step (`host_fetches == steps`): the
+counters ride the donated state and never force their own sync.
+
+`drain_accumulator` is the one implementation of the fetch-and-reset half
+of that pattern; `take_sparsity_stats` / `take_moe_counts` /
+`take_spec_stats` on the engine are thin wrappers that add their own
+folding/interpretation on top.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def drain_accumulator(state: dict, key: str) -> Optional[np.ndarray]:
+    """Fetch the device-side accumulator `state[key]` as float64 numpy and
+    reset it to zeros in place. Returns None when the accumulator was never
+    installed (feature off for this engine). This is a HOST SYNC — call it
+    at monitor ticks / run end, never in the per-step loop."""
+    acc = state.get(key)
+    if acc is None:
+        return None
+    v = np.asarray(acc, np.float64)
+    state[key] = jnp.zeros_like(acc)
+    return v

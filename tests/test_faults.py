@@ -31,7 +31,7 @@ import pytest
 from repro.configs import reduced_config
 from repro.core.proxy import MetricsAggregator, OASConfig, Phase
 from repro.serving import (BackpressureError, FaultConfig, FaultPlane,
-                           SamplingParams, Server, ServerConfig)
+                           SamplingParams, Server, ServerConfig, SpecConfig)
 from repro.serving.faults import FAULT_KINDS, corrupt_block
 
 
@@ -367,10 +367,10 @@ def test_disaggregated_failure_drill(small):
 SOAK_SEEDS = (1, 2, 5, 7, 9)
 
 
-def _soak_server(cfg, faults=None):
+def _soak_server(cfg, faults=None, spec=None):
     scfg = ServerConfig(n_prefill=2, n_decode=2, decode_slots=4, max_len=128,
                         chunk_tokens=32, prefill_tick_budget=64, kv_blocks=96,
-                        watchdog_steps=200,
+                        watchdog_steps=200, spec=spec,
                         oas=OASConfig(defer_window=0.0, max_retries=10))
     return Server(cfg, scfg, pattern=[0, 0], faults=faults)
 
@@ -413,4 +413,43 @@ def test_chaos_soak_bit_identical(small):
         assert len(pool.quarantined) == srv.metrics.blocks_quarantined
         s = srv.metrics.summary(1.0)
         assert s["n_errors"] == 0 and s["n_timeouts"] == 0
+        _assert_no_leaks(srv)
+
+
+def test_chaos_soak_spec_bit_identical(small):
+    """SpecPlane × FaultPlane composition: with model-free speculative
+    decoding on, chaos runs (instance kills, KV corruption/loss, handoff
+    drops, allocation failures, stragglers) must still complete every
+    request with greedy output bit-identical to the fault-free
+    NON-speculative run — drafts change how many tokens a verify step
+    lands, never which, and every recovery path (preempt, restart,
+    re-admission) re-seeds the drafting history cleanly. Quiescent pools
+    pass the zero-stale-summary scan after every rollback."""
+    cfg = small
+    rng = np.random.default_rng(7)
+    gram = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 6))
+    reqs = [(gram * 3, 12) for _ in range(4)] + \
+        [(tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 24)), 12)
+         for _ in range(4)]
+
+    base = _soak_server(cfg)
+    _, base_deltas, _ = _drive(base, reqs)
+    ref = {r.rid: tuple(r.output_tokens) for r in base.metrics.done}
+    assert len(ref) == 8
+    _assert_no_leaks(base)
+
+    for seed in (2, 5):
+        plane = FaultPlane(FaultConfig(seed=seed, horizon=20))
+        srv = _soak_server(cfg, faults=plane, spec=SpecConfig(k=4))
+        _, deltas, finishes = _drive(srv, reqs)
+        outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+        assert len(outs) == 8, f"seed {seed}: incomplete ({finishes})"
+        assert outs == ref, f"seed {seed}: spec+faults diverged"
+        for rid, toks in outs.items():
+            assert tuple(deltas[rid]) == toks, \
+                f"seed {seed}: rid {rid} streamed deltas replayed or lost"
+        assert sum(plane.injected.values()) > 0
+        for eng in srv.decodes:
+            eng.take_spec_stats()
+            assert eng.stats["host_fetches"] == eng.stats["steps"]
         _assert_no_leaks(srv)

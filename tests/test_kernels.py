@@ -11,6 +11,7 @@ from repro.kernels.moe_gmm import moe_gmm
 from repro.kernels.paged_decode import paged_decode
 from repro.kernels.paged_prefill import paged_prefill
 from repro.kernels.sink_decode import sink_decode
+from repro.kernels.spec_verify import spec_verify
 
 TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -189,6 +190,86 @@ def test_paged_prefill_fallback_matches_ref():
         .reshape(B, S, H, h)
     np.testing.assert_allclose(np.asarray(out[:, :6]),
                                np.asarray(want[:, :6]), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bs,S", [(8, 4), (16, 5), (8, 2)])
+@pytest.mark.parametrize("G", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spec_verify_sweep(bs, S, G, dtype):
+    """Batched speculative-verify window (S = k+1 rows per slot) vs the
+    chunked-prefill oracle: per-slot history offsets covering empty,
+    mid-block, and fully-resident histories; padded draft rows; causal
+    in-window keys."""
+    rng = jax.random.PRNGKey(bs * S + G)
+    r = jax.random.split(rng, 6)
+    B, K, h, N, nb = 3, 2, 32, 20, 4
+    q = jax.random.normal(r[0], (B, K, S * G, h), dtype)
+    kn = jax.random.normal(r[1], (B, K, S, h), dtype)
+    vn = jax.random.normal(r[2], (B, K, S, h), dtype)
+    kp = jax.random.normal(r[3], (N, K, bs, h), dtype)
+    vp = jax.random.normal(r[4], (N, K, bs, h), dtype)
+    tables = jax.random.randint(r[5], (B, nb), 1, N)
+    off = jnp.array([0, bs + bs // 2 - 1, nb * bs], jnp.int32)
+    cl = jnp.array([S, max(S - 2, 1), 1], jnp.int32)
+    out = spec_verify(q, kn, vn, kp, vp, tables, off, cl, interpret=True)
+    want = ref.spec_verify_ref(q, kn, vn, kp, vp, tables, off, cl)
+    got = np.asarray(out, np.float32)
+    exp = np.asarray(want, np.float32)
+    # padded window rows (token index >= cl) are garbage by contract on
+    # both sides — compare real rows only
+    for b in range(B):
+        real = int(cl[b]) * G
+        np.testing.assert_allclose(got[b, :, :real], exp[b, :, :real],
+                                   **TOL[dtype])
+
+
+def test_spec_verify_null_blocks_masked():
+    """Table entries at or past the residency point alias the null block
+    (id 0); its poisoned content must never leak into verify outputs."""
+    rng = jax.random.PRNGKey(4)
+    r = jax.random.split(rng, 5)
+    B, K, G, h, bs, N, S = 1, 1, 2, 16, 8, 6, 3
+    q = jax.random.normal(r[0], (B, K, S * G, h))
+    kn = jax.random.normal(r[1], (B, K, S, h))
+    vn = jax.random.normal(r[2], (B, K, S, h))
+    kp = jax.random.normal(r[3], (N, K, bs, h)).at[0].set(1e4)
+    vp = jax.random.normal(r[4], (N, K, bs, h)).at[0].set(1e4)
+    tables = jnp.array([[3, 0, 0]])             # 1 resident history block
+    off, cl = jnp.array([bs]), jnp.array([S])
+    out = spec_verify(q, kn, vn, kp, vp, tables, off, cl, interpret=True)
+    want = ref.spec_verify_ref(q, kn, vn, kp, vp, tables, off, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_spec_verify_adapter_matches_ref():
+    """ops layout adapter (model [B,S,H,h] layout, GQA regroup) vs the
+    kernel oracle on a mixed empty/mid-block history batch."""
+    rng = jax.random.PRNGKey(21)
+    r = jax.random.split(rng, 6)
+    B, S, K, G, h, bs, N, nb = 2, 4, 2, 3, 16, 8, 12, 3
+    H = K * G
+    q = jax.random.normal(r[0], (B, S, H, h))
+    kn = jax.random.normal(r[1], (B, S, K, h))
+    vn = jax.random.normal(r[2], (B, S, K, h))
+    kp = jax.random.normal(r[3], (N, K, bs, h))
+    vp = jax.random.normal(r[4], (N, K, bs, h))
+    tables = jax.random.randint(r[5], (B, nb), 1, N)
+    off, cl = jnp.array([0, 13]), jnp.array([S, 3])
+    got = ops.spec_verify_op(q, kn, vn, kp, vp, tables, off, cl)
+    qf = q.reshape(B, S, K, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, K, S * G, h)
+    want = ref.spec_verify_ref(qf, kn.transpose(0, 2, 1, 3),
+                               vn.transpose(0, 2, 1, 3), kp, vp, tables,
+                               off, cl)
+    want = want.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, S, H, h)
+    for b in range(B):
+        real = int(cl[b])
+        np.testing.assert_allclose(np.asarray(got[b, :real]),
+                                   np.asarray(want[b, :real]),
+                                   rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("bs,nb", [(8, 4), (16, 3), (8, 8)])

@@ -1,0 +1,248 @@
+"""SpecPlane: model-free speculative decoding on the paged KV plane.
+
+Covers the PR-8 contract:
+
+  · drafting sources — prompt-lookup n-gram maps (longest-gram-first, most
+    recent previous occurrence), read-only RadixTree continuation lookup
+    (deterministic, no LRU perturbation), and the cross-request suffix
+    table's LRU eviction;
+  · controller policy — k=0 / no-config degrade to a None controller (the
+    engine then runs the unchanged baseline step), refusal to compose with
+    OmniAttn online top-k selection and with SSM stacks;
+  · the headline equivalence — greedy token streams bit-identical to
+    non-speculative decode, under GOOD drafts (n-gram hits), ADVERSARIAL
+    drafts (always-wrong source: every window rolls back), and a mixed
+    greedy/sampled batch — across block sizes {8, 16};
+  · rollback hygiene — after every verify step with rejections the pool
+    invariants hold (zero stale key summaries on the arena plane, PR-5
+    contract), the over-extended tail blocks are back on the free list,
+    and `host_fetches == steps` survives speculation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.proxy.radix import RadixTree
+from repro.distributed.ctx import local_mesh_ctx
+from repro.models import LM
+from repro.serving import DecodeEngine, PrefillEngine, SamplingParams
+from repro.serving.spec import (DraftSource, PromptLookupSource,
+                                SpecConfig, SpecController,
+                                SuffixTableSource)
+
+
+@pytest.fixture(scope="module")
+def small():
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        vocab_size=128)
+    lm = LM.build(cfg, mesh, pattern=[0, 0])
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    yield
+    jax.clear_caches()
+
+
+# ---------------------------------------------------------------------
+# drafting sources (host-side, no model)
+# ---------------------------------------------------------------------
+def test_prompt_lookup_drafts_previous_continuation():
+    src = PromptLookupSource(ngram=3)
+    h = [1, 2, 3, 9, 8, 1, 2, 3]
+    src.on_admit(0, h)
+    # tail gram (1,2,3) previously occurred at position 0..2 → drafts 9, 8
+    assert src.draft(0, h, 2) == [9, 8]
+    # the draft window is clamped by k
+    assert src.draft(0, h, 1) == [9]
+    # incremental registration matches from-scratch registration
+    src2 = PromptLookupSource(ngram=3)
+    src2.on_admit(1, h[:5])
+    h2 = list(h)
+    src2.on_tokens(1, h2, 3)
+    assert src2.draft(1, h2, 2) == src.draft(0, h, 2)
+    src.on_release(0, h)
+    assert src.draft(0, h, 2) == []
+
+
+def test_prompt_lookup_prefers_most_recent_occurrence():
+    src = PromptLookupSource(ngram=2)
+    h = [5, 6, 1, 5, 6, 2, 5, 6]
+    src.on_admit(0, h)
+    # (5,6) occurred at 0 (→1) and 3 (→2); most recent previous wins → 2
+    assert src.draft(0, h, 1) == [2]
+
+
+def test_radix_continuation_deterministic_and_read_only():
+    tree = RadixTree(capacity_tokens=1 << 20)
+    p1 = (1, 2, 3, 4, 5, 6)
+    p2 = (1, 2, 3, 7, 8, 9)
+    tree.insert(p1, now=1.0)
+    tree.insert(p2, now=2.0)
+    before = tree.total_tokens
+    # exact-prefix continuation: the stored suffix of the matching prompt
+    assert tuple(tree.continuation((1, 2, 3, 4), 2)) == (5, 6)
+    # branch point: the most recently accessed child wins, repeatably
+    first = tuple(tree.continuation((1, 2, 3), 3))
+    assert first == (7, 8, 9)
+    for _ in range(5):
+        assert tuple(tree.continuation((1, 2, 3), 3)) == first
+    # absent sequence → no draft; lookup never mutated the tree
+    assert tree.continuation((9, 9, 9), 4) == []
+    assert tree.total_tokens == before
+
+
+def test_suffix_table_lru_eviction():
+    src = SuffixTableSource(ngram=2, max_entries=2, cont_len=4)
+    src.on_release(0, [1, 2, 10, 11])       # (1,2)→(10,11), (2,10)→(11,)
+    assert src.draft(9, [0, 1, 2], 2) == [10, 11]
+    # capacity 2: folding a third gram evicts the stalest — but the
+    # draft() above LRU-touched (1,2), so (2,10) is the one to go
+    src.on_release(1, [7, 8, 42])
+    assert src.draft(9, [2, 10], 4) == []
+    assert src.draft(9, [0, 1, 2], 2) == [10, 11]
+    assert src.draft(9, [7, 8], 1) == [42]
+    assert len(src.table) == 2
+
+
+# ---------------------------------------------------------------------
+# controller policy
+# ---------------------------------------------------------------------
+def test_controller_degrades_off(small):
+    cfg, lm, params = small
+    assert SpecController.from_model(lm, None) is None
+    assert SpecController.from_model(lm, SpecConfig(k=0)) is None
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=64,
+                      spec=SpecConfig(k=0))
+    assert de.spec_ctl is None and de._verify is None
+    assert "spec" not in de.state
+
+
+def test_controller_refuses_online_sparsity(small):
+    cfg, lm, params = small
+    with pytest.raises(ValueError, match="top-k"):
+        SpecController.from_model(lm, SpecConfig(k=4), sparsity=object())
+
+
+def test_controller_refuses_ssm_stack(small):
+    cfg, lm, params = small
+
+    class _Spec:
+        kind = "mamba"
+
+    class _Plan:
+        def all_specs(self):
+            return [_Spec()]
+
+    class _LM:
+        plan = _Plan()
+
+    with pytest.raises(ValueError, match="SSM"):
+        SpecController.from_model(_LM(), SpecConfig(k=4))
+
+
+# ---------------------------------------------------------------------
+# engine equivalence + rollback hygiene
+# ---------------------------------------------------------------------
+class _WrongSource(DraftSource):
+    """Adversarial source: always proposes out-of-band tokens, so every
+    verify window rejects the full draft and rolls back."""
+
+    name = "wrong"
+
+    def __init__(self, vocab):
+        self.bad = vocab - 1
+
+    def draft(self, rid, h, k):
+        return [self.bad] * k
+
+
+def _decode_engine(lm, params, block_size, spec=None, n_slots=4,
+                   max_len=192):
+    return DecodeEngine(lm, params, None, n_slots=n_slots, max_len=max_len,
+                        block_size=block_size, spec=spec)
+
+
+def _run_engine(lm, params, de, prompts, n, sparams=None):
+    pe = PrefillEngine(lm, params, None, max_len=de.max_len)
+    outs = {}
+    for i, p in enumerate(prompts):
+        cache, first, _ = pe.process(p)
+        sp = None if sparams is None else sparams[i]
+        assert de.admit(i, cache, first, len(p), prompt=p, params=sp)
+        outs[i] = [first]
+    while any(len(v) < n + 1 for v in outs.values()):
+        toks = de.step()
+        for rid, t in toks.items():
+            outs[rid].extend(t if isinstance(t, list) else [t])
+        if de.spec_ctl is not None:
+            # rollback hygiene at EVERY quiescent point, not just the end:
+            # zero stale summaries, refcounts consistent, freed tail blocks
+            # back in circulation
+            de.pool.check_invariants(arena=de.arena)
+    assert de.stats["host_fetches"] == de.stats["steps"]
+    return {i: v[:n + 1] for i, v in outs.items()}
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_spec_greedy_bit_identical(small, block_size):
+    """Greedy streams under speculation are bit-identical to baseline
+    decode, with real n-gram drafts accepted along the way."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(0)
+    gram = tuple(int(t) for t in rng.integers(0, 32, 6))
+    prompts = [gram * 4,
+               tuple(int(t) for t in rng.integers(0, 32, 11))]
+    base = _run_engine(lm, params, _decode_engine(lm, params, block_size),
+                       prompts, 20)
+    de = _decode_engine(lm, params, block_size, spec=SpecConfig(k=4))
+    out = _run_engine(lm, params, de, prompts, 20)
+    assert out == base
+    v = de.take_spec_stats()
+    assert v is not None and de.stats["spec_emitted"] > 0
+    assert de.stats["spec_accepted"] > 0, "no draft ever accepted"
+    assert de.stats["steps"] < 20, "speculation never shortened the run"
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_spec_rollback_all_rejected_bit_identical(small, block_size):
+    """Adversarial drafting: every window rolls back (acceptance 0), the
+    stream is still bit-identical, and every pre-extended tail block is
+    handed back with summaries clean — the full rollback lifecycle."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(1)
+    prompts = [tuple(int(t) for t in rng.integers(0, 32, 9)),
+               tuple(int(t) for t in rng.integers(0, 32, 14))]
+    base = _run_engine(lm, params, _decode_engine(lm, params, block_size),
+                       prompts, 16)
+    de = _decode_engine(lm, params, block_size, spec=SpecConfig(k=3))
+    de.spec_ctl.sources = [_WrongSource(cfg.vocab_size)]
+    out = _run_engine(lm, params, de, prompts, 16)
+    assert out == base
+    de.take_spec_stats()
+    assert de.stats["spec_accepted"] == 0
+    assert de.stats["spec_drafted"] > 0
+    # every emitted token was the verify's own position-0 baseline token
+    assert de.stats["spec_emitted"] == de.stats["spec_verifies"] * 2
+
+
+def test_spec_mixed_sampled_slots_ride_baseline_rows(small):
+    """A sampled (temperature > 0) request sharing the batch never drafts;
+    the greedy request's stream still matches its baseline."""
+    cfg, lm, params = small
+    rng = np.random.default_rng(2)
+    gram = tuple(int(t) for t in rng.integers(0, 32, 5))
+    prompts = [gram * 4, tuple(int(t) for t in rng.integers(0, 32, 8))]
+    sparams = [None, SamplingParams(temperature=0.8, seed=7)]
+    base = _run_engine(lm, params, _decode_engine(lm, params, 16),
+                       prompts, 12, sparams=sparams)
+    de = _decode_engine(lm, params, 16, spec=SpecConfig(k=4))
+    out = _run_engine(lm, params, de, prompts, 12, sparams=sparams)
+    assert out[0] == base[0]
+    de.take_spec_stats()
+    assert de.stats["spec_emitted"] > 0
