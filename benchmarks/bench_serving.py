@@ -823,6 +823,13 @@ def main(fast: bool = False):
 
 if __name__ == "__main__":
     import sys
+    # ContractGuard preamble (docs/analysis.md): every bench variant is
+    # assert-gated on its serving contracts (host_fetches == steps, work
+    # columns, bit-identity) — refuse to produce numbers at all on a tree
+    # whose *static* contracts already fail, so a broken invariant can't
+    # hide behind a plausible-looking CSV
+    from repro.analysis import contract_gate
+    contract_gate()
     if "--sparse" in sys.argv:
         main_sparse(fast="--fast" in sys.argv)
     elif "--spec" in sys.argv:

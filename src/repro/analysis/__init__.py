@@ -1,0 +1,25 @@
+"""ContractGuard — static analysis for the serving stack's invariants.
+
+Two layers (see docs/analysis.md):
+
+  · `repro.analysis.lint` — AST contract linter over src/repro with
+    pluggable rules (`repro.analysis.rules`) and inline waivers; run as
+    `python -m repro.analysis [--strict]`.
+  · `repro.analysis.jaxpr_audit` — post-warmup auditor over the
+    `HotLoopRegistry` that `DevicePlacement.donate_jit` populates: traces
+    every registered hot-loop jit and asserts on the jaxpr/lowering
+    (no callbacks, no f64, donation wired, out-shardings pinned).
+"""
+from repro.analysis.diagnostics import Diagnostic, Report
+from repro.analysis.lint import run_lint
+
+__all__ = ["Diagnostic", "Report", "run_lint", "contract_gate"]
+
+
+def contract_gate() -> None:
+    """Assert-gated preamble for benchmarks: refuse to run on a tree that
+    fails the contract lint (cheap — pure AST, no jax import)."""
+    report = run_lint()
+    assert report.ok(strict=True), \
+        "contract lint failed — fix or waive before benchmarking:\n" \
+        + report.format(strict=True)

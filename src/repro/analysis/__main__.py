@@ -1,0 +1,54 @@
+"""CLI: `python -m repro.analysis [--strict] [--rule ID ...]`.
+
+Exit 0 when the tree is contract-clean. Non-strict mode fails only on
+unwaived diagnostics; `--strict` (what CI and the bench preamble run)
+additionally fails on stale waivers and waivers missing a justification,
+so the waiver set can never rot. Waived diagnostics are always echoed
+with their justification.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import run_lint
+from repro.analysis.rules import RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="ContractGuard AST contract linter (layer 1). The "
+                    "jaxpr hot-loop audit (layer 2) needs a live server: "
+                    "run `pytest tests/test_analysis.py -m jaxpr_audit`.")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale/unjustified waivers")
+    ap.add_argument("--rule", action="append", metavar="ID",
+                    help="run only this rule id (repeatable)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            doc = (RULES[name].__doc__ or
+                   sys.modules[RULES[name].__module__].__doc__ or "")
+            head = doc.strip().splitlines()[0] if doc.strip() else ""
+            print(f"{name:24s} {head}")
+        return 0
+
+    rules = None
+    if args.rule:
+        unknown = set(args.rule) - set(RULES)
+        if unknown:
+            ap.error(f"unknown rule(s): {', '.join(sorted(unknown))} "
+                     f"(see --list-rules)")
+        rules = {r: RULES[r] for r in args.rule}
+
+    report = run_lint(rules=rules)
+    print(report.format(strict=args.strict))
+    return 0 if report.ok(strict=args.strict) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

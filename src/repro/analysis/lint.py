@@ -1,0 +1,175 @@
+"""ContractGuard layer 1 — the AST contract linter.
+
+Walks every Python file under `src/repro/`, parses it once, and runs the
+pluggable rule set from `repro.analysis.rules` over the shared
+`LintContext`. Rules are pure functions `rule(ctx) -> [Diagnostic]`; the
+engine owns file discovery, waiver application (see diagnostics.py) and
+report assembly. `run_lint(files=...)` accepts an in-memory
+{relpath: source} mapping so the test suite can lint fixture snippets
+through the exact same pipeline CI runs.
+
+The rules encode the serving stack's architectural invariants (see
+docs/analysis.md for the catalog): the OmniProxy stays jax-free, every
+serving hot-loop jit routes through `DevicePlacement.donate_jit`, jitted
+bodies never host-sync, rng flows from explicit seeds, static_argnums are
+never fed raw `.shape`-dependent values, and no build artifacts are ever
+tracked.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+from repro.analysis.diagnostics import Diagnostic, Report, scan_waivers
+
+# repo root = parents[3] of this file (src/repro/analysis/lint.py)
+REPO_ROOT = Path(__file__).resolve().parents[3]
+SRC_PREFIX = "src/repro"
+
+
+@dataclass
+class SourceFile:
+    path: str                 # repo-relative posix path
+    source: str
+    tree: ast.AST
+    lines: list[str]
+
+    @property
+    def module(self) -> str:
+        """src/repro/serving/decode.py -> repro.serving.decode"""
+        p = self.path
+        if p.startswith("src/"):
+            p = p[len("src/"):]
+        if p.endswith("/__init__.py"):
+            p = p[: -len("/__init__.py")]
+        elif p.endswith(".py"):
+            p = p[:-3]
+        return p.replace("/", ".")
+
+
+@dataclass
+class LintContext:
+    root: Path
+    files: dict[str, SourceFile]
+    # overridable for tests; None -> rules that need them ask git / disk
+    tracked_files: Optional[list[str]] = None
+    gitignore_text: Optional[str] = None
+    _by_module: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._by_module = {sf.module: sf for sf in self.files.values()}
+
+    def module_file(self, modname: str) -> Optional[SourceFile]:
+        """Resolve `repro.x.y` to its SourceFile (package __init__ counts)."""
+        return self._by_module.get(modname)
+
+    def in_dir(self, prefix: str):
+        """All files under a src/repro-relative dir, e.g. 'serving'."""
+        full = f"{SRC_PREFIX}/{prefix.rstrip('/')}/"
+        return [sf for p, sf in sorted(self.files.items())
+                if p.startswith(full)]
+
+
+def _parse(path: str, source: str) -> Optional[SourceFile]:
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError:
+        return None
+    return SourceFile(path, source, tree, source.splitlines())
+
+
+def build_context(root: Optional[Path] = None,
+                  files: Optional[dict[str, str]] = None,
+                  **kw) -> LintContext:
+    root = Path(root) if root is not None else REPO_ROOT
+    srcs: dict[str, SourceFile] = {}
+    if files is not None:
+        for relpath, source in files.items():
+            sf = _parse(relpath, source)
+            if sf is not None:
+                srcs[relpath] = sf
+    else:
+        for f in sorted((root / SRC_PREFIX).rglob("*.py")):
+            rel = f.relative_to(root).as_posix()
+            sf = _parse(rel, f.read_text())
+            if sf is not None:
+                srcs[rel] = sf
+    return LintContext(root, srcs, **kw)
+
+
+def run_rules(ctx: LintContext,
+              rules: Optional[dict[str, Callable]] = None) -> Report:
+    from repro.analysis.rules import RULES
+    rules = RULES if rules is None else rules
+    report = Report()
+    for name in sorted(rules):
+        for d in rules[name](ctx):
+            report.diagnostics.append(d)
+    for sf in ctx.files.values():
+        report.waivers.extend(scan_waivers(sf.path, sf.lines))
+    report.apply_waivers()
+    return report
+
+
+def run_lint(root: Optional[Path] = None,
+             files: Optional[dict[str, str]] = None,
+             rules: Optional[dict[str, Callable]] = None,
+             **kw) -> Report:
+    """One-call entry: build the context, run every rule, apply waivers."""
+    return run_rules(build_context(root, files, **kw), rules)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers used by several rules
+# ---------------------------------------------------------------------------
+
+def import_aliases(tree: ast.AST, targets: dict[str, str]) -> dict[str, str]:
+    """Map local names to the canonical module they alias.
+
+    targets: {canonical: canonical} filter, e.g. {"jax": "jax",
+    "jax.experimental.pallas": "pallas", "numpy": "numpy"}. Returns
+    {local_name: tag} for every `import X as Y` / `from X import Y` whose
+    source module matches a target (by exact name or dotted prefix).
+    """
+    out: dict[str, str] = {}
+
+    def match(modname: str) -> Optional[str]:
+        for canon, tag in targets.items():
+            if modname == canon or modname.startswith(canon + "."):
+                return tag
+        return None
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                tag = match(a.name)
+                if tag:
+                    out[(a.asname or a.name.split(".")[0])] = tag
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            tag = match(node.module)
+            if tag:
+                for a in node.names:
+                    out[a.asname or a.name] = tag
+    return out
+
+
+def call_root_name(func: ast.AST) -> Optional[str]:
+    """`np.random.default_rng` -> 'np'; `int` -> 'int'."""
+    while isinstance(func, ast.Attribute):
+        func = func.value
+    return func.id if isinstance(func, ast.Name) else None
+
+
+def dotted_name(func: ast.AST) -> Optional[str]:
+    """`np.random.default_rng` -> 'np.random.default_rng' (None if the
+    chain bottoms out in anything but a Name)."""
+    parts = []
+    while isinstance(func, ast.Attribute):
+        parts.append(func.attr)
+        func = func.value
+    if not isinstance(func, ast.Name):
+        return None
+    parts.append(func.id)
+    return ".".join(reversed(parts))

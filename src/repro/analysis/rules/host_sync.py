@@ -1,0 +1,183 @@
+"""no-host-sync-in-impl: jitted bodies never pull values to the host.
+
+The serving stack's `host_fetches == steps` contract means every decode
+step costs exactly one device->host fetch, made by the *engine glue* after
+the jit returns. A host sync **inside** a jitted body — `int()`/`float()`
+on a traced value, `.item()`, `np.asarray`, `jax.device_get`,
+`.block_until_ready()` — either fails at trace time in the best case or
+(via concretization during warmup paths) silently serializes the hot loop
+in the worst.
+
+"Jitted bodies" are found three ways: functions named `_*_impl` (the
+serving impl convention), functions passed to a `donate_jit(...)` /
+`jit(...)` construction call in the same module, and functions carrying a
+`@jax.jit` / `@functools.partial(jax.jit, ...)` decorator (the kernels
+convention). Trace-time host values stay allowed: `int(x.shape[0])`,
+`len(xs)`, arithmetic on constants, and anything derived only from
+static_argnums/static_argnames parameters.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.lint import LintContext, call_root_name, import_aliases
+from repro.analysis.rules import register
+
+RULE = "no-host-sync-in-impl"
+IMPL_RE = re.compile(r"^_\w*_impl$")
+SHAPE_ATTRS = {"shape", "ndim", "size", "dtype"}
+
+
+def _is_jit_func(func: ast.AST) -> bool:
+    return (isinstance(func, ast.Attribute)
+            and func.attr in ("jit", "donate_jit")) or \
+           (isinstance(func, ast.Name) and func.id == "jit")
+
+
+def _static_arg_positions(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            node = kw.value
+            elts = node.elts if isinstance(node, (ast.Tuple, ast.List)) \
+                else [node]
+            return tuple(e.value for e in elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, int))
+    return ()
+
+
+def _static_arg_names(call: ast.Call):
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            node = kw.value
+            elts = node.elts if isinstance(node, (ast.Tuple, ast.List)) \
+                else [node]
+            return tuple(e.value for e in elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, str))
+    return ()
+
+
+def jitted_functions(sf):
+    """{fn_name: (static_positions, bound, static_names)} for every
+    function this module jits by construction call or decorator."""
+    out: dict[str, tuple] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and _is_jit_func(node.func) \
+                and node.args:
+            tgt = node.args[0]
+            if isinstance(tgt, ast.Attribute):  # pl.donate_jit(self._f_impl)
+                out[tgt.attr] = (_static_arg_positions(node), True,
+                                 _static_arg_names(node))
+            elif isinstance(tgt, ast.Name):     # donate_jit(remap, ...)
+                out[tgt.id] = (_static_arg_positions(node), False,
+                               _static_arg_names(node))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                call = dec if isinstance(dec, ast.Call) else None
+                tgt = call.func if call else dec
+                is_jit = _is_jit_func(tgt) or (
+                    call and any(_is_jit_func(a) for a in call.args))
+                if is_jit:
+                    out[node.name] = ((_static_arg_positions(call),
+                                       False, _static_arg_names(call))
+                                      if call else ((), False, ()))
+    return out
+
+
+def _static_params(fn: ast.FunctionDef, reg) -> set:
+    """Parameter names bound to static_argnums/static_argnames — Python
+    values at trace time, free to host-convert."""
+    if reg is None:
+        return set()
+    positions, bound, names = reg
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    out = set(names)
+    for p in positions:
+        idx = p + 1 if bound and params[:1] == ["self"] else p
+        if 0 <= idx < len(params):
+            out.add(params[idx])
+    return out
+
+
+def _host_safe(node: ast.AST, static_names: set) -> bool:
+    """True if the expression is a trace-time Python value: constants,
+    shapes/dtypes/len of anything, statics, and arithmetic thereof."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        return node.id in static_names
+    if isinstance(node, ast.Attribute):
+        return node.attr in SHAPE_ATTRS
+    if isinstance(node, ast.Subscript):
+        return _host_safe(node.value, static_names) \
+            and _host_safe(node.slice, static_names)
+    if isinstance(node, ast.Call):
+        return isinstance(node.func, ast.Name) and node.func.id == "len"
+    if isinstance(node, (ast.BinOp, ast.UnaryOp, ast.BoolOp, ast.Compare,
+                         ast.Tuple, ast.List, ast.IfExp, ast.Slice)):
+        return all(_host_safe(c, static_names)
+                   for c in ast.iter_child_nodes(node)
+                   if not isinstance(c, (ast.operator, ast.unaryop,
+                                         ast.boolop, ast.cmpop,
+                                         ast.expr_context)))
+    return False
+
+
+@register(RULE)
+def no_host_sync_in_impl(ctx: LintContext) -> list[Diagnostic]:
+    diags = []
+    for path in sorted(ctx.files):
+        sf = ctx.files[path]
+        jitted = jitted_functions(sf)
+        np_aliases = {n for n, t in import_aliases(
+            sf.tree, {"numpy": "numpy"}).items() if t == "numpy"}
+        jax_aliases = {n for n, t in import_aliases(
+            sf.tree, {"jax": "jax"}).items() if t == "jax"}
+        seen = set()
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            reg = jitted.get(fn.name)
+            if reg is None and not IMPL_RE.match(fn.name):
+                continue
+            statics = _static_params(fn, reg)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                key, msg = None, None
+                f = node.func
+                if isinstance(f, ast.Attribute):
+                    if f.attr == "item":
+                        msg = ".item() forces a device->host transfer " \
+                              "inside a jitted body"
+                    elif f.attr == "block_until_ready":
+                        msg = ".block_until_ready() inside a jitted body " \
+                              "serializes the hot loop"
+                    elif f.attr == "device_get" \
+                            and call_root_name(f) in jax_aliases:
+                        msg = "jax.device_get inside a jitted body is a " \
+                              "host sync"
+                    elif f.attr in ("asarray", "array") \
+                            and call_root_name(f) in np_aliases \
+                            and not all(_host_safe(a, statics)
+                                        for a in node.args):
+                        msg = f"np.{f.attr} on a traced value " \
+                              "concretizes it on the host"
+                elif isinstance(f, ast.Name) and f.id in ("int", "float") \
+                        and node.args \
+                        and not all(_host_safe(a, statics)
+                                    for a in node.args):
+                    msg = f"{f.id}() on a traced value is a host sync; " \
+                          "keep the value on-device (or thread it via " \
+                          "static_argnums if it is a Python scalar)"
+                if msg:
+                    key = (node.lineno, msg)
+                    if key not in seen:
+                        seen.add(key)
+                        diags.append(Diagnostic(
+                            RULE, sf.path, node.lineno,
+                            f"in jitted body `{fn.name}`: {msg}"))
+    return diags

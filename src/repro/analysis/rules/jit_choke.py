@@ -1,0 +1,64 @@
+"""donate-jit-choke-point: serving jits are built in exactly one place.
+
+Every hot-loop jit in `serving/` must be constructed through
+`DevicePlacement.donate_jit` (serving/placement.py) — that choke point
+pins out-shardings so donated arena/state layouts are a fixed point, wires
+donation, and registers the jit in the HotLoopRegistry the jaxpr auditor
+walks. A bare `jax.jit(...)` (or `pl.jit`, `from jax import jit`, a
+`@jax.jit` decorator) anywhere else in serving/ bypasses all three, so any
+`.jit` spelling outside placement.py is flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.lint import LintContext, import_aliases
+from repro.analysis.rules import register
+
+RULE = "donate-jit-choke-point"
+CHOKE_POINT = "src/repro/serving/placement.py"
+
+
+def _jit_uses(sf) -> list[int]:
+    """Line numbers of every `<x>.jit(...)` call, bare `jit(...)` call
+    where `jit` was imported from jax, and `@...jit` decorator."""
+    jit_names = {name for name, _ in import_aliases(
+        sf.tree, {"jax": "jax"}).items() if name == "jit"}
+    lines = []
+
+    def is_jit(func: ast.AST) -> bool:
+        if isinstance(func, ast.Attribute) and func.attr == "jit":
+            return True
+        if isinstance(func, ast.Name) and func.id in jit_names:
+            return True
+        return False
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and is_jit(node.func):
+            lines.append(node.lineno)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                tgt = dec.func if isinstance(dec, ast.Call) else dec
+                if is_jit(tgt):
+                    lines.append(dec.lineno)
+                elif isinstance(dec, ast.Call):  # functools.partial(jax.jit)
+                    if any(is_jit(a) for a in dec.args):
+                        lines.append(dec.lineno)
+    return lines
+
+
+@register(RULE)
+def donate_jit_choke_point(ctx: LintContext) -> list[Diagnostic]:
+    diags = []
+    for sf in ctx.in_dir("serving"):
+        if sf.path == CHOKE_POINT:
+            continue
+        for line in _jit_uses(sf):
+            diags.append(Diagnostic(
+                RULE, sf.path, line,
+                "bare jit construction in serving/ — route through "
+                "DevicePlacement.donate_jit so out-shardings are pinned, "
+                "donation is wired, and the jit lands in the "
+                "HotLoopRegistry"))
+    return diags

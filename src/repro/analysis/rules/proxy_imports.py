@@ -1,0 +1,124 @@
+"""proxy-jax-free: the OmniProxy never sees jax.
+
+The PD-disaggregation contract (docs/serving.md §OmniProxy) keeps
+`core/proxy/` a pure-Python/numpy control plane: dispatch math, radix
+trees, request lifecycle and metrics must be runnable on a frontend host
+with no accelerator runtime. This rule flags
+
+  · any direct `import jax` / `import jax.numpy` (or `from jax...`) in a
+    module under core/proxy/, and
+  · any intra-repo import whose transitive closure reaches a module that
+    imports jax — so a "harmless" `from repro.serving.x import helper`
+    cannot smuggle the dependency in.
+
+Function-local (lazy) jax imports count too: the proxy has no business
+importing jax even lazily.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.lint import LintContext, SourceFile
+from repro.analysis.rules import register
+
+RULE = "proxy-jax-free"
+PROXY_PREFIX = "repro.core.proxy"
+
+
+def _jax_import_line(sf: SourceFile) -> Optional[int]:
+    """First line importing jax (any spelling), or None."""
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax" or a.name.startswith("jax."):
+                    return node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            m = node.module or ""
+            if m == "jax" or m.startswith("jax."):
+                return node.lineno
+    return None
+
+
+def _intra_repo_imports(sf: SourceFile) -> list[tuple[str, int]]:
+    """(imported repro.* module, lineno) pairs, relative imports resolved."""
+    pkg = sf.module if sf.path.endswith("__init__.py") \
+        else sf.module.rsplit(".", 1)[0]
+    out = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro" or a.name.startswith("repro."):
+                    out.append((a.name, node.lineno))
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative: resolve against the package
+                base = pkg.split(".")
+                if node.level > 1:
+                    base = base[: -(node.level - 1)]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            if mod == "repro" or mod.startswith("repro."):
+                out.append((mod, node.lineno))
+                # `from repro.x import y` may name submodules, not attrs
+                for a in node.names:
+                    out.append((f"{mod}.{a.name}", node.lineno))
+    return out
+
+
+def _resolve(ctx: LintContext, modname: str) -> Optional[SourceFile]:
+    sf = ctx.module_file(modname)
+    if sf is None and "." in modname:  # attr import: try the parent module
+        sf = ctx.module_file(modname.rsplit(".", 1)[0])
+    return sf
+
+
+@register(RULE)
+def proxy_jax_free(ctx: LintContext) -> list[Diagnostic]:
+    diags = []
+    # memoized "does this module reach jax" over the intra-repo import graph
+    reaches: dict[str, Optional[list[str]]] = {}
+
+    def chain_to_jax(modname: str, stack: tuple) -> Optional[list[str]]:
+        if modname in reaches:
+            return reaches[modname]
+        if modname in stack:  # import cycle: break, no new info
+            return None
+        sf = _resolve(ctx, modname)
+        if sf is None:
+            reaches[modname] = None
+            return None
+        if _jax_import_line(sf) is not None:
+            reaches[modname] = [sf.module]
+            return reaches[modname]
+        reaches[modname] = None  # provisional (cycle safety)
+        for dep, _ in _intra_repo_imports(sf):
+            sub = chain_to_jax(dep, stack + (modname,))
+            if sub:
+                reaches[modname] = [sf.module] + sub
+                return reaches[modname]
+        return None
+
+    for sf in ctx.in_dir("core/proxy"):
+        line = _jax_import_line(sf)
+        if line is not None:
+            diags.append(Diagnostic(
+                RULE, sf.path, line,
+                "OmniProxy modules must stay jax-free (the proxy is a "
+                "pure-host control plane); move device work behind the "
+                "serving engines"))
+        seen = set()
+        for dep, lineno in _intra_repo_imports(sf):
+            if dep.startswith(PROXY_PREFIX):
+                continue  # proxy-internal imports are vetted by this walk
+            chain = chain_to_jax(dep, (sf.module,))
+            if chain and (lineno, tuple(chain)) not in seen:
+                seen.add((lineno, tuple(chain)))
+                diags.append(Diagnostic(
+                    RULE, sf.path, lineno,
+                    f"transitive jax dependency: {sf.module} -> "
+                    + " -> ".join(chain)
+                    + " (imports jax); the proxy must not depend on "
+                    "device-side modules"))
+    return diags

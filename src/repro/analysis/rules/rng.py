@@ -1,0 +1,87 @@
+"""seeded-rng-only: randomness in serving/ and core/ flows from a seed.
+
+FaultPlane's recovery contract and the mesh-parity tests both depend on
+bit-reproducible schedules: a fault schedule, sampler, or dispatch
+tiebreak that draws from wall-clock time or an unseeded generator cannot
+be replayed, so the chaos soak loses its oracle. In `serving/` and
+`core/` this rule flags
+
+  · `time.time()` — wall-clock entropy (time.monotonic / perf_counter for
+    *measuring* durations stay fine),
+  · the stdlib `random` module's global functions (`random.random()`,
+    `random.randint(...)` ...) — `random.Random(seed)` instances are fine,
+  · legacy `np.random.*` globals (`np.random.rand`, `np.random.seed`, ...)
+    and `np.random.default_rng()` called without a seed — only
+    `np.random.default_rng(seed)` (any explicit argument) passes.
+
+jax.random needs no rule: it cannot be called without an explicit key.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.lint import LintContext, dotted_name, import_aliases
+from repro.analysis.rules import register
+
+RULE = "seeded-rng-only"
+SCOPES = ("serving", "core")
+
+
+def _check_file(sf) -> list[Diagnostic]:
+    aliases = import_aliases(sf.tree, {"numpy": "numpy", "time": "time",
+                                       "random": "random"})
+    np_names = {n for n, t in aliases.items() if t == "numpy"}
+    time_mods = {n for n, t in aliases.items() if t == "time" and n == "time"}
+    # names imported *from* random, e.g. `from random import randint`
+    random_funcs = {n for n, t in aliases.items()
+                    if t == "random" and n not in ("random", "Random")}
+    diags = []
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name is None:
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in random_funcs:
+                name = f"random.{node.func.id}"
+            else:
+                continue
+        parts = name.split(".")
+        if name == "time.time" and parts[0] in time_mods:
+            diags.append(Diagnostic(
+                RULE, sf.path, node.lineno,
+                "time.time() is wall-clock entropy — schedules must be "
+                "seed-derived (time.monotonic for duration measurement "
+                "is fine)"))
+        elif parts[0] == "random" and len(parts) == 2 \
+                and parts[1] != "Random":
+            diags.append(Diagnostic(
+                RULE, sf.path, node.lineno,
+                f"global `{name}()` draws from unseeded process state; "
+                "use np.random.default_rng(seed) or random.Random(seed)"))
+        elif len(parts) == 3 and parts[0] in np_names \
+                and parts[1] == "random":
+            fn = parts[2]
+            if fn == "default_rng":
+                if not node.args and not node.keywords:
+                    diags.append(Diagnostic(
+                        RULE, sf.path, node.lineno,
+                        "np.random.default_rng() without a seed is "
+                        "OS-entropy seeded — pass the component's "
+                        "explicit seed"))
+            elif fn != "Generator":
+                diags.append(Diagnostic(
+                    RULE, sf.path, node.lineno,
+                    f"legacy np.random.{fn} uses the unseeded global "
+                    "state; use np.random.default_rng(seed)"))
+    return diags
+
+
+@register(RULE)
+def seeded_rng_only(ctx: LintContext) -> list[Diagnostic]:
+    diags = []
+    for scope in SCOPES:
+        for sf in ctx.in_dir(scope):
+            diags.extend(_check_file(sf))
+    return diags

@@ -1,0 +1,94 @@
+"""no-shape-leak: static_argnums never see raw data-dependent shapes.
+
+The serving jits bound retraces by pow2-bucketing every shape-like Python
+value before it reaches a `static_argnums` slot (`_bucket` in
+serving/arena.py and friends). Feeding a static slot a raw
+`.shape`-derived value — `self._resume(..., toks.shape[1])` — silently
+reintroduces one recompile per distinct length and defeats the bucketing
+that keeps warmup bounded.
+
+The rule pairs the two halves up per module: pass 1 records every
+`<placement>.donate_jit(fn, static_argnums=...)` / `jax.jit(...)`
+construction assigned to a name; pass 2 checks each call through that
+name and flags static-position arguments whose expression mentions
+`.shape` / `.ndim` / `.size` outside a bucketing call
+(`_bucket(x.shape[0])`, `_pow2_floor(...)`, `next_pow2(...)` are the
+sanctioned spellings).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.lint import LintContext
+from repro.analysis.rules import register
+from repro.analysis.rules.host_sync import (_is_jit_func,
+                                            _static_arg_positions)
+
+RULE = "no-shape-leak"
+SHAPE_ATTRS = {"shape", "ndim", "size"}
+BUCKET_FNS = {"_bucket", "bucket", "_pow2_floor", "pow2_floor", "next_pow2",
+              "_next_pow2"}
+
+
+def _jit_bindings(tree) -> dict[str, tuple]:
+    """{bound name: static positions} for `self._f = pl.donate_jit(...,
+    static_argnums=...)` style assignments (bare-name targets too)."""
+    out = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call) and _is_jit_func(call.func)):
+            continue
+        positions = _static_arg_positions(call)
+        if not positions:
+            continue
+        tgt = node.targets[0]
+        if isinstance(tgt, ast.Attribute):
+            out[tgt.attr] = positions
+        elif isinstance(tgt, ast.Name):
+            out[tgt.id] = positions
+    return out
+
+
+def _raw_shape_use(node: ast.AST) -> bool:
+    """Does this expression read .shape/.ndim/.size outside a bucketing
+    call?"""
+    if isinstance(node, ast.Call):
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else \
+            fn.id if isinstance(fn, ast.Name) else None
+        if name in BUCKET_FNS:
+            return False  # bucketed: pow2-bounded by construction
+    if isinstance(node, ast.Attribute) and node.attr in SHAPE_ATTRS:
+        return True
+    return any(_raw_shape_use(c) for c in ast.iter_child_nodes(node))
+
+
+@register(RULE)
+def no_shape_leak(ctx: LintContext) -> list[Diagnostic]:
+    diags = []
+    for path in sorted(ctx.files):
+        sf = ctx.files[path]
+        bindings = _jit_bindings(sf.tree)
+        if not bindings:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                fn.id if isinstance(fn, ast.Name) else None
+            positions = bindings.get(name)
+            if not positions:
+                continue
+            for pos in positions:
+                if pos < len(node.args) and _raw_shape_use(node.args[pos]):
+                    diags.append(Diagnostic(
+                        RULE, sf.path, node.lineno,
+                        f"static arg {pos} of `{name}` is fed a raw "
+                        ".shape-derived value — every distinct shape "
+                        "retraces; bucket it first (_bucket / "
+                        "_pow2_floor) so retraces stay O(log n)"))
+    return diags

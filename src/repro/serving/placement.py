@@ -25,9 +25,9 @@ to the 1-device mesh (see tests/test_mesh_parity.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import cached_property
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
@@ -37,6 +37,80 @@ from repro.distributed.ctx import MeshCtx, local_mesh_ctx
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod
 from repro.models import stack as stack_mod
+
+
+@dataclass
+class HotLoopEntry:
+    """One jit constructed through `donate_jit`, as the jaxpr auditor
+    (repro/analysis/jaxpr_audit.py) sees it: the raw fn + the jit +
+    everything the choke point decided (donation, statics, pinned
+    out-specs), plus abstract argument signatures captured at first call
+    so the auditor can re-trace/lower without touching live (donated)
+    buffers. The entry IS the callable the engines hold — forwarding adds
+    one attribute check per call."""
+    name: str
+    fn: Callable
+    jit_fn: Callable
+    donate_argnums: tuple
+    static_argnums: tuple
+    out_specs: Any
+    placement: "DevicePlacement"
+    abstract_args: Optional[tuple] = None
+    abstract_kwargs: Optional[dict] = None
+    calls: int = 0
+
+    def _abstract(self, tree):
+        def one(x):
+            if isinstance(x, jax.Array):
+                # keep the sharding only for committed arrays (device_put
+                # through the placement); uncommitted host-built args were
+                # free to follow the computation at the real call, so
+                # pinning their observed device would make the re-lower
+                # reject the mix of single-device and mesh-sharded args
+                sh = x.sharding if getattr(x, "_committed", False) else None
+                return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
+            return x  # static/weak Python values pass through verbatim
+        return jax.tree.map(one, tree,
+                            is_leaf=lambda x: isinstance(x, jax.Array))
+
+    def __call__(self, *args, **kwargs):
+        if self.abstract_args is None:
+            # capture BEFORE the call: donated inputs are dead after it
+            self.abstract_args = self._abstract(args)
+            self.abstract_kwargs = self._abstract(kwargs)
+        self.calls += 1
+        return self.jit_fn(*args, **kwargs)
+
+    def __getattr__(self, name):
+        # delegate jit introspection (_cache_size, clear_cache, ...) so the
+        # wrapper is a drop-in for the jax.jit object it fronts
+        if name == "jit_fn":
+            raise AttributeError(name)
+        return getattr(self.jit_fn, name)
+
+    def lower(self):
+        """Lower from the captured abstract signature (first real call's
+        shapes/dtypes/shardings). Raises if the jit was never called."""
+        if self.abstract_args is None:
+            raise RuntimeError(f"hot loop '{self.name}' was never called; "
+                               f"warm the server before auditing")
+        return self.jit_fn.lower(*self.abstract_args,
+                                 **self.abstract_kwargs)
+
+
+@dataclass
+class HotLoopRegistry:
+    entries: list[HotLoopEntry] = field(default_factory=list)
+
+    def add(self, entry: HotLoopEntry) -> HotLoopEntry:
+        self.entries.append(entry)
+        return entry
+
+    def names(self) -> list[str]:
+        return [e.name for e in self.entries]
+
+    def called(self) -> list[HotLoopEntry]:
+        return [e for e in self.entries if e.abstract_args is not None]
 
 
 @dataclass(frozen=True)
@@ -150,17 +224,33 @@ class DevicePlacement:
         return self.place(params, lm.specs())
 
     # ---- the jit choke point -----------------------------------------
+    @cached_property
+    def hot_loops(self) -> HotLoopRegistry:
+        """Every jit built through donate_jit, for the ContractGuard jaxpr
+        auditor (one registry per placement — i.e. per server)."""
+        return HotLoopRegistry()
+
     def donate_jit(self, fn, *, donate_argnums=(), static_argnums=(),
-                   out_specs=None):
+                   out_specs=None, name=None):
         """Every donated serving jit is built here. `out_specs` (optional
         PartitionSpec pytree matching the outputs) pins out-shardings so
         donated state keeps its layout call-to-call; on a 1-device mesh the
-        pin is dropped and this is a plain jax.jit."""
+        pin is dropped and this is a plain jax.jit. The constructed jit is
+        registered in `hot_loops` (wrapped in a HotLoopEntry that captures
+        abstract arg signatures at first call) so the jaxpr auditor can
+        later re-trace it and assert the donation/sharding/purity
+        contracts actually lowered."""
         kw = {}
         if out_specs is not None and self.n_devices > 1:
             kw["out_shardings"] = self.tree_shardings(out_specs)
-        return jax.jit(fn, donate_argnums=donate_argnums,
-                       static_argnums=static_argnums, **kw)
+        jit_fn = jax.jit(fn, donate_argnums=donate_argnums,
+                         static_argnums=static_argnums, **kw)
+        return self.hot_loops.add(HotLoopEntry(
+            name=name or getattr(fn, "__qualname__", repr(fn)),
+            fn=fn, jit_fn=jit_fn,
+            donate_argnums=tuple(donate_argnums),
+            static_argnums=tuple(static_argnums),
+            out_specs=out_specs, placement=self))
 
     # ---- cross-mesh parameter transfer -------------------------------
     def transfer_params(self, lm_src, params, lm_dst):

@@ -745,6 +745,18 @@ class Server:
             "b_after": float(hist.get("b_sim", 0.0))})
 
     # ------------------------------------------------------------------
+    def audit_hot_loops(self, require_called: bool = False):
+        """ContractGuard layer-2 entry point (see docs/analysis.md): jaxpr/
+        lowering audit over every hot-loop jit this server's placement
+        registered through donate_jit. Call post-warmup — entries capture
+        their abstract argument signatures at first real call, and the
+        audit re-traces from those (no live buffers touched). Returns an
+        `AuditReport`; `report.ok()` is the pass/fail bit."""
+        from repro.analysis.jaxpr_audit import audit_placement
+        return audit_placement(self.placement,
+                               require_called=require_called)
+
+    # ------------------------------------------------------------------
     def run(self, requests: list, max_wall_s: float = 300.0,
             arrivals: Optional[list[float]] = None):
         """Closed-batch driver over the streaming primitives.

@@ -7,6 +7,15 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "jaxpr_audit: ContractGuard layer-2 tests that trace live-server "
+        "hot loops (CI runs them in the static-analysis job; the tp=2,ep=4 "
+        "case additionally needs XLA_FLAGS="
+        "--xla_force_host_platform_device_count=8)")
+
+
 @pytest.fixture(scope="session")
 def mesh1():
     from repro.distributed.ctx import local_mesh_ctx
