@@ -74,6 +74,120 @@ def eval_accuracy(cfg, mesh, params, dcfg, pattern, n_eval: int = 4,
     return correct / max(total, 1)
 
 
+def quant_fidelity(q, k, v, bs, selected_mass, lens):
+    """QuantPlane fidelity on the same proxy, through the production arena
+    helpers the int8 plane actually runs (models/attention.py): per-token
+    provisional quantization (`quant_tokens`), seal-on-full re-quantization
+    (`seal_blocks`), the elementwise dequant rule (`dequant_pages`), and
+    summary maintenance on DEQUANTIZED content (`update_block_summaries`
+    with the scale plane). Reports the per-block round-trip error, the
+    full-cache attention output/mass deltas, and the top-k kept mass when
+    the Quest summaries are reduced from the int8 arena + scale plane."""
+    from repro.models.attention import (block_topk_scores, dequant_pages,
+                                        quant_tokens, seal_blocks,
+                                        update_block_summaries)
+    k = jnp.asarray(k, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    M, d = k.shape
+    nb = M // bs
+
+    def roundtrip(x):
+        # [1 + nb, K=1, bs, d] arena with the null block 0 prepended; seal
+        # every real block but the last, which stays in the per-token
+        # provisional tail format — both dequant branches are exercised
+        pages = jnp.concatenate(
+            [jnp.zeros((1, bs, d), jnp.float32),
+             x.reshape(nb, bs, d)])[:, None]
+        q8, tok = quant_tokens(pages)
+        scale = jnp.zeros((nb + 1, 1, d), jnp.float32)
+        blocks = jnp.arange(1, nb + 1)
+        q8, scale, tok = seal_blocks(q8, scale, tok, blocks, blocks < nb)
+        deq = dequant_pages(q8, scale, tok)[1:, 0].reshape(M, d)
+        return q8, scale, tok, deq
+
+    kq8, kscale, ktok, kd = roundtrip(k)
+    _, _, _, vd = roundtrip(v)
+
+    def per_block(orig, deq):
+        o = orig.reshape(nb, -1)
+        return jnp.linalg.norm(deq.reshape(nb, -1) - o, axis=-1) \
+            / jnp.maximum(jnp.linalg.norm(o, axis=-1), 1e-9)
+
+    errs = jnp.concatenate([per_block(k, kd), per_block(v, vd)])
+
+    sc = d ** -0.5
+    p = jax.nn.softmax((q @ k.T) * sc, axis=-1)
+    pq = jax.nn.softmax((q @ kd.T) * sc, axis=-1)
+    ref = p @ v
+    out_rel = jnp.linalg.norm(pq @ vd - ref) \
+        / jnp.maximum(jnp.linalg.norm(ref), 1e-9)
+    # total-variation distance between the f32 and dequantized attention
+    # distributions — how much probability mass quantization moved
+    mass_delta = jnp.abs(pq - p).sum(-1).mean() / 2.0
+
+    zero = jnp.zeros((nb + 1, 1, d), jnp.float32)
+    kmin_q, kmax_q, _ = update_block_summaries(
+        zero, zero, zero, kq8, jnp.arange(nb + 1),
+        k_scale=kscale, k_tok=ktok)
+    tables_q = (jnp.arange(nb) + 1)[None]
+    topk_q = selected_mass(block_topk_scores(
+        q[None], kmin_q, kmax_q, tables_q, lens, block_size=bs))
+    return {
+        "quant_block_rel_err_mean": round(float(errs.mean()), 4),
+        "quant_block_rel_err_max": round(float(errs.max()), 4),
+        "quant_attn_out_rel_err": round(float(out_rel), 4),
+        "quant_attn_mass_delta": round(float(mass_delta), 4),
+        "topk_quant_attn_mass_kept": round(topk_q["attn_mass"], 4),
+        "topk_quant_rel_err": round(topk_q["rel_err"], 4),
+    }
+
+
+def quant_greedy_gate(cfg, params, n_requests: int = 4):
+    """Serve the TRAINED model greedily through f32 and int8 paged arenas
+    and assert token-stream equality — with the int8 pool sized to the f32
+    row's HBM byte budget (more blocks, same bytes), so the gate covers
+    exactly the configuration the residency win runs at."""
+    from repro.core.proxy import OASConfig
+    from repro.serving import Server, ServerConfig
+    from repro.serving.quant import QuantConfig
+
+    def build(quant, kv_blocks):
+        scfg = ServerConfig(
+            n_prefill=1, n_decode=1, decode_slots=2, max_len=64,
+            chunk_tokens=32, prefill_tick_budget=64, prefix_reuse=False,
+            paged_kv=True, kv_blocks=int(kv_blocks), kv_block_size=16,
+            quant=QuantConfig() if quant else None,
+            oas=OASConfig(defer_window=0.0))
+        return Server(cfg, scfg, pattern=[0] * cfg.n_layers, params=params)
+
+    rng = np.random.default_rng(7)
+    reqs = [(tuple(int(t) for t in
+                   rng.integers(1, cfg.vocab_size, 24 + 8 * i)), 6)
+            for i in range(n_requests)]
+
+    f32 = build(False, 16)
+    f32.run(list(reqs))
+    ref = {r.rid: tuple(r.output_tokens) for r in f32.metrics.done}
+    assert len(ref) == n_requests and all(len(t) == 6 for t in ref.values())
+    n_f32 = f32.kv_arena.pool.n_blocks
+    budget = n_f32 * f32.kv_arena.block_nbytes
+
+    probe = build(True, 16)          # read the int8 block size, then
+    q8 = build(True, budget // probe.kv_arena.block_nbytes)   # re-spend
+    assert q8.kv_arena.quant and q8.kv_arena.pool.n_blocks > n_f32
+    q8.run(list(reqs))
+    got = {r.rid: tuple(r.output_tokens) for r in q8.metrics.done}
+    assert got == ref, \
+        "int8 greedy decode diverged from f32 on the trained model"
+    q8.kv_arena.check_summaries()
+    return {
+        "quant_greedy_equal": int(got == ref),
+        "quant_budget_blocks_f32": n_f32,
+        "quant_budget_blocks_int8": q8.kv_arena.pool.n_blocks,
+    }
+
+
 def run(steps: int = 400):
     cfg, mesh, params, dcfg, loss, base_plan = train_small_lm(steps)
     base = eval_accuracy(cfg, mesh, params, dcfg, [0] * cfg.n_layers,
@@ -137,6 +251,18 @@ def run(steps: int = 400):
     center = jnp.einsum("qd,nd->qn", jnp.asarray(q), kmean[:, 0]).max(0)
     mean_fid = selected_mass(jnp.broadcast_to(center, (1, nb)))
 
+    # QuantPlane fidelity: the same proxy round-tripped through the int8
+    # arena format + the trained model served greedily through f32 and
+    # int8 arenas at a matched HBM budget (the bit-identity gate)
+    qf = quant_fidelity(q, k, v, bs, selected_mass, lens)
+    assert qf["quant_block_rel_err_max"] < 0.05, \
+        f"int8 round-trip error {qf['quant_block_rel_err_max']} — the " \
+        f"per-block/per-token scale plane is mis-scaled"
+    assert abs(qf["topk_quant_attn_mass_kept"]
+               - topk_fid["attn_mass"]) < 0.02, \
+        "quantized summaries shifted the top-k kept mass"
+    qf.update(quant_greedy_gate(cfg, params))
+
     return {
         "train_loss": round(loss, 3),
         "acc_full_kv": round(base, 4),
@@ -150,6 +276,7 @@ def run(steps: int = 400):
         "topk_rel_err": round(topk_fid["rel_err"], 4),
         "topk_attn_mass_kept": round(topk_fid["attn_mass"], 4),
         "topk_mean_score_attn_mass": round(mean_fid["attn_mass"], 4),
+        **qf,
     }
 
 

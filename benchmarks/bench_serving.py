@@ -202,10 +202,23 @@ def run(n_requests: int = 12):
             assert ds["handoff_copy_bytes"] > 0
         assert s["kv_transfer_true_bytes"] < s["kv_transfer_padded_bytes"], \
             f"{name}: transfer meter still charges max_len padding"
+        # bytes-true KV residency: capacity bytes the decode KV plane pins
+        # (dtype-true per-block accounting on the paged path — int8 arenas
+        # halve it) and the max_len-stream concurrency that buys
+        if srv.kv_arena is not None:
+            pool = srv.kv_arena.pool
+            resident_bytes = pool.n_blocks * srv.kv_arena.block_nbytes
+            admissible = pool.n_blocks // pool.blocks_for(srv.scfg.max_len)
+        else:
+            eng = srv.decodes[0]
+            resident_bytes = srv.scfg.decode_slots * eng._dense_kv_nbytes
+            admissible = srv.scfg.decode_slots
         results.append({
             "variant": name,
             "n_done": s["n_done"],
             "qps": s["qpm"] / 60.0,
+            "resident_bytes": resident_bytes,
+            "admissible_slots": admissible,
             "ttft_mean_s": s["ttft_mean"],
             "ttft_p99_s": s["ttft_p99"],
             "tpot_mean_ms": s["tpot_mean_ms"],
@@ -571,6 +584,150 @@ def main_spec(fast: bool = False):
 
 
 # ----------------------------------------------------------------------
+# QuantPlane ablation: int8 paged KV arenas with per-block scales (see
+# docs/serving.md §Quantized arenas). Run with `--quant`. The residency
+# claim is bytes-true and assert-gated: the same ServerConfig with quant on
+# pins ≈ half the HBM bytes per KV block (int8 payload + f32 scale plane vs
+# f32 payload), which at a MATCHED HBM budget admits ≥ 1.9× the max_len
+# decode streams — while greedy outputs stay bit-identical to the f32 run
+# on this config (in-tile dequant, zero-stale-scales).
+def _quant_workload(vocab: int, n: int):
+    """Shared-prefix closed-loop pressure: CoW block sharing, store
+    adoption/resume and tail copies all run under quant during the
+    measured window, so the bit-identity assert covers every scale-plane
+    lifecycle path, not just the decode append."""
+    rng = np.random.default_rng(23)
+    base = tuple(rng.integers(0, vocab, 48))
+    return [(base + tuple(rng.integers(0, vocab, 12 + 4 * i)), 8)
+            for i in range(n)]
+
+
+def _build_quant(params, quant):
+    from repro.configs import reduced_config
+    from repro.core.proxy import MetricsAggregator, OASConfig
+    from repro.serving import Server, ServerConfig
+    from repro.serving.quant import QuantConfig
+
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=2048, attn_q_chunk=128, attn_kv_chunk=128)
+    scfg = ServerConfig(
+        n_prefill=1, n_decode=1, decode_slots=4, max_len=256,
+        chunk_tokens=64, prefill_tick_budget=256, prefix_reuse=True,
+        paged_kv=True, kv_blocks=96, kv_block_size=16,
+        quant=QuantConfig() if quant else None,
+        oas=OASConfig(defer_window=0.0))
+    srv = Server(cfg, scfg, pattern=[0] * cfg.n_layers, params=params)
+    rng = np.random.default_rng(99)
+    srv.run([(tuple(rng.integers(0, cfg.vocab_size, 40)), 3),
+             (tuple(rng.integers(0, cfg.vocab_size, 12)), 2)])
+    srv.metrics = MetricsAggregator()
+    for e in srv.prefills:
+        e.store.clear()
+        e.stats.update(prefills=0, cache_hits=0, prefix_hits=0,
+                       reused_tokens=0, tokens=0, chunks=0, busy_s=0.0,
+                       host_fetches=0, blocks_mapped=0,
+                       prefill_kv_peak_blocks=0, defers=0)
+    for e in srv.decodes:
+        e.stats.update(steps=0, tokens=0, busy_s=0.0, kv_transfer_bytes=0,
+                       kv_transfer_bytes_padded=0, handoff_copy_bytes=0,
+                       admits=0, preemptions=0, blocks_touched=0,
+                       blocks_shared=0, blocks_fresh=0, host_fetches=0)
+    return cfg, srv
+
+
+def run_quant(n_requests: int = 6):
+    """→ per-variant rows for the quantized-arena ablation.
+
+      f32    the unchanged paged serving engine (f32 arenas)
+      int8   QuantConfig(): int8 payloads + per-block/per-token scales
+
+    Asserts: greedy outputs BIT-IDENTICAL between the rows on this config;
+    bytes-true per-block residency int8/f32 in (0.35, 0.55); at the f32
+    row's HBM budget the int8 arenas admit ≥ 1.9× the max_len streams;
+    `host_fetches == steps`; the quiescent arena passes the extended
+    summary + scale scan (zero stale scales)."""
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.distributed.ctx import local_mesh_ctx
+    from repro.models import LM
+
+    cfg0 = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2,
+        d_model=256, d_ff=512, n_heads=2, n_kv_heads=2, head_dim=64,
+        vocab_size=2048, attn_q_chunk=128, attn_kv_chunk=128)
+    lm = LM.build(cfg0, local_mesh_ctx(), pattern=[0] * cfg0.n_layers)
+    params = lm.init(jax.random.PRNGKey(0))
+    results, outputs = [], {}
+    for name, quant in (("f32", False), ("int8", True)):
+        cfg, srv = _build_quant(params, quant)
+        reqs = _quant_workload(cfg.vocab_size, n_requests)
+        s = srv.run(reqs, max_wall_s=600)
+        outputs[name] = {r.rid: tuple(r.output_tokens)
+                         for r in srv.metrics.done}
+        ds = s["decode_stats"][0]
+        assert s["n_done"] == n_requests, f"{name}: incomplete run"
+        assert ds["host_fetches"] == ds["steps"], \
+            f"{name}: quant added host syncs"
+        srv.kv_arena.check_summaries()
+        pool = srv.kv_arena.pool
+        pool.check_invariants(arena=srv.kv_arena)
+        bnb = srv.kv_arena.block_nbytes
+        results.append({
+            "variant": name, "n_done": s["n_done"],
+            "tpot_mean_ms": s["tpot_mean_ms"],
+            "tok_per_step": ds["tokens"] / max(ds["steps"], 1),
+            "block_bytes": bnb,
+            "resident_bytes": pool.n_blocks * bnb,
+            "blocks_per_stream": pool.blocks_for(srv.scfg.max_len),
+            "quant_layers": ds.get("quant_layers", 0),
+            "host_fetches": ds["host_fetches"],
+        })
+    assert outputs["int8"] == outputs["f32"], \
+        "quantized greedy outputs diverged from the f32 paged run"
+    f32 = next(r for r in results if r["variant"] == "f32")
+    int8 = next(r for r in results if r["variant"] == "int8")
+    ratio = int8["resident_bytes"] / f32["resident_bytes"]
+    assert 0.35 < ratio < 0.55, \
+        f"int8 residency {ratio:.3f}× f32 — outside the bytes-true " \
+        f"halving envelope (payload 0.25×/0.5×? scale plane mis-sized?)"
+    # matched HBM budget: the f32 arena's capacity bytes, re-spent on
+    # int8 blocks → admissible max_len decode streams
+    budget = f32["resident_bytes"]
+    for r in results:
+        r["admissible_slots"] = \
+            (budget // r["block_bytes"]) // r["blocks_per_stream"]
+    gain = int8["admissible_slots"] / max(f32["admissible_slots"], 1)
+    assert gain >= 1.9, \
+        f"int8 admits only {gain:.2f}× the f32 streams at a matched " \
+        f"HBM budget (block {int8['block_bytes']}B vs {f32['block_bytes']}B)"
+    int8["residency_x"] = gain
+    return results
+
+
+def main_quant(fast: bool = False):
+    print("variant,n_done,tpot_mean_ms,tok_per_step,block_bytes,"
+          "resident_bytes,admissible_slots,quant_layers,host_fetches")
+    rows = run_quant(4 if fast else 6)
+    for r in rows:
+        print(f"{r['variant']},{r['n_done']},{r['tpot_mean_ms']:.2f},"
+              f"{r['tok_per_step']:.2f},{r['block_bytes']},"
+              f"{r['resident_bytes']},{r['admissible_slots']},"
+              f"{r['quant_layers']},{r['host_fetches']}", flush=True)
+    f32 = next(r for r in rows if r["variant"] == "f32")
+    int8 = next(r for r in rows if r["variant"] == "int8")
+    print(f"# greedy outputs bit-identical to the f32 paged run; int8 "
+          f"arenas pin {int8['resident_bytes'] / f32['resident_bytes']:.2f}×"
+          f" the f32 bytes per resident block (dtype-true accounting, "
+          f"scale plane included), admitting {int8['residency_x']:.2f}× "
+          f"the max_len decode streams at the f32 row's HBM budget — with "
+          f"host_fetches == steps (in-tile dequant adds zero syncs) and "
+          f"zero stale summaries OR scales at quiescence", flush=True)
+
+
+# ----------------------------------------------------------------------
 # FaultPlane chaos soak: seeded deterministic fault injection over the full
 # PD-disaggregated paged stack (see docs/serving.md §Failure model &
 # recovery). Run with `--chaos`. Every row is one fault seed; the harness
@@ -789,7 +946,7 @@ def main(fast: bool = False):
           "ott_tok_s,prefill_tokens,reused_tokens,prefix_hits,"
           "tok_per_step,blocks_touched,blocks_shared,blocks_fresh,"
           "host_fetches,first_fetches,prefill_kv_peak_blocks,"
-          "handoff_copy_bytes")
+          "handoff_copy_bytes,resident_bytes,admissible_slots")
     rows = run(8 if fast else 12)
     for r in rows:
         print(f"{r['variant']},{r['n_done']},{r['qps']:.2f},"
@@ -800,7 +957,8 @@ def main(fast: bool = False):
               f"{r['blocks_touched']},{r['blocks_shared']},"
               f"{r['blocks_fresh']},{r['host_fetches']},"
               f"{r['first_fetches']},{r['prefill_kv_peak_blocks']},"
-              f"{r['handoff_copy_bytes']}", flush=True)
+              f"{r['handoff_copy_bytes']},{r['resident_bytes']},"
+              f"{r['admissible_slots']}", flush=True)
     full = next(r for r in rows if r["variant"] == "dense")
     chk = next(r for r in rows if r["variant"] == "chunked+reuse")
     dns = next(r for r in rows if r["variant"] == "chunked+reuse+dense")
@@ -832,6 +990,8 @@ if __name__ == "__main__":
     contract_gate()
     if "--sparse" in sys.argv:
         main_sparse(fast="--fast" in sys.argv)
+    elif "--quant" in sys.argv:
+        main_quant(fast="--fast" in sys.argv)
     elif "--spec" in sys.argv:
         main_spec(fast="--fast" in sys.argv)
     elif "--chaos" in sys.argv:

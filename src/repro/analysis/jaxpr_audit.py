@@ -22,7 +22,14 @@ contracts on the artifact:
   · **out-shardings** — on a multi-device mesh, the compiled executable's
     output shardings are exactly the placement's own spec tree for that
     entry, so donated layouts are a fixed point and the arg-sharding jit
-    cache never churns.
+    cache never churns;
+  · **quant-upcast** — when a hot loop takes int8 arena payload leaves
+    (QuantPlane), no floating-point eqn output may materialize a
+    full-arena-sized twin of one: dequantization is licensed only on
+    GATHERED views (a handful of tabled blocks), so a float tensor with
+    an int8 leaf's full [N, K, bs, h] trailing shape means the whole
+    quantized arena was silently upcast to f32 in HBM — exactly the copy
+    the in-tile dequant contract exists to forbid.
 
 Entries that were registered but never called (e.g. `_extract` when no
 preemption happened during warmup) are reported as skipped, not failed —
@@ -169,6 +176,45 @@ def _check_f64(entry, jaxpr, report):
                     f"f64 intermediate produced by `{eqn.primitive.name}`"))
 
 
+FLOAT_DTYPES = (np.dtype("float32"), np.dtype("bfloat16"),
+                np.dtype("float16"))
+
+
+def _check_quant_upcast(entry, jaxpr, report):
+    """No silent dequantized arena copy: collect the trailing-4 shapes
+    [N, K, bs, h] of every int8 input leaf with ndim >= 4 (quantized
+    arena payloads — the stacked [R, N, K, bs, h] leaves share the same
+    trailing signature), then flag any float eqn output carrying one.
+    Gathered per-block views ([M << N, K, bs, h] with M the tabled block
+    count) don't collide — M never equals the pool-wide N in a hot loop."""
+    jx = jaxpr.jaxpr if isinstance(jaxpr, jax.core.ClosedJaxpr) else jaxpr
+    sigs = set()
+    for v in jx.invars:
+        aval = getattr(v, "aval", None)
+        dt = _np_dtype(getattr(aval, "dtype", None)) \
+            if aval is not None else None
+        shp = getattr(aval, "shape", None)
+        if dt == np.dtype("int8") and shp is not None and len(shp) >= 4:
+            sigs.add(tuple(shp[-4:]))
+    if not sigs:
+        return
+    report._count("quant-upcast")
+    for eqn in iter_eqns(jaxpr):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dt = _np_dtype(getattr(aval, "dtype", None)) \
+                if aval is not None else None
+            shp = getattr(aval, "shape", None)
+            if (dt in FLOAT_DTYPES and shp is not None and len(shp) >= 4
+                    and tuple(shp[-4:]) in sigs):
+                report.findings.append(AuditFinding(
+                    entry.name, "quant-upcast",
+                    f"`{eqn.primitive.name}` materializes a {dt} tensor "
+                    f"{tuple(shp)} with a quantized arena leaf's full "
+                    f"block shape — the int8 arena was upcast to float in "
+                    f"HBM instead of dequantized in-tile"))
+
+
 def _check_donation(entry, lowered, report):
     if not entry.donate_argnums:
         return
@@ -231,6 +277,7 @@ def audit_entry(entry: HotLoopEntry, report: AuditReport) -> None:
         return
     _check_purity(entry, jaxpr, report)
     _check_f64(entry, jaxpr, report)
+    _check_quant_upcast(entry, jaxpr, report)
     _check_donation(entry, lowered, report)
     _check_out_shardings(entry, lowered, report)
     report.audited.append(entry.name)

@@ -50,14 +50,19 @@ def attention_decode_op(q, k_cache, v_cache, t, *, block_w=512):
     return o.reshape(B, H, h)
 
 
-def attention_paged_decode_op(q, k_pages, v_pages, tables, lens):
+def attention_paged_decode_op(q, k_pages, v_pages, tables, lens, *,
+                              k_scale=None, k_tok=None, v_scale=None,
+                              v_tok=None):
     """q [B,H,h]; arenas [N,K,bs,h]; tables [B,nb] physical block ids;
-    lens [B] resident logical slots → [B,H,h]."""
+    lens [B] resident logical slots → [B,H,h]. Quantized arenas (QuantPlane)
+    pass int8 pages plus k_scale/v_scale [N,K,h] and k_tok/v_tok [N,K,bs];
+    the kernel dequantizes per tile."""
     B, H, h = q.shape
     K = k_pages.shape[1]
     G = H // K
     o = paged_decode(q.reshape(B, K, G, h), k_pages, v_pages, tables, lens,
-                     interpret=_interpret())
+                     k_scale=k_scale, k_tok=k_tok, v_scale=v_scale,
+                     v_tok=v_tok, interpret=_interpret())
     return o.reshape(B, H, h)
 
 
@@ -73,7 +78,9 @@ def block_topk_scores_op(q, kmin, kmax, tables, lens, *, block_size):
 
 
 def attention_paged_prefill_op(q, k_new, v_new, k_pages, v_pages, tables,
-                               off, chunk_len, *, window=0, sink=0):
+                               off, chunk_len, *, window=0, sink=0,
+                               k_scale=None, k_tok=None, v_scale=None,
+                               v_tok=None):
     """Chunked prefill over paged history. q [B,S,H,h]; k_new/v_new
     [B,S,K,h]; arenas [N,K,bs,h]; tables [B,nb]; off/chunk_len scalars or
     [B] → [B,S,H,h]. Rows are regrouped per kv head (row r = chunk token
@@ -86,12 +93,14 @@ def attention_paged_prefill_op(q, k_new, v_new, k_pages, v_pages, tables,
     kf = k_new.transpose(0, 2, 1, 3)
     vf = v_new.transpose(0, 2, 1, 3)
     o = paged_prefill(qf, kf, vf, k_pages, v_pages, tables, off, chunk_len,
-                      window=window, sink=sink, interpret=_interpret())
+                      window=window, sink=sink, k_scale=k_scale, k_tok=k_tok,
+                      v_scale=v_scale, v_tok=v_tok, interpret=_interpret())
     return o.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
         .reshape(B, S, H, h)
 
 
-def spec_verify_op(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
+def spec_verify_op(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok, *,
+                   k_scale=None, k_tok=None, v_scale=None, v_tok=None):
     """Batched multi-token speculative verify over paged history (read-only).
     q [B,S,H,h] — S = k+1 window rows per slot; k_new/v_new [B,S,K,h] the
     window's rope'd keys (NOT yet in any block); arenas [N,K,bs,h]; tables
@@ -105,7 +114,8 @@ def spec_verify_op(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
     kf = k_new.transpose(0, 2, 1, 3)
     vf = v_new.transpose(0, 2, 1, 3)
     o = spec_verify(qf, kf, vf, k_pages, v_pages, tables, off, n_tok,
-                    interpret=_interpret())
+                    k_scale=k_scale, k_tok=k_tok, v_scale=v_scale,
+                    v_tok=v_tok, interpret=_interpret())
     return o.reshape(B, K, S, G, h).transpose(0, 2, 1, 3, 4) \
         .reshape(B, S, H, h)
 

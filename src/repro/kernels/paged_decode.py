@@ -41,8 +41,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
-            l_ref, *, scale: float, block_size: int, n_blocks: int):
+def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, *rest,
+            scale: float, block_size: int, n_blocks: int, quant: bool):
+    # QuantPlane variant: int8 payload tiles ride with their per-block
+    # per-channel seal scales [h] and per-token tail scales [bs]; the
+    # dequant happens HERE, in the VMEM tile, on the f32 copy feeding the
+    # MXU — no dequantized block ever exists in HBM.
+    if quant:
+        ks_ref, kt_ref, vs_ref, vt_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -60,6 +68,10 @@ def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
     def _compute():
         q = q_ref[...].astype(jnp.float32)              # [G, h]
         k = k_ref[...].astype(jnp.float32)              # [bs, h]
+        if quant:
+            ks = ks_ref[...].astype(jnp.float32)        # [h]
+            kt = kt_ref[...].astype(jnp.float32)        # [bs]
+            k = k * jnp.where(ks[None, :] != 0, ks[None, :], kt[:, None])
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         slot = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(slot < lens_ref[b], s, NEG_INF)
@@ -71,6 +83,10 @@ def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
         m_ref[...] = m_new
         v = v_ref[...].astype(jnp.float32)
+        if quant:
+            vs = vs_ref[...].astype(jnp.float32)
+            vt = vt_ref[...].astype(jnp.float32)
+            v = v * jnp.where(vs[None, :] != 0, vs[None, :], vt[:, None])
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
 
     @pl.when(j == n_blocks - 1)
@@ -80,26 +96,44 @@ def _kernel(tbl_ref, lens_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_decode(q, k_pages, v_pages, tables, lens, *, interpret: bool = False):
+def paged_decode(q, k_pages, v_pages, tables, lens, *, k_scale=None,
+                 k_tok=None, v_scale=None, v_tok=None,
+                 interpret: bool = False):
     """q [B, K, G, h]; pages [N, K, bs, h]; tables [B, nb] int32 (physical
-    block ids); lens [B] resident logical slots → o [B, K, G, h]."""
+    block ids); lens [B] resident logical slots → o [B, K, G, h].
+
+    Quantized arenas (QuantPlane) pass int8 pages plus the scale plane:
+    k_scale/v_scale [N, K, h] per-block per-channel seal scales (nonzero
+    row ⟺ sealed block) and k_tok/v_tok [N, K, bs] per-token scalar scales
+    for the unsealed tail — the same block-table index maps DMA the scale
+    tiles alongside their payload and the tile dequantizes in VMEM."""
     B, K, G, h = q.shape
     bs = k_pages.shape[2]
     nb = tables.shape[1]
     scale = h ** -0.5
+    quant = k_scale is not None
     kernel = functools.partial(_kernel, scale=scale, block_size=bs,
-                               n_blocks=nb)
+                               n_blocks=nb, quant=quant)
+    in_specs = [
+        pl.BlockSpec((None, None, G, h),
+                     lambda b, kh, j, tbl, lens: (b, kh, 0, 0)),
+        pl.BlockSpec((None, None, bs, h),
+                     lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
+        pl.BlockSpec((None, None, bs, h),
+                     lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        sc_spec = pl.BlockSpec((None, None, h),
+                               lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0))
+        tk_spec = pl.BlockSpec((None, None, bs),
+                               lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0))
+        in_specs += [sc_spec, tk_spec, sc_spec, tk_spec]
+        operands += [k_scale, k_tok, v_scale, v_tok]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,      # tables, lens
         grid=(B, K, nb),
-        in_specs=[
-            pl.BlockSpec((None, None, G, h),
-                         lambda b, kh, j, tbl, lens: (b, kh, 0, 0)),
-            pl.BlockSpec((None, None, bs, h),
-                         lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
-            pl.BlockSpec((None, None, bs, h),
-                         lambda b, kh, j, tbl, lens: (tbl[b, j], kh, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, G, h),
                                lambda b, kh, j, tbl, lens: (b, kh, 0, 0)),
         scratch_shapes=[
@@ -115,4 +149,4 @@ def paged_decode(q, k_pages, v_pages, tables, lens, *, interpret: bool = False):
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(tables.astype(jnp.int32), lens.astype(jnp.int32), q, k_pages, v_pages)
+    )(tables.astype(jnp.int32), lens.astype(jnp.int32), *operands)

@@ -40,20 +40,43 @@ def sink_decode_ref(q, k_cache, v_cache, t):
                       v_cache.astype(jnp.float32)).astype(q.dtype)
 
 
-def paged_decode_ref(q, k_pages, v_pages, tables, lens):
+def dequant_pages_ref(pages, scale, tok):
+    """QuantPlane dequant oracle: int8 payload [..., K, bs, h] × the scale
+    plane (per-block per-channel `scale` [..., K, h] for sealed blocks —
+    nonzero row ⟺ sealed — or per-token scalar `tok` [..., K, bs] for
+    unsealed tail content) → f32. The single elementwise rule every kernel
+    tile implements: q * where(scale != 0, scale, tok)."""
+    s = jnp.where(scale[..., None, :] != 0, scale[..., None, :],
+                  tok[..., None])
+    return pages.astype(jnp.float32) * s
+
+
+def _maybe_dequant_gathered(pages_g, scale, tok, tables):
+    if scale is None:
+        return pages_g
+    return dequant_pages_ref(pages_g, scale[tables], tok[tables])
+
+
+def paged_decode_ref(q, k_pages, v_pages, tables, lens, *, k_scale=None,
+                     k_tok=None, v_scale=None, v_tok=None):
     """q [B,K,G,h]; pages [N,K,bs,h]; tables [B,nb]; lens [B] → [B,K,G,h].
     Gather the pages into a linear [B,K,nb*bs,h] cache, then masked softmax
-    attention over the first `lens` logical slots."""
+    attention over the first `lens` logical slots. Quantized arenas pass
+    the scale plane (k_scale/v_scale [N,K,h], k_tok/v_tok [N,K,bs]); the
+    gathered blocks dequantize through `dequant_pages_ref`."""
     B, K, G, h = q.shape
     nb = tables.shape[1]
     bs = k_pages.shape[2]
-    k_lin = jnp.moveaxis(k_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
-    v_lin = jnp.moveaxis(v_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    kg = _maybe_dequant_gathered(k_pages[tables], k_scale, k_tok, tables)
+    vg = _maybe_dequant_gathered(v_pages[tables], v_scale, v_tok, tables)
+    k_lin = jnp.moveaxis(kg, 2, 1).reshape(B, K, nb * bs, h)
+    v_lin = jnp.moveaxis(vg, 2, 1).reshape(B, K, nb * bs, h)
     return sink_decode_ref(q, k_lin, v_lin, lens)
 
 
 def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
-                      chunk_len, *, window=0, sink=0):
+                      chunk_len, *, window=0, sink=0, k_scale=None,
+                      k_tok=None, v_scale=None, v_tok=None):
     """q [B,K,S*G,h] (row r = chunk token r//G); k_new/v_new [B,K,S,h];
     pages [N,K,bs,h]; tables [B,nb]; off/chunk_len [B] → [B,K,S*G,h].
     Dense reference: gather the tabled history blocks into a linear cache,
@@ -67,8 +90,10 @@ def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
     bs = k_pages.shape[2]
     off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,))
     cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (B,))
-    k_hist = jnp.moveaxis(k_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
-    v_hist = jnp.moveaxis(v_pages[tables], 2, 1).reshape(B, K, nb * bs, h)
+    kg = _maybe_dequant_gathered(k_pages[tables], k_scale, k_tok, tables)
+    vg = _maybe_dequant_gathered(v_pages[tables], v_scale, v_tok, tables)
+    k_hist = jnp.moveaxis(kg, 2, 1).reshape(B, K, nb * bs, h)
+    v_hist = jnp.moveaxis(vg, 2, 1).reshape(B, K, nb * bs, h)
     k_all = jnp.concatenate([k_hist, k_new], axis=2).astype(jnp.float32)
     v_all = jnp.concatenate([v_hist, v_new], axis=2).astype(jnp.float32)
     tok_h = jnp.broadcast_to(jnp.arange(nb * bs)[None], (B, nb * bs))
@@ -91,7 +116,8 @@ def paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables, off,
     return jnp.einsum("bkrt,bkth->bkrh", p, v_all).astype(q.dtype)
 
 
-def spec_verify_ref(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
+def spec_verify_ref(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok,
+                    *, k_scale=None, k_tok=None, v_scale=None, v_tok=None):
     """Speculative-verify oracle. q [B,K,S*G,h] (row r = window token r//G);
     k_new/v_new [B,K,S,h] the draft window's rope'd keys; pages [N,K,bs,h];
     tables [B,nb]; off [B] per-slot history length; n_tok [B] real window
@@ -102,7 +128,8 @@ def spec_verify_ref(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok):
     named oracle so the verify kernel's contract (read-only, causal-only,
     per-row off/cl) is pinned independently of prefill's evolution."""
     return paged_prefill_ref(q, k_new, v_new, k_pages, v_pages, tables,
-                             off, n_tok, window=0, sink=0)
+                             off, n_tok, window=0, sink=0, k_scale=k_scale,
+                             k_tok=k_tok, v_scale=v_scale, v_tok=v_tok)
 
 
 def block_topk_scores_ref(q, kmin, kmax, tables, lens, *, block_size):

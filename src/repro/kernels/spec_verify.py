@@ -46,9 +46,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
 NEG_INF = -1e30
 
 
-def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, scale: float, block_size: int,
-            n_blocks: int, S: int, G: int):
+def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, *rest,
+            scale: float, block_size: int, n_blocks: int, S: int, G: int,
+            quant: bool):
+    # QuantPlane: int8 history tiles dequantize in VMEM against their seal
+    # scales [h] (nonzero ⟺ sealed) or per-token tail scales [bs]; the
+    # window's own k_new/v_new stay f32 (not yet committed to any block).
+    if quant:
+        ks_ref, kt_ref, vs_ref, vt_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     off = meta_ref[b, 0]          # this slot's resident-history length
@@ -80,11 +87,19 @@ def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, o_ref,
     def _history():
         q = q_ref[...].astype(jnp.float32)              # [SG, h]
         k = kp_ref[...].astype(jnp.float32)             # [bs, h]
+        if quant:
+            ks = ks_ref[...].astype(jnp.float32)        # [h]
+            kt = kt_ref[...].astype(jnp.float32)        # [bs]
+            k = k * jnp.where(ks[None, :] != 0, ks[None, :], kt[:, None])
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         tok = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = (tok < off) & (tok <= p_row[:, None])
         p, corr = _accumulate(s, mask)
         v = vp_ref[...].astype(jnp.float32)
+        if quant:
+            vs = vs_ref[...].astype(jnp.float32)
+            vt = vt_ref[...].astype(jnp.float32)
+            v = v * jnp.where(vs[None, :] != 0, vs[None, :], vt[:, None])
         acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(p, v)
 
     # in-window step: causal attention over the window's real keys (padded
@@ -106,40 +121,60 @@ def _kernel(tbl_ref, meta_ref, q_ref, kn_ref, vn_ref, kp_ref, vp_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def spec_verify(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok,
-                *, interpret: bool = False):
+                *, k_scale=None, k_tok=None, v_scale=None, v_tok=None,
+                interpret: bool = False):
     """q [B, K, S*G, h] (row r = window token r//G); k_new/v_new [B, K, S, h];
     arenas [N, K, bs, h]; tables [B, nb] physical block ids; off [B] per-slot
-    history length, n_tok [B] real window rows → o [B, K, S*G, h]."""
+    history length, n_tok [B] real window rows → o [B, K, S*G, h].
+
+    Quantized arenas (QuantPlane) pass int8 pages plus the scale plane
+    (k_scale/v_scale [N, K, h] seal scales, k_tok/v_tok [N, K, bs] per-token
+    tail scales); history tiles dequantize in VMEM — the draft window's
+    k_new/v_new stay f32."""
     B, K, SG, h = q.shape
     S = k_new.shape[2]
     G = SG // S
     bs = k_pages.shape[2]
     nb = tables.shape[1]
     scale = h ** -0.5
+    quant = k_scale is not None
     meta = jnp.stack([jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,)),
                       jnp.broadcast_to(jnp.asarray(n_tok, jnp.int32), (B,))],
                      axis=1)
     kernel = functools.partial(_kernel, scale=scale, block_size=bs,
-                               n_blocks=nb, S=S, G=G)
+                               n_blocks=nb, S=S, G=G, quant=quant)
+    in_specs = [
+        pl.BlockSpec((None, None, SG, h),
+                     lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+        pl.BlockSpec((None, None, S, h),
+                     lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+        pl.BlockSpec((None, None, S, h),
+                     lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
+        # the j == nb (in-window) step still fetches a tabled block; the
+        # clamped entry is never read by compute
+        pl.BlockSpec((None, None, bs, h),
+                     lambda b, kh, j, tbl, meta:
+                     (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+        pl.BlockSpec((None, None, bs, h),
+                     lambda b, kh, j, tbl, meta:
+                     (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
+    ]
+    operands = [q, k_new, v_new, k_pages, v_pages]
+    if quant:
+        sc_spec = pl.BlockSpec(
+            (None, None, h),
+            lambda b, kh, j, tbl, meta:
+            (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0))
+        tk_spec = pl.BlockSpec(
+            (None, None, bs),
+            lambda b, kh, j, tbl, meta:
+            (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0))
+        in_specs += [sc_spec, tk_spec, sc_spec, tk_spec]
+        operands += [k_scale, k_tok, v_scale, v_tok]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,      # tables, meta
         grid=(B, K, nb + 1),
-        in_specs=[
-            pl.BlockSpec((None, None, SG, h),
-                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
-            pl.BlockSpec((None, None, S, h),
-                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
-            pl.BlockSpec((None, None, S, h),
-                         lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
-            # the j == nb (in-window) step still fetches a tabled block; the
-            # clamped entry is never read by compute
-            pl.BlockSpec((None, None, bs, h),
-                         lambda b, kh, j, tbl, meta:
-                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
-            pl.BlockSpec((None, None, bs, h),
-                         lambda b, kh, j, tbl, meta:
-                         (tbl[b, jnp.minimum(j, tbl.shape[1] - 1)], kh, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, SG, h),
                                lambda b, kh, j, tbl, meta: (b, kh, 0, 0)),
         scratch_shapes=[
@@ -155,4 +190,4 @@ def spec_verify(q, k_new, v_new, k_pages, v_pages, tables, off, n_tok,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(tables.astype(jnp.int32), meta, q, k_new, v_new, k_pages, v_pages)
+    )(tables.astype(jnp.int32), meta, *operands)

@@ -210,7 +210,181 @@ def decode_attention(
 
 
 # ----------------------------------------------------------------------
-def paged_decode_attention(q, k_pages, v_pages, tables, lens):
+# QuantPlane: int8 arena payloads + the f32 scale plane.
+#
+# Sealed (full) blocks store K/V as int8 with per-block, PER-CHANNEL f32
+# scales [N, K, h] (kscale/vscale); the partial tail block's tokens carry
+# per-token, per-kv-head SCALAR scales [N, K, bs] (ktok/vtok), assigned
+# once when the token is appended. The per-token scale is a pure function
+# of the single token and the per-channel seal scale a pure function of
+# the block's stored int payload, so the arena bytes are independent of
+# how writes were grouped into chunks/windows — the bit-identity contracts
+# (chunked prefill vs store-resume vs verify commits vs fault replay) ride
+# on exactly this grouping independence. Convention: a nonzero kscale row
+# marks the block sealed; dequantization is the single elementwise rule
+# `q * where(scale != 0, scale, tok)` which is exact in every edge case
+# (zero channels of sealed blocks have q == 0, scrubbed blocks dequantize
+# to 0) and needs no residency context.
+
+
+def quant_tokens(x):
+    """Per-token provisional int8 quantization (the unsealed tail format).
+
+    x [..., h] → (q int8 [..., h], ts f32 [...]): ts = absmax(token)/127
+    per (token, kv head); q = round(x/ts) clipped to ±127. Zero tokens get
+    ts = 0 with q = 0 (the dequant rule multiplies by the stored 0)."""
+    x = jnp.asarray(x, jnp.float32)
+    ts = jnp.abs(x).max(axis=-1) / 127.0
+    safe = jnp.where(ts > 0, ts, 1.0)
+    q = jnp.clip(jnp.round(x / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, ts
+
+
+def quant_effective_scale(scale, tok):
+    """Elementwise dequant scale [..., bs, h] from the per-channel seal
+    plane `scale` [..., h] and the per-token plane `tok` [..., bs]: sealed
+    blocks (nonzero scale row) use the channel scale, unsealed content the
+    token scalar."""
+    return jnp.where(scale[..., None, :] != 0, scale[..., None, :],
+                     tok[..., None])
+
+
+def dequant_pages(pages, scale, tok):
+    """int8 payload [..., bs, h] → f32 content, via the elementwise rule."""
+    return pages.astype(jnp.float32) * quant_effective_scale(scale, tok)
+
+
+def dequant_gather(pages, scale, tok, tables):
+    """Gather tabled blocks and dequantize → linear [B, nb·bs, K, h] f32
+    (the quant twin of the `k_pages[tables]` gathers below)."""
+    B, nb = tables.shape
+    K, bs, h = pages.shape[-3:]
+    g = dequant_pages(pages[tables], scale[tables], tok[tables])
+    return g.transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, K, h)
+
+
+def seal_blocks(pages, scale, tok, blocks, do_seal, *, stacked=False):
+    """Seal freshly-filled arena blocks: re-quantize each block's stored
+    per-token payload with per-block, per-channel scales and zero its
+    per-token row. pages int8 [n_rep?, N, K, bs, h]; scale [n_rep?, N, K, h];
+    tok [n_rep?, N, K, bs]; blocks [M] physical ids; do_seal [M] bool.
+
+    Non-sealing rows are redirected to the null block 0 and write back its
+    gathered content unchanged (whole-block scatters must keep real-block
+    targets unique — the duplicate-scatter determinism rule); the null
+    block itself is never sealed. Sealing is a pure function of the stored
+    (int8, per-token scale) payload, so it lands the same bytes no matter
+    which write grouping filled the block."""
+    blocks = jnp.asarray(blocks, jnp.int32)
+    do_seal = jnp.asarray(do_seal, bool) & (blocks != 0)
+    tgt = jnp.where(do_seal, blocks, 0)
+    ix = (slice(None), tgt) if stacked else tgt
+    praw = pages[ix]                               # [R?, M, K, bs, h] int8
+    ts = tok[ix]                                   # [R?, M, K, bs]
+    deq = praw.astype(jnp.float32) * ts[..., None]
+    sc = jnp.abs(deq).max(axis=-2) / 127.0         # [R?, M, K, h]
+    safe = jnp.where(sc > 0, sc, 1.0)
+    q2 = jnp.clip(jnp.round(deq / safe[..., None, :]), -127, 127) \
+        .astype(jnp.int8)
+    lead = (1,) if stacked else ()
+    m5 = do_seal.reshape(lead + (-1, 1, 1, 1))
+    m4 = do_seal.reshape(lead + (-1, 1, 1))
+    return (pages.at[ix].set(jnp.where(m5, q2, praw)),
+            scale.at[ix].set(jnp.where(m4, sc, scale[ix])),
+            tok.at[ix].set(jnp.where(m4, 0.0, ts)))
+
+
+def quant_paged_cache_write(entry, k_new, v_new, blk, off):
+    """Decode append into an int8 arena entry (the quant twin of
+    `paged_cache_write` + the scale-plane maintenance it implies).
+
+    entry holds {"k","v"} int8 arenas plus {"kscale","vscale","ktok",
+    "vtok"}; k_new/v_new [B, K, h] f32; blk/off [B]. Three scatters in
+    order: (1) UNSEAL any block receiving its in-block offset-0 token —
+    clearing the per-channel scale a prior owner may have sealed in
+    (reallocated blocks are not scrubbed; without this the dequant rule
+    would read the stale seal scale over the new owner's per-token
+    payload); (2) write the per-token quantized payload + its scale;
+    (3) SEAL blocks whose last slot (off == bs-1) just landed. Returns the
+    six updated quant leaves."""
+    bs = entry["k"].shape[-2]
+    K = entry["k"].shape[-3]
+    kq, kts = quant_tokens(k_new)
+    vq, vts = quant_tokens(v_new)
+    ub = jnp.where(off == 0, blk, 0)
+    ksc = entry["kscale"].at[ub].set(0.0)
+    vsc = entry["vscale"].at[ub].set(0.0)
+    kp, vp = paged_cache_write(entry["k"], entry["v"], kq, vq, blk, off)
+    ki = jnp.arange(K)[None, :]
+    ktk = entry["ktok"].at[blk[:, None], ki, off[:, None]].set(kts)
+    vtk = entry["vtok"].at[blk[:, None], ki, off[:, None]].set(vts)
+    do_seal = off == bs - 1
+    kp, ksc, ktk = seal_blocks(kp, ksc, ktk, blk, do_seal)
+    vp, vsc, vtk = seal_blocks(vp, vsc, vtk, blk, do_seal)
+    return {"k": kp, "v": vp, "kscale": ksc, "vscale": vsc,
+            "ktok": ktk, "vtok": vtk}
+
+
+def quant_paged_prefill_write(entry, k_new, v_new, tables, off, chunk_len):
+    """Chunk scatter into an int8 arena entry (quant twin of
+    `paged_prefill_write`): per-token quantize the chunk [1, S, K, h],
+    unseal blocks the chunk opens (first token at in-block offset 0), land
+    payload + per-token scales, then seal every block whose last slot the
+    chunk covered. Padded tail rows are redirected to the null block."""
+    B, S, K, h = k_new.shape
+    bs = entry["k"].shape[-2]
+    nb = tables.shape[1]
+    pos = jnp.asarray(off, jnp.int32) + jnp.arange(S)
+    valid = jnp.arange(S) < jnp.asarray(chunk_len, jnp.int32)
+    blk = jnp.where(valid, tables[0, jnp.clip(pos // bs, 0, nb - 1)], 0)
+    offi = pos % bs
+    kq, kts = quant_tokens(k_new[0])               # [S, K, h], [S, K]
+    vq, vts = quant_tokens(v_new[0])
+    ub = jnp.where(valid & (offi == 0), blk, 0)
+    ksc = entry["kscale"].at[ub].set(0.0)
+    vsc = entry["vscale"].at[ub].set(0.0)
+    ki = jnp.arange(K)[None, :]
+    kp = entry["k"].at[blk[:, None], ki, offi[:, None]].set(kq)
+    vp = entry["v"].at[blk[:, None], ki, offi[:, None]].set(vq)
+    ktk = entry["ktok"].at[blk[:, None], ki, offi[:, None]].set(kts)
+    vtk = entry["vtok"].at[blk[:, None], ki, offi[:, None]].set(vts)
+    do_seal = valid & (offi == bs - 1)
+    kp, ksc, ktk = seal_blocks(kp, ksc, ktk, blk, do_seal)
+    vp, vsc, vtk = seal_blocks(vp, vsc, vtk, blk, do_seal)
+    return {"k": kp, "v": vp, "kscale": ksc, "vscale": vsc,
+            "ktok": ktk, "vtok": vtk}
+
+
+def quant_paged_cache_write_tokens(entry, k_new, v_new, blk, off):
+    """Per-sequence token-WINDOW scatter into an int8 arena entry (quant
+    twin of `paged_cache_write_tokens` — the speculative-verify commit).
+    blk/off [B, S]; rejected/idle rows arrive already redirected to the
+    null block, so rollback stays the absence of a write; unseal/seal
+    follow the same offset-0 / offset-(bs-1) rules as the append path."""
+    B, S, K, h = k_new.shape
+    bs = entry["k"].shape[-2]
+    kq, kts = quant_tokens(k_new)                  # [B, S, K, h], [B, S, K]
+    vq, vts = quant_tokens(v_new)
+    ub = jnp.where(off == 0, blk, 0).reshape(-1)
+    ksc = entry["kscale"].at[ub].set(0.0)
+    vsc = entry["vscale"].at[ub].set(0.0)
+    ki = jnp.arange(K)[None, None, :]
+    kp = entry["k"].at[blk[:, :, None], ki, off[:, :, None]].set(kq)
+    vp = entry["v"].at[blk[:, :, None], ki, off[:, :, None]].set(vq)
+    ktk = entry["ktok"].at[blk[:, :, None], ki, off[:, :, None]].set(kts)
+    vtk = entry["vtok"].at[blk[:, :, None], ki, off[:, :, None]].set(vts)
+    flat_b = blk.reshape(-1)
+    do_seal = (off == bs - 1).reshape(-1)
+    kp, ksc, ktk = seal_blocks(kp, ksc, ktk, flat_b, do_seal)
+    vp, vsc, vtk = seal_blocks(vp, vsc, vtk, flat_b, do_seal)
+    return {"k": kp, "v": vp, "kscale": ksc, "vscale": vsc,
+            "ktok": ktk, "vtok": vtk}
+
+
+# ----------------------------------------------------------------------
+def paged_decode_attention(q, k_pages, v_pages, tables, lens, *,
+                           k_scale=None, k_tok=None, v_scale=None,
+                           v_tok=None):
     """Single-token attention over physically paged KV (pure-jnp path).
 
     q [B, H, h]; arenas [N, K, bs, h] (kv-head-major blocks); tables [B, nb]
@@ -218,21 +392,31 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lens):
     current token's K/V is written; min(t+1, W) for ring layers). Gathers
     the tabled blocks into a linear [B, nb·bs, K, h] view (non-resident
     entries alias the null block and are masked by `lens`) and reuses the
-    dense masked-softmax decode math. The Pallas kernel additionally skips
-    compute for blocks past `lens` — this fallback pays the full gather.
+    dense masked-softmax decode math. With the scale-plane kwargs the
+    arenas are int8 and each gathered tile is dequantized in-register
+    (quant_effective_scale) — no dequantized arena copy exists outside the
+    gathered view. The Pallas kernel additionally skips compute for blocks
+    past `lens` — this fallback pays the full gather.
     """
     B = q.shape[0]
     nb = tables.shape[1]
     bs, h = k_pages.shape[2], k_pages.shape[3]
     K = k_pages.shape[1]
-    k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, K, h)
-    v_lin = v_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, nb * bs, K, h)
+    if k_scale is not None:
+        k_lin = dequant_gather(k_pages, k_scale, k_tok, tables)
+        v_lin = dequant_gather(v_pages, v_scale, v_tok, tables)
+    else:
+        k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4) \
+            .reshape(B, nb * bs, K, h)
+        v_lin = v_pages[tables].transpose(0, 1, 3, 2, 4) \
+            .reshape(B, nb * bs, K, h)
     return decode_attention(q, k_lin, v_lin, lens)
 
 
 def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, tables, off,
                             chunk_len, *, mask_window: int = 0,
-                            mask_sink: int = 0):
+                            mask_sink: int = 0, k_scale=None, k_tok=None,
+                            v_scale=None, v_tok=None):
     """Chunked-prefill attention over paged history (pure-jnp path).
 
     q [B,S,H,h] is one prompt chunk at absolute positions off + arange(S)
@@ -241,7 +425,9 @@ def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, tables, off,
     [N,K,bs,h] mapped by tables [B,nb]. Queries attend resident history
     slots plus causal in-chunk keys, optionally under the sink+window
     sparse mask (mask_window=0 → dense causal). Non-resident table entries
-    alias the null block and are masked by off. The Pallas kernel
+    alias the null block and are masked by off. Quantized arenas (the
+    scale-plane kwargs) dequantize only the gathered HISTORY tiles — the
+    chunk's in-flight k_new/v_new stay f32. The Pallas kernel
     (kernels/paged_prefill.py) additionally skips compute for blocks past
     the residency — this fallback pays the full gather.
     """
@@ -254,8 +440,12 @@ def paged_prefill_attention(q, k_new, v_new, k_pages, v_pages, tables, off,
     f32 = jnp.float32
     off = jnp.broadcast_to(jnp.asarray(off, jnp.int32), (B,))
     cl = jnp.broadcast_to(jnp.asarray(chunk_len, jnp.int32), (B,))
-    k_hist = k_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
-    v_hist = v_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
+    if k_scale is not None:
+        k_hist = dequant_gather(k_pages, k_scale, k_tok, tables)
+        v_hist = dequant_gather(v_pages, v_scale, v_tok, tables)
+    else:
+        k_hist = k_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
+        v_hist = v_pages[tables].transpose(0, 1, 3, 2, 4).reshape(B, L, K, h)
     pos = off[:, None] + jnp.arange(S)[None]                 # [B, S] q pos
     tok = jnp.concatenate(
         [jnp.broadcast_to(jnp.arange(L)[None], (B, L)), pos], axis=1)
@@ -305,7 +495,7 @@ def paged_prefill_write(k_pages, v_pages, k_new, v_new, tables, off,
 
 
 def update_block_summaries(kmin, kmax, kmean, k_pages, blocks, *,
-                           stacked=False):
+                           stacked=False, k_scale=None, k_tok=None):
     """Recompute the per-block key summaries for the (just-written) blocks.
 
     kmin/kmax/kmean [N, K, h] float32 side arrays of a [N, K, bs, h] key
@@ -316,17 +506,26 @@ def update_block_summaries(kmin, kmax, kmean, k_pages, blocks, *,
     whole-block reductions: unwritten slots hold zeros, which only widen
     the [kmin, kmax] interval, so the Quest upper bound stays valid for
     partially filled blocks (and the null block 0, a frequent redirect
-    target, is harmlessly re-summarized). This is the ONLY reduction
-    implementing the summary semantics — every write site (prefill chunk,
-    decode append, dense-scatter admission) must go through it so the
-    zero-stale-summary invariant cannot diverge between paths.
+    target, is harmlessly re-summarized). Quantized arenas pass the scale
+    plane (k_scale/k_tok): summaries reduce the DEQUANTIZED content, so
+    kmin/kmax keep bounding exactly what attention will read and the Quest
+    bound stays valid with zero quant-specific scoring code. This is the
+    ONLY reduction implementing the summary semantics — every write site
+    (prefill chunk, decode append, dense-scatter admission) must go
+    through it so the zero-stale-summary (and zero-stale-scale) invariant
+    cannot diverge between paths.
     """
     blocks = jnp.asarray(blocks, jnp.int32)
     if stacked:
         k = k_pages[:, blocks].astype(jnp.float32)       # [R, M, K, bs, h]
+        if k_scale is not None:
+            k = k * quant_effective_scale(k_scale[:, blocks],
+                                          k_tok[:, blocks])
         ix = (slice(None), blocks)
     else:
         k = k_pages[blocks].astype(jnp.float32)          # [M, K, bs, h]
+        if k_scale is not None:
+            k = k * quant_effective_scale(k_scale[blocks], k_tok[blocks])
         ix = blocks
     return (kmin.at[ix].set(k.min(axis=-2)),
             kmax.at[ix].set(k.max(axis=-2)),
@@ -410,7 +609,8 @@ def select_kv_blocks(scores, tables, lens, *, block_size, k_static,
     return new_tables, new_lens, m, selected
 
 
-def selected_attention_mass(q, k_pages, tables, lens, selected):
+def selected_attention_mass(q, k_pages, tables, lens, selected, *,
+                            k_scale=None, k_tok=None):
     """Exact attention mass the selected blocks capture, per slot.
 
     q [B, H, h]; k_pages [N, K, bs, h]; tables/selected [B, nb] over the
@@ -418,13 +618,18 @@ def selected_attention_mass(q, k_pages, tables, lens, selected):
     resident softmax (the dense-fallback gather — this is a diagnostics
     pass, gated by `omniattn.topk_measure_mass`) and sums the probability
     landing in selected blocks, averaged over heads → [B] in [0, 1].
+    Quantized arenas pass the key scale plane so the mass is measured over
+    the content attention actually reads.
     """
     B, H, h = q.shape
     K, bs = k_pages.shape[1], k_pages.shape[2]
     G = H // K
     nb = tables.shape[1]
-    k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4) \
-        .reshape(B, nb * bs, K, h).astype(jnp.float32)
+    if k_scale is not None:
+        k_lin = dequant_gather(k_pages, k_scale, k_tok, tables)
+    else:
+        k_lin = k_pages[tables].transpose(0, 1, 3, 2, 4) \
+            .reshape(B, nb * bs, K, h).astype(jnp.float32)
     qg = q.reshape(B, K, G, h).astype(jnp.float32)
     s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_lin) * (h ** -0.5)
     valid = jnp.arange(nb * bs)[None] < lens[:, None]

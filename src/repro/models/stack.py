@@ -311,7 +311,8 @@ def _drop_entries(cfg, plan, tree, drop_full: bool):
     return out
 
 
-def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
+def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None,
+                   quant: bool = False):
     """Allocate only the shared full-attention arenas:
     {"period": (entry|None, ...), "rem": (...)} with entry
     {"k","v": [n_rep?, n_arena_blocks, K, bs, h],
@@ -324,8 +325,17 @@ def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
     exactly that). kmin/kmax feed the Quest-style upper-bound score
     (kernels/block_topk.py); kmean is the block-center estimate (the
     mean-score ablation in bench_accuracy and diagnostics — not on the
-    decode scoring path)."""
+    decode scoring path).
+
+    With `quant` (QuantPlane, serving/quant.py) the k/v payloads are int8
+    and each entry carries the scale plane: per-block PER-CHANNEL seal
+    scales {"kscale","vscale": [n_rep?, N, K, h] f32} (nonzero row ⟺ block
+    sealed) plus per-token scalar scales {"ktok","vtok": [n_rep?, N, K, bs]
+    f32} for unsealed tail content — maintained by the same donated jits
+    that write KV, so zero-stale-scale rides the summary invariant."""
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    if quant:
+        dtype = jnp.int8
     K, h = cfg.n_kv_heads, cfg.head_dim
     kv_part = attn_mod.arena_kv_part(K, mesh.tp)
 
@@ -334,10 +344,12 @@ def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
             return None, None
         shp = (n_arena_blocks, K, block_size, h)
         sshp = (n_arena_blocks, K, h)
+        tshp = (n_arena_blocks, K, block_size)
         lead = ()
         if stacked:
             shp = (plan.n_rep,) + shp
             sshp = (plan.n_rep,) + sshp
+            tshp = (plan.n_rep,) + tshp
             lead = (None,)
         kv_sp = P(*lead, None, kv_part, None, None)
         sm_sp = P(*lead, None, kv_part, None)
@@ -347,6 +359,13 @@ def alloc_arena_kv(cfg, mesh, plan, n_arena_blocks, block_size, dtype=None):
                  "kmean": jnp.zeros(sshp, jnp.float32)}
         sps = {"k": kv_sp, "v": kv_sp,
                "kmin": sm_sp, "kmax": sm_sp, "kmean": sm_sp}
+        if quant:
+            entry.update(kscale=jnp.zeros(sshp, jnp.float32),
+                         vscale=jnp.zeros(sshp, jnp.float32),
+                         ktok=jnp.zeros(tshp, jnp.float32),
+                         vtok=jnp.zeros(tshp, jnp.float32))
+            sps.update(kscale=sm_sp, vscale=sm_sp,
+                       ktok=sm_sp, vtok=sm_sp)
         return entry, sps
 
     period = [one(s, True) for s in plan.period]
@@ -492,17 +511,30 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
         # by the window, not max_len.
         cl = S if true_len is None else true_len
         pos0 = jnp.asarray(positions, jnp.int32)[0]
+        # QuantPlane: int8 arenas carry the scale plane — history reads
+        # dequantize in-tile, writes quantize per-token + seal-on-full
+        quant = "kscale" in cache
+        qkw = dict(k_scale=cache["kscale"], k_tok=cache["ktok"],
+                   v_scale=cache["vscale"], v_tok=cache["vtok"]) \
+            if quant else {}
         if use_pallas:
             from repro.kernels import ops as kops
             out = kops.attention_paged_prefill_op(
-                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl)
+                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl,
+                **qkw)
         else:
             out = attn_mod.paged_prefill_attention(
-                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl)
-        kc, vc = attn_mod.paged_prefill_write(cache["k"], cache["v"], k, v,
-                                              block_tables, pos0, cl)
+                q, k, v, cache["k"], cache["v"], block_tables, pos0, cl,
+                **qkw)
+        if quant:
+            new_cache = attn_mod.quant_paged_prefill_write(
+                cache, k, v, block_tables, pos0, cl)
+        else:
+            kc, vc = attn_mod.paged_prefill_write(cache["k"], cache["v"],
+                                                  k, v, block_tables, pos0,
+                                                  cl)
+            new_cache = {"k": kc, "v": vc}
         y = out.reshape(B, S, H * h)
-        new_cache = {"k": kc, "v": vc}
         if "kmin" in cache:
             # block-summary metadata plane: the chunk's writes touched the
             # blocks its token positions map to (padded tail rows alias the
@@ -515,7 +547,10 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                              block_tables[0, jnp.clip(ppos // bs_a, 0,
                                                       nb_t - 1)], 0)
             kmn, kmx, kme = attn_mod.update_block_summaries(
-                cache["kmin"], cache["kmax"], cache["kmean"], kc, wblk)
+                cache["kmin"], cache["kmax"], cache["kmean"],
+                new_cache["k"], wblk,
+                k_scale=new_cache.get("kscale"),
+                k_tok=new_cache.get("ktok"))
             new_cache.update(kmin=kmn, kmax=kmx, kmean=kme)
     elif mode == "prefill" and cache is not None:
         # continuation chunk (chunked prefill / radix prefix-KV resume):
@@ -561,15 +596,28 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
             off = t % bs
             tbl = block_tables
             lens = jnp.minimum(t + 1, nb * bs)
-        kc, vc = attn_mod.paged_cache_write(cache["k"], cache["v"],
-                                            k[:, 0], v[:, 0], blk, off)
-        new_cache = {"k": kc, "v": vc}
+        quant = "kscale" in cache
+        if quant and not (sink or recent):
+            # QuantPlane append: per-token int8 quantize + scale-plane
+            # maintenance (unseal-on-open / seal-on-full) in one helper
+            new_cache = attn_mod.quant_paged_cache_write(
+                cache, k[:, 0], v[:, 0], blk, off)
+            kc, vc = new_cache["k"], new_cache["v"]
+        else:
+            kc, vc = attn_mod.paged_cache_write(cache["k"], cache["v"],
+                                                k[:, 0], v[:, 0], blk, off)
+            new_cache = {"k": kc, "v": vc}
+        qkw = dict(k_scale=new_cache["kscale"], k_tok=new_cache["ktok"],
+                   v_scale=new_cache["vscale"], v_tok=new_cache["vtok"]) \
+            if quant and not (sink or recent) else {}
         if not (sink or recent) and "kmin" in cache:
             # summaries ride the same write: the appended token lands in
             # `blk` (freed slots alias the null block) — recompute those
             # blocks BEFORE scoring so the tail bound covers the new key
             kmn, kmx, kme = attn_mod.update_block_summaries(
-                cache["kmin"], cache["kmax"], cache["kmean"], kc, blk)
+                cache["kmin"], cache["kmax"], cache["kmean"], kc, blk,
+                k_scale=new_cache.get("kscale"),
+                k_tok=new_cache.get("ktok"))
             new_cache.update(kmin=kmn, kmax=kmx, kmean=kme)
             oa = cfg.omniattn
             k_static = topk_block_budget(oa, tbl.shape[1])
@@ -596,7 +644,9 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                         recent_blocks=max(oa.topk_recent_blocks, 1))
                     if oa.topk_measure_mass:
                         mass = attn_mod.selected_attention_mass(
-                            q[:, 0], kc, tbl, lens, selected)
+                            q[:, 0], kc, tbl, lens, selected,
+                            k_scale=new_cache.get("kscale"),
+                            k_tok=new_cache.get("ktok"))
                         mass_sum, mass_n = (act * mass).sum(), act.sum()
                     else:
                         mass_sum = mass_n = jnp.float32(0)
@@ -610,9 +660,11 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                     sp_aux = jnp.stack([scored, scored, mn, mn])
         if use_pallas:
             from repro.kernels import ops as kops
-            out = kops.attention_paged_decode_op(q[:, 0], kc, vc, tbl, lens)
+            out = kops.attention_paged_decode_op(q[:, 0], kc, vc, tbl, lens,
+                                                 **qkw)
         else:
-            out = attn_mod.paged_decode_attention(q[:, 0], kc, vc, tbl, lens)
+            out = attn_mod.paged_decode_attention(q[:, 0], kc, vc, tbl, lens,
+                                                  **qkw)
         y = out.reshape(B, 1, H * h)
     elif mode == "verify":
         # speculative verify: READ-ONLY attention of each slot's draft
@@ -636,14 +688,18 @@ def attn_sublayer(cfg: ModelConfig, mesh: MeshCtx, p: dict, x, *, spec: LayerSpe
                 q, k, v, kr, vr, pos2, sink=sink, recent=recent)
         else:
             t = pos2[:, 0]
+            qkw = dict(k_scale=cache["kscale"], k_tok=cache["ktok"],
+                       v_scale=cache["vscale"], v_tok=cache["vtok"]) \
+                if "kscale" in cache else {}
             if use_pallas:
                 from repro.kernels import ops as kops
                 out = kops.spec_verify_op(q, k, v, cache["k"], cache["v"],
                                           block_tables, t,
-                                          jnp.full_like(t, S))
+                                          jnp.full_like(t, S), **qkw)
             else:
                 out = attn_mod.paged_prefill_attention(
-                    q, k, v, cache["k"], cache["v"], block_tables, t, S)
+                    q, k, v, cache["k"], cache["v"], block_tables, t, S,
+                    **qkw)
         y = out.reshape(B, S, H * h)
         new_cache = {"k": k, "v": v}
     elif mode == "decode":
@@ -963,13 +1019,22 @@ def stack_verify_commit(cfg: ModelConfig, plan: StackPlan, caches, staged,
                         block_tables[bidx[:, None],
                                      jnp.minimum(pos2 // bs, nb - 1)], 0)
         off = pos2 % bs
-        kc, vc = attn_mod.paged_cache_write_tokens(
-            entry["k"], entry["v"], stg["k"], stg["v"], blk, off)
-        out = dict(entry, k=kc, v=vc)
+        if "kscale" in entry:
+            # QuantPlane commit: the staged f32 window quantizes per-token
+            # on landing; rejected rows arrive null-redirected, so rollback
+            # stays "the write never happened" for payload AND scale plane
+            out = dict(entry)
+            out.update(attn_mod.quant_paged_cache_write_tokens(
+                entry, stg["k"], stg["v"], blk, off))
+        else:
+            kc, vc = attn_mod.paged_cache_write_tokens(
+                entry["k"], entry["v"], stg["k"], stg["v"], blk, off)
+            out = dict(entry, k=kc, v=vc)
         if "kmin" in entry:
             kmn, kmx, kme = attn_mod.update_block_summaries(
-                entry["kmin"], entry["kmax"], entry["kmean"], kc,
-                blk.reshape(-1))
+                entry["kmin"], entry["kmax"], entry["kmean"], out["k"],
+                blk.reshape(-1), k_scale=out.get("kscale"),
+                k_tok=out.get("ktok"))
             out.update(kmin=kmn, kmax=kmx, kmean=kme)
         return out
 

@@ -89,22 +89,34 @@ class KVArena:
 
     @staticmethod
     def build(lm: LM, n_blocks: int, block_size: int = 16,
-              placement: Optional[DevicePlacement] = None) -> "KVArena":
+              placement: Optional[DevicePlacement] = None,
+              quant: bool = False) -> "KVArena":
         pool = KVPool(n_blocks=n_blocks, block_size=block_size)
         # +1: arena block 0 is the reserved null block (never allocated)
         kv = alloc_arena_kv(lm.cfg, lm.mesh, lm.plan, n_blocks + 1,
-                            block_size)
+                            block_size, quant=quant)
         return KVArena(lm, pool, kv, block_size, placement=placement)
+
+    @property
+    def quant(self) -> bool:
+        """Structural quant detection: an arena is quantized iff its
+        entries carry the scale plane (no config threading — quant-OFF
+        trees are byte-identical to pre-QuantPlane trees)."""
+        return any(e is not None and "kscale" in e
+                   for e in self.kv["period"] + self.kv["rem"])
 
     def __post_init__(self):
         if self.placement is None:
             self.placement = DevicePlacement.of(self.lm.mesh)
         leaves = jax.tree.leaves(self.kv)
         n = self.pool.n_blocks + 1
-        # bytes one arena block pins across every full-attention layer
+        # bytes one arena block pins across every full-attention layer —
+        # dtype-true, so int8 quant arenas report ~half the f32 figure and
+        # the pool's byte-based admission sizing doubles
         self.block_nbytes = sum(x.size // n * x.dtype.itemsize
                                 for x in leaves)
-        specs = self.placement.arena_specs(self.lm.cfg, self.lm.plan)
+        specs = self.placement.arena_specs(self.lm.cfg, self.lm.plan,
+                                           quant=self.quant)
         self._copy = self.placement.donate_jit(
             self._copy_impl, donate_argnums=(0,), out_specs=specs)
         self._scrub = self.placement.donate_jit(
@@ -160,20 +172,38 @@ class KVArena:
         if jax.tree.leaves(self.kv):
             self.kv = self._scrub(self.kv, jnp.int32(b))
 
+    @staticmethod
+    def _dense_k(entry) -> np.ndarray:
+        """Host f32 view of one entry's key content — dequantized through
+        the stored scale plane for quant entries, so every scan/check below
+        reasons about exactly what attention reads. The numpy multiply is
+        bit-identical to the jit-side dequant (one f32 product per element),
+        so exact-equality summary checks remain exact under quant."""
+        k = np.asarray(entry["k"], np.float32)
+        if "kscale" in entry:
+            sc = np.asarray(entry["kscale"], np.float32)[..., None, :]
+            tk = np.asarray(entry["ktok"], np.float32)[..., None]
+            k = k * np.where(sc != 0, sc, tk)
+        return k
+
     def find_corrupt_blocks(self) -> list:
         """Summary-plane corruption scan: block ids whose stored key
         summaries disagree with a fresh reduction of the block's key
         content. A fault (bit-flip, lost write, partial DMA) that mutates K
         without going through a summary-maintaining write path trips this —
-        the detection half of the FaultPlane corruption story. Host scan
-        (fetches the key arenas); call at recovery points, not per step."""
+        the detection half of the FaultPlane corruption story; on quant
+        arenas the reduction runs over the DEQUANTIZED payload, so a
+        perturbed int8 byte or scale entry shifts the recomputed min/max
+        away from the stored summary exactly as an f32 flip would. Host
+        scan (fetches the key arenas); call at recovery points, not per
+        step."""
         n = self.pool.n_blocks + 1
         bad = np.zeros(n, bool)
 
         def one(entry, stacked):
             if entry is None or "kmin" not in entry:
                 return
-            k = np.asarray(entry["k"], np.float32)
+            k = self._dense_k(entry)
             mism = (np.asarray(entry["kmin"], np.float32) != k.min(axis=-2)) \
                 | (np.asarray(entry["kmax"], np.float32) != k.max(axis=-2))
             # reduce every axis except the block axis
@@ -193,11 +223,17 @@ class KVArena:
         point because every path that writes arena K recomputes the touched
         blocks' summaries in the same jit (prefill chunk writes, decode
         appends, dense-scatter admission) and copy_block copies content and
-        summary together. Test/diagnostic helper — fetches the arenas."""
+        summary together. Quant arenas extend the check to the scale plane
+        (zero-stale-scales): summaries must match the dequantized content,
+        scales must be finite and non-negative, and a sealed block's
+        per-token row must be zeroed (seal-on-full zeroes it; the null
+        block 0, a duplicate-scatter redirect target, is exempt from the
+        seal/tail exclusivity — its content is masked everywhere).
+        Test/diagnostic helper — fetches the arenas."""
         def one(entry):
             if entry is None or "kmin" not in entry:
                 return
-            k = np.asarray(entry["k"], np.float32)
+            k = self._dense_k(entry)
             np.testing.assert_array_equal(np.asarray(entry["kmin"]),
                                           k.min(axis=-2),
                                           err_msg="stale kmin summary")
@@ -207,6 +243,24 @@ class KVArena:
             np.testing.assert_allclose(np.asarray(entry["kmean"]),
                                        k.mean(axis=-2), rtol=1e-5, atol=1e-6,
                                        err_msg="stale kmean summary")
+            if "kscale" not in entry:
+                return
+            for sck, tkk in (("kscale", "ktok"), ("vscale", "vtok")):
+                sc = np.asarray(entry[sck], np.float32)
+                tk = np.asarray(entry[tkk], np.float32)
+                assert np.all(np.isfinite(sc)) and np.all(sc >= 0), \
+                    f"invalid {sck} seal scales"
+                assert np.all(np.isfinite(tk)) and np.all(tk >= 0), \
+                    f"invalid {tkk} per-token scales"
+                # sealed ⟹ per-token row zeroed (block axis is 1 for
+                # stacked period entries, 0 for rem; null block exempt)
+                sealed = (sc != 0).any(axis=-1)              # [..., N, K]
+                ax = sc.ndim - 3
+                nulls = np.zeros(sc.shape[ax], bool)
+                nulls[0] = True
+                sealed &= ~nulls.reshape((1,) * ax + (-1, 1))
+                assert not (sealed[..., None] & (tk != 0)).any(), \
+                    f"sealed block retains nonzero {tkk} row"
         for e in self.kv["period"]:
             one(e)
         for e in self.kv["rem"]:

@@ -199,7 +199,7 @@ class DecodeEngine:
         if self.paged:
             private_sp, merged_sp = pl.paged_cache_specs(
                 cfg, self.lm.plan, self.n_slots, self.max_len,
-                self.block_size)
+                self.block_size, quant=self.arena.quant)
             self._insert = pl.donate_jit(self._insert_paged_impl,
                                          donate_argnums=(0, 1),
                                          out_specs=(merged_sp, state_sp))
@@ -269,6 +269,8 @@ class DecodeEngine:
         redirect to the null block — the lender's summaries stand)."""
         sink, recent = win
         bs = self.block_size
+        if not (sink or recent) and "kscale" in entry:
+            return self._insert_attn_quant(entry, one, wtbl, stacked)
         out = dict(entry)
         for name in ("k", "v"):
             a = entry[name]
@@ -292,10 +294,63 @@ class DecodeEngine:
                     wtbl, stacked=stacked)
         return out
 
+    def _insert_attn_quant(self, entry, one, wtbl, stacked):
+        """Dense-scatter admission into a QUANTIZED full-attention arena.
+
+        Preemption round-trips bit-exactly: an extracted cache carries the
+        raw int8 payload + scale-plane sidecar ("kq"/"kscale"/"ktok", v
+        likewise) next to its dequantized dense view, and re-admission
+        scatters those ints VERBATIM — float requantization is not exactly
+        idempotent, the sidecar is. A fresh dense f32 cache (no sidecar)
+        takes the per-token provisional quantization — the same pure
+        per-token function every write path uses, so a later seal of these
+        blocks lands the identical bits a prefill-filled block would.
+        Summaries recompute over the DEQUANTIZED content in the same jit
+        (zero-stale-scale rides zero-stale-summary); shared-prefix entries
+        are already redirected to the null block in `wtbl`, so a lender's
+        payload, scales and summaries all stand untouched."""
+        out = dict(entry)
+        ix = (slice(None), wtbl) if stacked else wtbl
+        if "kq" in one:
+            for name, qn, sn, tn in (("k", "kq", "kscale", "ktok"),
+                                     ("v", "vq", "vscale", "vtok")):
+                oq = one[qn][:, 0] if stacked else one[qn][0]
+                osc = one[sn][:, 0] if stacked else one[sn][0]
+                otk = one[tn][:, 0] if stacked else one[tn][0]
+                out[name] = out[name].at[ix].set(oq)
+                out[sn] = out[sn].at[ix].set(osc)
+                out[tn] = out[tn].at[ix].set(otk)
+        else:
+            bs = self.block_size
+            for name, sn, tn in (("k", "kscale", "ktok"),
+                                 ("v", "vscale", "vtok")):
+                o = one[name][:, 0] if stacked else one[name][0]
+                q, ts = attn_mod.quant_tokens(o)       # [(R,) L, K, h] / [..K]
+                blocks = dense_kv_to_blocks(q, self.max_blocks, bs)
+                tsb = dense_kv_to_blocks(ts[..., None], self.max_blocks,
+                                         bs)[..., 0]   # [(R,) nb, K, bs]
+                out[name] = out[name].at[ix].set(blocks)
+                out[sn] = out[sn].at[ix].set(0.0)      # all rewritten: unseal
+                out[tn] = out[tn].at[ix].set(tsb)
+        out["kmin"], out["kmax"], out["kmean"] = \
+            attn_mod.update_block_summaries(
+                entry["kmin"], entry["kmax"], entry["kmean"], out["k"],
+                wtbl, stacked=stacked, k_scale=out["kscale"],
+                k_tok=out["ktok"])
+        return out
+
     def _extract_attn_paged(self, win, entry, slot, tbl, stacked):
-        """Gather one slot's dense per-layer KV back out of the arenas."""
+        """Gather one slot's dense per-layer KV back out of the arenas.
+
+        Quantized arenas return the DEQUANTIZED f32 dense view under the
+        usual "k"/"v" names (the interchange format every generic consumer
+        reads) plus the raw sidecar leaves ("kq"/"kscale"/"ktok", v
+        likewise, in block-major layout) that `_insert_attn_quant` scatters
+        back verbatim on re-admission — the int8 payload and its scale
+        plane survive a preempt/resume round trip bit-exactly."""
         sink, recent = win
         bs = self.block_size
+        quant = "kscale" in entry
         out = {}
         for name in ("k", "v"):
             a = entry[name]
@@ -313,6 +368,15 @@ class DecodeEngine:
                 x = blocks_to_dense_kv(blocks, W)
             else:
                 blocks = a[:, tbl] if stacked else a[tbl]
+                if quant:
+                    sn, tn = ("kscale", "ktok") if name == "k" else \
+                        ("vscale", "vtok")
+                    sc = entry[sn][:, tbl] if stacked else entry[sn][tbl]
+                    tk = entry[tn][:, tbl] if stacked else entry[tn][tbl]
+                    for raw, lv in ((blocks, name[0] + "q"), (sc, sn),
+                                    (tk, tn)):
+                        out[lv] = raw[:, None] if stacked else raw[None]
+                    blocks = attn_mod.dequant_pages(blocks, sc, tk)
                 x = blocks_to_dense_kv(blocks, self.max_len)
             out[name] = x[:, None] if stacked else x[None]
         return out

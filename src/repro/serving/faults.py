@@ -43,6 +43,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.serving.arena import BlockHandoff, KVArena
@@ -55,8 +56,19 @@ def corrupt_block(arena: KVArena, b: int, offset: float = 1.0):
     """Add `offset` to block `b`'s KEYS in every full-attention layer arena
     without touching the summary plane — the canonical detectable
     corruption: `kmin/kmax` no longer equal a fresh reduction of the block's
-    content, so `KVArena.find_corrupt_blocks()` condemns it."""
+    content, so `KVArena.find_corrupt_blocks()` condemns it. Quantized
+    (int8) arenas perturb the PAYLOAD ints by a clipped integer delta
+    (≥ 1 step, so the change survives the grid and is never rounded away);
+    the summaries bound the dequantized content, so the same
+    `summary != reduce(dequant(content))` scan detects it."""
     def blk(x, stacked):
+        if x.dtype == jnp.int8:
+            delta = jnp.int16(max(1, round(abs(offset))))
+            bumped = jnp.clip(x[:, b].astype(jnp.int16) + delta
+                              if stacked else
+                              x[b].astype(jnp.int16) + delta,
+                              -127, 127).astype(jnp.int8)
+            return x.at[:, b].set(bumped) if stacked else x.at[b].set(bumped)
         return x.at[:, b].add(offset) if stacked else x.at[b].add(offset)
     kv = arena.kv
     per = tuple(e if e is None or "kmin" not in e else

@@ -168,9 +168,13 @@ class DevicePlacement:
         return self.ctx.tree_shardings(spec_tree)
 
     # ---- per-leaf placement specs ------------------------------------
-    def arena_specs(self, cfg, plan) -> dict:
+    def arena_specs(self, cfg, plan, quant: bool = False) -> dict:
         """PartitionSpec tree matching alloc_arena_kv: KV + summary planes,
-        KV heads sharded over `model` under the 'kv' decode strategy."""
+        KV heads sharded over `model` under the 'kv' decode strategy.
+        Quantized arenas (QuantPlane) add the scale plane — per-block
+        per-channel seal scales kscale/vscale [*, N, K, h] and per-token
+        scalar scales ktok/vtok [*, N, K, bs] — which shard exactly like
+        the summaries (KV-head dim over `model`, blocks replicated)."""
         kv_part = attn_mod.arena_kv_part(cfg.n_kv_heads, self.tp)
 
         def one(spec, stacked):
@@ -179,12 +183,16 @@ class DevicePlacement:
             lead = (None,) if stacked else ()
             kv = P(*lead, None, kv_part, None, None)
             sm = P(*lead, None, kv_part, None)
-            return {"k": kv, "v": kv, "kmin": sm, "kmax": sm, "kmean": sm}
+            sps = {"k": kv, "v": kv, "kmin": sm, "kmax": sm, "kmean": sm}
+            if quant:
+                sps.update(kscale=sm, vscale=sm, ktok=sm, vtok=sm)
+            return sps
 
         return {"period": tuple(one(s, True) for s in plan.period),
                 "rem": tuple(one(s, False) for s in plan.rem)}
 
-    def paged_cache_specs(self, cfg, plan, n_slots, max_len, block_size):
+    def paged_cache_specs(self, cfg, plan, n_slots, max_len, block_size,
+                          quant: bool = False):
         """(private_specs, merged_specs) for the paged decode cache: the
         engine-private side (ring arenas + non-attention state) and the
         composed (private ∪ arena) tree the hot jits thread."""
@@ -192,7 +200,8 @@ class DevicePlacement:
                                               max_len, 1, block_size)
         private = stack_mod._drop_entries(cfg, plan, sps, drop_full=True)
         merged = stack_mod.merge_arena_cache(cfg, plan, private,
-                                             self.arena_specs(cfg, plan))
+                                             self.arena_specs(cfg, plan,
+                                                              quant=quant))
         return private, merged
 
     def dense_cache_specs(self, cfg, plan, B, max_len):

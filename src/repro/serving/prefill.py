@@ -123,7 +123,8 @@ class PrefillEngine:
                 cfg, plan, pl.dense_cache_specs(cfg, plan, 1, self.max_len),
                 drop_full=True)
             merged = merge_arena_cache(cfg, plan, private,
-                                       pl.arena_specs(cfg, plan))
+                                       pl.arena_specs(cfg, plan,
+                                                      quant=self.arena.quant))
             self._resume_paged = pl.donate_jit(
                 self._resume_paged_impl, donate_argnums=(2,),
                 out_specs=(merged, P()))

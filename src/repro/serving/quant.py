@@ -1,0 +1,129 @@
+"""QuantPlane controller: int8 paged-KV arenas with per-block scales.
+
+The residency half of the paper's KV program: full-attention KV blocks
+store int8 payloads in the shared arenas, roughly HALVING the bytes a
+resident token pins — which the KVPool's dtype-true ``block_nbytes``
+accounting turns directly into ~2x admissible concurrency at a fixed HBM
+budget. The numerics live next to the summary plane:
+
+  * **sealed** blocks (every slot written) carry f32 per-block,
+    per-channel scales ``kscale/vscale [N, K, h]`` — a nonzero scale row
+    IS the sealed marker;
+  * the **unsealed tail** carries f32 per-token scalar scales
+    ``ktok/vtok [N, K, bs]`` from the provisional per-token quantization
+    every write path applies (``models/attention.py::quant_tokens``);
+  * dequantization happens inside the kernel tiles (``paged_decode``,
+    ``paged_prefill`` history, ``spec_verify``) via the one elementwise
+    rule ``q * where(scale != 0, scale, tok)`` — no dequantized block is
+    ever materialized in HBM;
+  * the scale plane is maintained by the SAME donated jits that maintain
+    kmin/kmax, so zero-stale-scale rides the zero-stale-summary
+    invariant (``KVArena.check_summaries`` checks both).
+
+This module is the policy owner in the ``SparsityController`` /
+``SpecController`` mold: it validates the knobs against the model/server
+geometry, degrades to None (quant off, zero behavior change) when the
+stack has no full-attention paged layer to quantize, and owns the static
+residency figures the benches report (bytes per block quantized vs f32).
+Quant itself is structural at runtime — engines and jits branch on the
+presence of the ``kscale`` leaf, never on a config object — so a
+quant-OFF server's traced programs are byte-identical to a tree without
+this module.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.stack import StackPlan, full_attn_layer
+
+
+# ======================================================================
+@dataclass(frozen=True)
+class QuantConfig:
+    """Knobs for QuantPlane (int8 paged full-attention KV).
+
+    bits: payload width. Only 8 is implemented (the arena leaf is int8
+    and the kernels' dequant rule assumes the 127-step grid); any other
+    value is a validation error, not a silent fallback.
+    """
+    bits: int = 8
+
+
+@dataclass(frozen=True)
+class QuantPlan:
+    """Resolved quantized-arena geometry for one serving stack."""
+    bits: int
+    n_quant_layers: int         # full-attention layers whose arenas quantize
+    payload_bytes_f32: int      # per (block, layer): k+v payload at f32
+    payload_bytes_int8: int     # per (block, layer): k+v payload at int8
+    scale_bytes: int            # per (block, layer): the whole scale plane
+
+
+class QuantController:
+    """Per-server owner of the int8-arena policy + residency figures."""
+
+    def __init__(self, plan: QuantPlan):
+        self.plan = plan
+
+    # ---- construction -------------------------------------------------
+    @staticmethod
+    def from_model(cfg: ModelConfig, plan: StackPlan,
+                   qcfg: Optional[QuantConfig], block_size: int, *,
+                   paged_kv: bool = True) -> Optional["QuantController"]:
+        """→ a controller when `qcfg` asks for quantized arenas and the
+        stack has at least one paged full-attention layer, else None
+        (quant off — including the graceful degrade when every layer is
+        ring/mamba and there is simply no arena to quantize). Raises on
+        configurations that cannot mean what they say: a non-int8 width,
+        or quant requested on a dense (non-paged) KV server — the scale
+        plane is defined on arena blocks, there is nothing to attach it
+        to in the slot-dense layout."""
+        if qcfg is None:
+            return None
+        if qcfg.bits != 8:
+            raise ValueError(f"QuantConfig.bits {qcfg.bits} unsupported "
+                             "(int8 arenas only)")
+        if not paged_kv:
+            raise ValueError("QuantPlane requires paged KV arenas "
+                             "(paged_kv=True); per-block scales are "
+                             "meaningless in the dense slot layout")
+        n_quant = sum(1 for s in plan.all_specs() if full_attn_layer(cfg, s))
+        if n_quant == 0:
+            return None                 # nothing to quantize: degrade to off
+        K, h, bs = cfg.n_kv_heads, cfg.head_dim, block_size
+        it = jnp.dtype(cfg.compute_dtype).itemsize
+        return QuantController(QuantPlan(
+            bits=8, n_quant_layers=n_quant,
+            payload_bytes_f32=2 * K * bs * h * it,
+            payload_bytes_int8=2 * K * bs * h,
+            # kscale/vscale [K, h] + ktok/vtok [K, bs], all f32
+            scale_bytes=2 * (K * h + K * bs) * 4))
+
+    # ---- stats contract ----------------------------------------------
+    @staticmethod
+    def stats_keys() -> dict:
+        """Engine-stats schema this controller maintains. Static residency
+        figures (not per-step counters): bytes one arena block pins across
+        the quantized layers, quantized vs the f32 baseline — the numbers
+        `bench_serving`'s resident_bytes/admissible_slots columns are
+        built from."""
+        return {"quant_layers": 0, "quant_block_bytes": 0,
+                "quant_block_bytes_f32": 0}
+
+    def note(self, stats: dict) -> None:
+        p = self.plan
+        stats["quant_layers"] = p.n_quant_layers
+        stats["quant_block_bytes"] = \
+            (p.payload_bytes_int8 + p.scale_bytes) * p.n_quant_layers
+        stats["quant_block_bytes_f32"] = p.payload_bytes_f32 * p.n_quant_layers
+
+    def compression(self) -> float:
+        """Bytes-true residency win per full-attention block: f32 payload
+        over (int8 payload + the whole scale plane). > 1.9 for every
+        realistic (bs, h); → 2 as bs·h grows."""
+        p = self.plan
+        return p.payload_bytes_f32 / (p.payload_bytes_int8 + p.scale_bytes)

@@ -47,6 +47,7 @@ from repro.serving.arena import BlockHandoff, KVArena
 from repro.serving.decode import DecodeEngine
 from repro.serving.placement import DevicePlacement
 from repro.serving.prefill import PrefillEngine
+from repro.serving.quant import QuantConfig, QuantController
 from repro.serving.spec import SpecConfig
 
 
@@ -77,6 +78,8 @@ class ServerConfig:
                                       # waits for a future arrival
     spec: Optional[SpecConfig] = None  # model-free speculative decoding
                                        # (SpecPlane; None → off, no change)
+    quant: Optional[QuantConfig] = None  # int8 paged KV arenas (QuantPlane;
+                                         # None → off, f32 arenas unchanged)
     # ---- FaultPlane recovery knobs (None → off, no behavior change) ----
     watchdog_steps: Optional[int] = None    # retire a request whose progress
                                             # marker is unchanged for N steps
@@ -119,6 +122,12 @@ class Server:
         # prefill headroom per prefill instance; prefix-store snapshots
         # share the pool and are reclaimed (LRU) under pressure.
         self.kv_arena = None
+        # QuantPlane: validate the knobs against this stack (raises on
+        # quant-over-dense-KV; degrades to None when no full-attention
+        # layer exists to quantize) BEFORE any arena is allocated
+        self.quant_ctl = QuantController.from_model(
+            cfg, self.lm.plan, scfg.quant, scfg.kv_block_size,
+            paged_kv=scfg.paged_kv)
         if scfg.paged_kv:
             max_blocks = -(-scfg.max_len // scfg.kv_block_size)
             n_blocks = scfg.kv_blocks if scfg.kv_blocks is not None else \
@@ -126,7 +135,8 @@ class Server:
                 * max_blocks
             self.kv_arena = KVArena.build(self.lm, n_blocks,
                                           scfg.kv_block_size,
-                                          placement=self.placement)
+                                          placement=self.placement,
+                                          quant=self.quant_ctl is not None)
         self.prefills = [
             PrefillEngine(self.lm, self.params, self.tables, scfg.max_len,
                           chunk_tokens=scfg.chunk_tokens,
@@ -149,6 +159,12 @@ class Server:
                                      spec_radix=self.proxy.trees[0]
                                      if self.proxy.trees else None)
                         for _ in range(scfg.n_decode)]
+        if self.quant_ctl is not None:
+            # static residency figures next to the per-step counters — the
+            # benches read these from decode_stats like every other plane
+            for eng in self.decodes:
+                eng.stats.update(QuantController.stats_keys())
+                self.quant_ctl.note(eng.stats)
         # rid → (cache B=1, next_token, pos, cached_tokens, prompt, params)
         # awaiting admission (prompt drives prefix-block sharing in the
         # paged pool; params land in the slot's device-side sampling state)

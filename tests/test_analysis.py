@@ -410,6 +410,53 @@ def test_audit_catches_f64_convert(tiny):
 
 
 @pytest.mark.jaxpr_audit
+def test_audit_quant_server_no_upcast(tiny):
+    """Quantized server: every called hot loop that touches int8 arena
+    leaves passes the quant-upcast check — no full-arena f32 twin is ever
+    materialized (dequant stays in-tile / on gathered views)."""
+    from repro.serving import Server, ServerConfig
+    from repro.serving.quant import QuantConfig
+    cfg, reqs = tiny
+    srv = Server(cfg, ServerConfig(decode_slots=4, max_len=96,
+                                   quant=QuantConfig()), pattern=[0, 0])
+    srv.run(reqs)
+    rep = srv.audit_hot_loops()
+    assert rep.ok(), rep.format()
+    assert rep.checks.get("quant-upcast", 0) >= 1, \
+        "no hot loop carried int8 arena leaves — check never armed"
+
+
+@pytest.mark.jaxpr_audit
+def test_audit_catches_full_arena_dequant(tiny):
+    """Negative control: a hot loop that dequantizes the ENTIRE int8
+    arena into an f32 twin must be flagged by quant-upcast, while a
+    gathered-view dequant (tabled blocks only) must pass."""
+    import jax.numpy as jnp
+    from repro.analysis.jaxpr_audit import audit_placement
+    from repro.serving import DevicePlacement
+    pl = DevicePlacement.local()
+
+    def upcast(pages, scale):        # [N,K,bs,h] int8 → full f32 twin
+        return (pages.astype(jnp.float32)
+                * scale[:, :, None, :]).sum()
+
+    def gathered(pages, scale, tables):   # dequant only tabled blocks
+        g = pages[tables].astype(jnp.float32)
+        return (g * scale[tables][:, :, :, None, :]).sum()
+
+    N, K, bs, h = 16, 2, 8, 4
+    pages = jnp.zeros((N, K, bs, h), jnp.int8)
+    scale = jnp.ones((N, K, h), jnp.float32)
+    tables = jnp.zeros((2, 3), jnp.int32)
+    pl.donate_jit(upcast)(pages, scale)
+    pl.donate_jit(gathered)(pages, scale, tables)
+    rep = audit_placement(pl)
+    flagged = {f.entry.split(".")[-1] for f in rep.findings
+               if f.check == "quant-upcast"}
+    assert flagged == {"upcast"}, rep.format()
+
+
+@pytest.mark.jaxpr_audit
 @pytest.mark.skipif(jax.device_count() < 8,
                     reason="needs XLA_FLAGS="
                            "--xla_force_host_platform_device_count=8")

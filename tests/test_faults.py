@@ -367,10 +367,10 @@ def test_disaggregated_failure_drill(small):
 SOAK_SEEDS = (1, 2, 5, 7, 9)
 
 
-def _soak_server(cfg, faults=None, spec=None):
+def _soak_server(cfg, faults=None, spec=None, quant=None):
     scfg = ServerConfig(n_prefill=2, n_decode=2, decode_slots=4, max_len=128,
                         chunk_tokens=32, prefill_tick_budget=64, kv_blocks=96,
-                        watchdog_steps=200, spec=spec,
+                        watchdog_steps=200, spec=spec, quant=quant,
                         oas=OASConfig(defer_window=0.0, max_retries=10))
     return Server(cfg, scfg, pattern=[0, 0], faults=faults)
 
@@ -453,3 +453,98 @@ def test_chaos_soak_spec_bit_identical(small):
             eng.take_spec_stats()
             assert eng.stats["host_fetches"] == eng.stats["steps"]
         _assert_no_leaks(srv)
+
+
+def test_chaos_soak_quant_bit_identical(small):
+    """QuantPlane × FaultPlane composition: with int8 arenas on, a chaos
+    seed mixing instance kills, KV corruption (now perturbing int8
+    payloads by a clipped integer delta), KV loss, handoff drops,
+    allocation failures and stragglers must still complete every request
+    with greedy output bit-identical to the fault-free QUANT run —
+    detection rides the summary-vs-dequantized-content scan, scrub zeroes
+    payloads AND the scale plane, and recovery replays re-quantize to the
+    exact same ints (per-token/seal quantization is a pure function of
+    the written content). Quiescent pools pass the extended
+    zero-stale-summary + zero-stale-scale scan."""
+    from repro.serving.quant import QuantConfig
+    cfg = small
+    reqs = _soak_workload(cfg.vocab_size)
+
+    base = _soak_server(cfg, quant=QuantConfig())
+    _, _, _ = _drive(base, reqs)
+    ref = {r.rid: tuple(r.output_tokens) for r in base.metrics.done}
+    assert len(ref) == 8
+    assert base.kv_arena.quant          # arenas actually carry the plane
+    _assert_no_leaks(base)
+
+    for seed in (2, 7):
+        plane = FaultPlane(FaultConfig(seed=seed, horizon=20))
+        srv = _soak_server(cfg, faults=plane, quant=QuantConfig())
+        _, deltas, finishes = _drive(srv, reqs)
+        outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+        assert len(outs) == 8, f"seed {seed}: incomplete ({finishes})"
+        assert outs == ref, f"seed {seed}: quant+faults diverged"
+        for rid, toks in outs.items():
+            assert tuple(deltas[rid]) == toks, \
+                f"seed {seed}: rid {rid} streamed deltas replayed or lost"
+        assert sum(plane.injected.values()) > 0
+        _assert_no_leaks(srv)
+
+
+def test_corruption_quant_scrub_zeroes_scales(small):
+    """Direct int8 corruption drill: perturbing a quantized block's payload
+    ints must be caught by the summary scan (the summaries bound the
+    DEQUANTIZED content), and the quarantine scrub must zero the payload,
+    the summaries, AND every scale-plane row for that block — a stale
+    nonzero kscale row would mark a scrubbed block as sealed."""
+    import numpy as np
+    from repro.serving.quant import QuantConfig
+    cfg = small
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        quant=QuantConfig(),
+                        oas=OASConfig(defer_window=0.0, max_retries=4))
+    rng = np.random.default_rng(27)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 14)), 6) for _ in range(2)]
+
+    base = Server(cfg, scfg, pattern=[0, 0])
+    _drive(base, reqs)
+    ref = {r.rid: tuple(r.output_tokens) for r in base.metrics.done}
+
+    srv = Server(cfg, scfg, pattern=[0, 0])
+    t0 = time.monotonic()
+    for i, (p, m) in enumerate(reqs):
+        srv.submit(i, p, m, t0)
+    corrupted = None
+    for _ in range(300):
+        if corrupted is None:
+            pool = srv.kv_arena.pool
+            for eng in srv.decodes:
+                for rid in list(eng.rid_slot):
+                    owned = pool.owned(rid)
+                    if owned:
+                        corrupted = owned[0]
+                        break
+            if corrupted is not None:
+                corrupt_block(srv.kv_arena, corrupted, offset=0.75)
+                bad = srv.recover_corruption()
+                assert bad == [corrupted]
+                assert corrupted in pool.quarantined
+                srv.kv_arena.check_summaries()
+                for part, stacked in (("period", True), ("rem", False)):
+                    for e in srv.kv_arena.kv[part]:
+                        if e is None or "kscale" not in e:
+                            continue
+                        for leaf in ("k", "v", "kscale", "vscale",
+                                     "ktok", "vtok", "kmin", "kmax", "kmean"):
+                            x = np.asarray(e[leaf])
+                            blk = x[:, corrupted] if stacked else x[corrupted]
+                            assert not blk.any(), \
+                                f"scrub left {leaf} nonzero on block " \
+                                f"{corrupted}"
+        srv.step()
+        if not srv.proxy.inflight:
+            break
+    assert corrupted is not None, "no decode-resident block to corrupt"
+    outs = {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+    assert outs == ref, "post-corruption quant replay diverged"
+    _assert_no_leaks(srv)

@@ -369,3 +369,147 @@ def test_ops_layout_adapters_match_model_reference():
     want = dense_ref(q, k, v, True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want, np.float32),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------- quant
+def _quantize_pages(rng, pages, n_sealed):
+    """f32 pages [N, K, bs, h] → (q int8, scale [N, K, h], tok [N, K, bs])
+    in the QuantPlane arena format: the first `n_sealed` real blocks carry
+    per-block per-channel seal scales (nonzero scale row ⟺ sealed), the
+    rest the per-token provisional tail format (scale row zero)."""
+    from repro.models import attention as attn
+    N, K, bs, h = pages.shape
+    sealed = jnp.arange(N) < n_sealed
+    sc_full = jnp.abs(pages).max(axis=2) / 127.0            # [N, K, h]
+    scale = jnp.where(sealed[:, None, None], sc_full, 0.0)
+    qs = jnp.clip(jnp.round(pages / jnp.where(sc_full > 0, sc_full, 1.0)
+                            [:, :, None, :]), -127, 127).astype(jnp.int8)
+    qt, tok = attn.quant_tokens(pages.transpose(0, 2, 1, 3))  # [N,bs,K,...]
+    qt = qt.transpose(0, 2, 1, 3)
+    tok = jnp.where(sealed[:, None, None], 0.0, tok.transpose(0, 2, 1))
+    q = jnp.where(sealed[:, None, None, None], qs, qt)
+    return q, scale, tok
+
+
+@pytest.mark.parametrize("bs,nb", [(8, 6), (16, 4)])
+@pytest.mark.parametrize("G", [1, 4])
+def test_paged_decode_quant_sweep(bs, nb, G):
+    """Quantized-arena decode: the kernel's in-tile dequant (sealed
+    per-channel rows + unsealed per-token scalars, mixed in one table)
+    vs the linear-gather oracle's independent dequant."""
+    rng = jax.random.PRNGKey(bs * nb + G + 101)
+    r = jax.random.split(rng, 6)
+    B, K, h, N = 3, 2, 32, 24
+    q = jax.random.normal(r[0], (B, K, G, h))
+    kp = jax.random.normal(r[1], (N, K, bs, h))
+    vp = jax.random.normal(r[2], (N, K, bs, h))
+    kq, ks, kt = _quantize_pages(r[3], kp, N // 2)
+    vq, vs, vt = _quantize_pages(r[4], vp, N // 2)
+    tables = jax.random.randint(r[5], (B, nb), 1, N)
+    lens = jnp.array([1, max(nb * bs // 2 - 3, 1), nb * bs])
+    out = paged_decode(q, kq, vq, tables, lens, k_scale=ks, k_tok=kt,
+                       v_scale=vs, v_tok=vt, interpret=True)
+    want = ref.paged_decode_ref(q, kq, vq, tables, lens, k_scale=ks,
+                                k_tok=kt, v_scale=vs, v_tok=vt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # and the oracle itself vs the f32 kernel on materialized dequant
+    # content — two independent dequant implementations agreeing
+    kf = ref.dequant_pages_ref(kq, ks, kt)
+    vf = ref.dequant_pages_ref(vq, vs, vt)
+    f32 = paged_decode(q, kf, vf, tables, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(f32),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bs,S", [(8, 8), (16, 8)])
+@pytest.mark.parametrize("G", [1, 4])
+def test_paged_prefill_quant_sweep(bs, S, G):
+    """Quantized-arena chunked prefill: int8 HISTORY dequantized in-tile,
+    f32 in-chunk keys untouched, vs the oracle — empty and mid-block
+    history offsets."""
+    rng = jax.random.PRNGKey(bs + S * G + 202)
+    r = jax.random.split(rng, 8)
+    B, K, h, N, nb = 2, 2, 32, 24, 5
+    q = jax.random.normal(r[0], (B, K, S * G, h))
+    kn = jax.random.normal(r[1], (B, K, S, h))
+    vn = jax.random.normal(r[2], (B, K, S, h))
+    kq, ks, kt = _quantize_pages(r[3], jax.random.normal(r[4], (N, K, bs, h)),
+                                 N // 3)
+    vq, vs, vt = _quantize_pages(r[5], jax.random.normal(r[6], (N, K, bs, h)),
+                                 N // 3)
+    tables = jax.random.randint(r[7], (B, nb), 1, N)
+    off = jnp.array([0, nb * bs // 2 - 3], jnp.int32)
+    cl = jnp.array([S, max(S - 3, 1)], jnp.int32)
+    out = paged_prefill(q, kn, vn, kq, vq, tables, off, cl, k_scale=ks,
+                        k_tok=kt, v_scale=vs, v_tok=vt, interpret=True)
+    want = ref.paged_prefill_ref(q, kn, vn, kq, vq, tables, off, cl,
+                                 k_scale=ks, k_tok=kt, v_scale=vs, v_tok=vt)
+    got, exp = np.asarray(out), np.asarray(want)
+    for b in range(B):
+        real = int(cl[b]) * G
+        np.testing.assert_allclose(got[b, :, :real], exp[b, :, :real],
+                                   rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bs,S", [(8, 4), (16, 5)])
+@pytest.mark.parametrize("G", [1, 4])
+def test_spec_verify_quant_sweep(bs, S, G):
+    """Quantized-arena speculative verify: int8 history dequantized
+    in-tile under per-slot offsets (empty / mid-block / fully resident),
+    f32 in-window keys causal as before."""
+    rng = jax.random.PRNGKey(bs * S + G + 303)
+    r = jax.random.split(rng, 8)
+    B, K, h, N, nb = 3, 2, 32, 20, 4
+    q = jax.random.normal(r[0], (B, K, S * G, h))
+    kn = jax.random.normal(r[1], (B, K, S, h))
+    vn = jax.random.normal(r[2], (B, K, S, h))
+    kq, ks, kt = _quantize_pages(r[3], jax.random.normal(r[4], (N, K, bs, h)),
+                                 N // 2)
+    vq, vs, vt = _quantize_pages(r[5], jax.random.normal(r[6], (N, K, bs, h)),
+                                 N // 2)
+    tables = jax.random.randint(r[7], (B, nb), 1, N)
+    off = jnp.array([0, bs + bs // 2 - 1, nb * bs], jnp.int32)
+    cl = jnp.array([S, max(S - 2, 1), 1], jnp.int32)
+    out = spec_verify(q, kn, vn, kq, vq, tables, off, cl, k_scale=ks,
+                      k_tok=kt, v_scale=vs, v_tok=vt, interpret=True)
+    want = ref.spec_verify_ref(q, kn, vn, kq, vq, tables, off, cl,
+                               k_scale=ks, k_tok=kt, v_scale=vs, v_tok=vt)
+    got, exp = np.asarray(out), np.asarray(want)
+    for b in range(B):
+        real = int(cl[b]) * G
+        np.testing.assert_allclose(got[b, :, :real], exp[b, :, :real],
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_block_topk_quant_summaries():
+    """block_topk over a quantized arena: the summary plane is maintained
+    over the DEQUANTIZED content (update_block_summaries takes the scale
+    plane), so the untouched score kernel prices exactly what attention
+    reads — scores over quant summaries must match the f32 kernel run on
+    summaries of the materialized dequant content."""
+    from repro.models import attention as attn
+    rng = jax.random.PRNGKey(404)
+    r = jax.random.split(rng, 4)
+    B, K, G, h, bs, N, nb = 2, 2, 2, 32, 8, 16, 5
+    kp = jax.random.normal(r[0], (N, K, bs, h))
+    kq, ks, kt = _quantize_pages(r[1], kp, N // 2)
+    q = jax.random.normal(r[2], (B, K, G, h))
+    tables = jax.random.randint(r[3], (B, nb), 1, N)
+    lens = jnp.array([nb * bs, 2 * bs], jnp.int32)
+    zeros = jnp.zeros((N, K, h))
+    kmin, kmax, _ = attn.update_block_summaries(
+        zeros, zeros, zeros, kq, jnp.arange(N), k_scale=ks, k_tok=kt)
+    kf = ref.dequant_pages_ref(kq, ks, kt)
+    kmin_f, kmax_f, _ = attn.update_block_summaries(
+        zeros, zeros, zeros, kf, jnp.arange(N))
+    np.testing.assert_allclose(np.asarray(kmin), np.asarray(kmin_f),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kmax), np.asarray(kmax_f),
+                               rtol=1e-6, atol=1e-6)
+    out = block_topk_scores(q, kmin, kmax, tables, lens, block_size=bs,
+                            interpret=True)
+    want = ref.block_topk_scores_ref(q, kmin_f, kmax_f, tables, lens,
+                                     block_size=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,294 @@
+"""QuantPlane: int8 paged KV arenas with per-block scales (PR 10).
+
+Covers the quantized-arena contract at every layer:
+
+  · controller validation — bits≠8 and dense-KV requests raise; a stack
+    with no full-attention layer degrades to None (quant off); the
+    residency compression figure clears the ≥1.9x bar;
+  · format purity — per-token provisional quantization and seal-on-full
+    are pure functions of the written content, so any write grouping
+    lands the same bytes (the bit-identity mechanism);
+  · unseal-on-open — a freed sealed block reallocated WITHOUT scrubbing
+    must have its stale per-channel scale cleared before the new owner's
+    tokens land;
+  · zero-stale-scales — `KVArena.check_summaries` passes at quiescent
+    points across e2e serving, CoW prefix sharing, preemption round-trips
+    and store adoption/resume;
+  · behavior — quant-ON greedy outputs equal quant-OFF outputs on the
+    test model, quant-OFF arenas carry no scale leaves (byte-identical
+    trees), and dtype-true block accounting roughly halves bytes/block.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.core.proxy import OASConfig
+from repro.distributed.ctx import local_mesh_ctx
+from repro.models import LM
+from repro.models import attention as attn
+from repro.serving import (DecodeEngine, PrefillEngine, Server, ServerConfig,
+                           SpecConfig)
+from repro.serving.arena import KVArena
+from repro.serving.quant import QuantConfig, QuantController
+
+
+@pytest.fixture(scope="module")
+def small():
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2)
+    lm = LM.build(cfg, mesh, pattern=[0, 0])
+    params = lm.init(jax.random.PRNGKey(0))
+    return cfg, lm, params
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_compiled_executables():
+    yield
+    jax.clear_caches()
+
+
+def _server(cfg, quant, **kw):
+    scfg = ServerConfig(n_prefill=1, n_decode=1, decode_slots=4, max_len=96,
+                        chunk_tokens=16, prefill_tick_budget=64,
+                        oas=OASConfig(defer_window=0.0),
+                        quant=QuantConfig() if quant else None, **kw)
+    return Server(cfg, scfg, pattern=[0, 0])
+
+
+def _outputs(srv):
+    return {r.rid: tuple(r.output_tokens) for r in srv.metrics.done}
+
+
+# ------------------------------------------------------------ controller
+def test_controller_validation(small):
+    cfg, lm, _ = small
+    mk = lambda q, **kw: QuantController.from_model(
+        cfg, lm.plan, q, 16, **kw)
+    assert mk(None) is None
+    with pytest.raises(ValueError, match="int8"):
+        mk(QuantConfig(bits=4))
+    with pytest.raises(ValueError, match="paged"):
+        mk(QuantConfig(), paged_kv=False)
+    ctl = mk(QuantConfig())
+    assert ctl is not None
+    assert ctl.plan.n_quant_layers == 2
+    assert ctl.compression() > 1.9
+    stats = QuantController.stats_keys()
+    ctl.note(stats)
+    assert stats["quant_block_bytes"] * 1.9 < stats["quant_block_bytes_f32"]
+
+
+def test_controller_degrades_without_full_attention():
+    """An all-ring stack has no paged full-attention arena to quantize:
+    the controller must degrade to None (quant off), not raise."""
+    mesh = local_mesh_ctx()
+    cfg = reduced_config("qwen2-1.5b").with_updates(
+        compute_dtype="float32", param_dtype="float32", n_layers=2)
+    lm = LM.build(cfg, mesh, pattern=[1, 1])    # every layer ring-buffered
+    assert QuantController.from_model(cfg, lm.plan, QuantConfig(), 16) is None
+
+
+# ----------------------------------------------------------- format unit
+def test_quant_tokens_grouping_independent():
+    """Per-token quantization is a pure per-token function: quantizing a
+    sequence whole or split at any boundary lands identical ints/scales —
+    the mechanism that makes chunked prefill, decode appends and
+    store-resume offsets bit-compatible."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (10, 2, 32))
+    q, ts = attn.quant_tokens(x)
+    for cut in (1, 4, 7):
+        qa, ta = attn.quant_tokens(x[:cut])
+        qb, tb = attn.quant_tokens(x[cut:])
+        np.testing.assert_array_equal(np.asarray(q),
+                                      np.concatenate([qa, qb]))
+        np.testing.assert_array_equal(np.asarray(ts),
+                                      np.concatenate([ta, tb]))
+    # zero tokens: ts = 0, q = 0 (dequant multiplies by the stored zero)
+    qz, tz = attn.quant_tokens(jnp.zeros((2, 1, 8)))
+    assert not np.asarray(qz).any() and not np.asarray(tz).any()
+
+
+def test_seal_blocks_pure_and_null_exempt():
+    """Sealing re-quantizes the STORED (int8, tok) payload — a pure
+    function of block content, independent of write grouping — and the
+    null block 0 must never seal."""
+    rng = jax.random.split(jax.random.PRNGKey(4), 2)
+    N, K, bs, h = 5, 2, 8, 16
+    x = jax.random.normal(rng[0], (N, bs, K, h))
+    q, ts = attn.quant_tokens(x)
+    pages = q.transpose(0, 2, 1, 3)
+    tok = ts.transpose(0, 2, 1)
+    scale = jnp.zeros((N, K, h))
+    blocks = jnp.array([0, 2, 3])
+    do = jnp.array([True, True, False])
+    p1, s1, t1 = attn.seal_blocks(pages, scale, tok, blocks, do)
+    # null block exempt: content/scales untouched
+    np.testing.assert_array_equal(np.asarray(p1[0]), np.asarray(pages[0]))
+    assert not np.asarray(s1[0]).any()
+    # unsealed block untouched
+    np.testing.assert_array_equal(np.asarray(p1[3]), np.asarray(pages[3]))
+    assert not np.asarray(s1[3]).any()
+    # sealed block: nonzero per-channel row, zeroed tok row, and the
+    # re-quantized content stays within one per-channel grid step of the
+    # per-token content it replaced
+    assert np.asarray(s1[2]).all() and not np.asarray(t1[2]).any()
+    pre = attn.dequant_pages(pages, scale, tok)
+    post = attn.dequant_pages(p1, s1, t1)
+    step = np.asarray(s1[2]).max()
+    np.testing.assert_allclose(np.asarray(post[2]), np.asarray(pre[2]),
+                               atol=step, rtol=0)
+    # determinism: sealing the same stored payload again from the same
+    # pre-seal state lands identical bytes (grouping independence)
+    p1b, s1b, t1b = attn.seal_blocks(pages, scale, tok, blocks, do)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p1b))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s1b))
+
+
+def test_unseal_on_open():
+    """A reallocated (unscrubbed) sealed block must have its stale
+    per-channel scale cleared when the new owner's offset-0 token lands —
+    otherwise the dequant rule reads the previous owner's seal scale over
+    per-token content."""
+    rng = jax.random.split(jax.random.PRNGKey(5), 3)
+    N, K, bs, h = 4, 2, 8, 16
+    x = jax.random.normal(rng[0], (N, bs, K, h))
+    q, ts = attn.quant_tokens(x)
+    entry = {"k": q.transpose(0, 2, 1, 3), "v": q.transpose(0, 2, 1, 3),
+             "ktok": ts.transpose(0, 2, 1), "vtok": ts.transpose(0, 2, 1),
+             "kscale": jnp.zeros((N, K, h)), "vscale": jnp.zeros((N, K, h))}
+    for n in ("kscale", "vscale"):
+        entry[n] = entry[n].at[2].set(0.5)      # block 2: stale prior seal
+    k_new = jax.random.normal(rng[1], (1, K, h))
+    out = attn.quant_paged_cache_write(entry, k_new, k_new,
+                                       jnp.array([2]), jnp.array([0]))
+    assert not np.asarray(out["kscale"][2]).any(), "stale seal survived"
+    got = attn.dequant_pages(out["k"], out["kscale"], out["ktok"])[2, :, 0]
+    qe, te = attn.quant_tokens(k_new[0])
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(qe.astype(jnp.float32)
+                                          * te[..., None]),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------------ e2e
+def test_server_quant_outputs_match_f32(small):
+    """Greedy serving with int8 arenas: outputs equal the f32 run on the
+    test model, the extended summary+scale scan passes quiescent, and the
+    dtype-true block accounting roughly halves bytes per block."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(11)
+    reqs = [(tuple(rng.integers(0, cfg.vocab_size, 12)), 5) for _ in range(4)]
+    s0 = _server(cfg, quant=False)
+    s0.run(reqs, max_wall_s=300)
+    s1 = _server(cfg, quant=True)
+    sm = s1.run(reqs, max_wall_s=300)
+    assert sm["n_done"] == 4
+    assert _outputs(s0) == _outputs(s1)
+    assert s1.kv_arena.quant and not s0.kv_arena.quant
+    s1.kv_arena.check_summaries()
+    ratio = s1.kv_arena.block_nbytes / s0.kv_arena.block_nbytes
+    assert ratio < 0.55, f"quant block bytes ratio {ratio:.3f}"
+    ds = sm["decode_stats"][0]
+    assert ds["quant_layers"] == 2
+    assert ds["quant_block_bytes"] * 1.9 < ds["quant_block_bytes_f32"]
+
+
+def test_quant_off_tree_has_no_scale_leaves(small):
+    """Quant-OFF arenas must be byte-identical to the pre-QuantPlane tree:
+    no scale leaves, f32 payloads, structural `quant` property False."""
+    cfg, lm, _ = small
+    arena = KVArena.build(lm, 6)
+    assert not arena.quant
+    for part in ("period", "rem"):
+        for e in arena.kv[part]:
+            if e is None:
+                continue
+            assert "kscale" not in e and "ktok" not in e
+            if "kmin" in e:
+                assert e["k"].dtype == jnp.float32
+
+
+def test_quant_prefix_sharing_and_pressure_bit_identical(small):
+    """Shared-prefix workload under arena pressure with quant ON: CoW
+    block sharing, store adoption/resume and tail copies all round-trip
+    the scale plane — outputs bit-identical to quant-OFF, scan clean."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(12)
+    base = tuple(rng.integers(0, cfg.vocab_size, 24))
+    reqs = [(base + tuple(rng.integers(0, cfg.vocab_size, 28)), 10)
+            for _ in range(6)]
+    s1 = _server(cfg, quant=True, kv_blocks=22)
+    sm = s1.run(reqs, max_wall_s=300)
+    assert sm["n_done"] == 6
+    assert sm["prefill_stats"][0]["prefix_hits"] >= 1
+    s1.kv_arena.check_summaries()
+    s0 = _server(cfg, quant=False, kv_blocks=22)
+    s0.run(reqs, max_wall_s=300)
+    assert _outputs(s0) == _outputs(s1)
+
+
+def test_quant_preemption_roundtrip_bit_identical(small):
+    """Preempt → extract (dequantized dense + raw int8 sidecar) →
+    re-admit (verbatim sidecar scatter) must resume the exact greedy
+    stream; the scale plane survives the round-trip."""
+    cfg, lm, params = small
+    arena = KVArena.build(lm, 3, quant=True)
+    pe = PrefillEngine(lm, params, None, max_len=96)
+    de = DecodeEngine(lm, params, None, n_slots=2, max_len=96, arena=arena)
+    prompt = tuple(np.random.default_rng(6).integers(0, cfg.vocab_size, 14))
+    toks = jnp.asarray([list(prompt)], jnp.int32)
+    cache_r, logits, _ = lm.prefill(params, {"tokens": toks}, max_len=96)
+    ref, pos = [], len(prompt)
+    for i in range(8):
+        nxt = int(jnp.argmax(logits[0]))
+        ref.append(nxt)
+        if i == 7:
+            break
+        cache_r, logits, _ = lm.decode(params, cache_r,
+                                       jnp.asarray([[nxt]]), jnp.int32(pos))
+        pos += 1
+    cache, first, _ = pe.process(prompt)
+    assert de.admit(0, cache, first, len(prompt))
+    assert de.admit(1, cache, first, len(prompt))
+    outs = {0: [first], 1: [first]}
+    preempted = None
+    for _ in range(8):
+        for r, t in de.step().items():
+            outs[r].append(t)
+        if de.preempted:
+            preempted = de.preempted.pop(0)
+            break
+    assert preempted is not None and de.stats["preemptions"] == 1
+    rid, cache_one, tok, pos = preempted
+    leaves = sorted({k for part in ("period", "rem")
+                     for e in cache_one.get("attn", cache_one)[part]
+                     if isinstance(e, dict) for k in e})
+    assert {"kq", "kscale", "ktok", "vq", "vscale", "vtok"} <= set(leaves), \
+        f"extracted cache missing quant sidecar: {leaves}"
+    de.release(1 - rid)
+    assert de.admit(rid, cache_one, tok, pos)
+    while len(outs[rid]) < len(ref):
+        outs[rid].append(de.step()[rid])
+    assert outs[rid] == ref
+    arena.check_summaries()
+
+
+def test_quant_spec_compose_bit_identical(small):
+    """QuantPlane × SpecPlane: speculative decoding over int8 arenas
+    (spec_verify's in-tile dequant + block/summary/scale rollback) must
+    land the same greedy outputs as the plain f32 run."""
+    cfg, _, _ = small
+    rng = np.random.default_rng(13)
+    gram = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 6))
+    reqs = [(gram * 3, 10) for _ in range(2)] + \
+        [(tuple(rng.integers(0, cfg.vocab_size, 18)), 10) for _ in range(2)]
+    s0 = _server(cfg, quant=False)
+    s0.run(reqs, max_wall_s=300)
+    s1 = _server(cfg, quant=True, spec=SpecConfig(k=4))
+    sm = s1.run(reqs, max_wall_s=300)
+    assert sm["n_done"] == 4
+    assert _outputs(s0) == _outputs(s1)
+    s1.kv_arena.check_summaries()
